@@ -1,0 +1,50 @@
+"""Paper Fig. 6: output flicker — frame-to-frame luminance stability of
+the dehazed stream, independent per-frame A vs the update strategy."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.data import HazeVideoSpec, generate_haze_video
+
+
+def luminance(frames: np.ndarray) -> np.ndarray:
+    return (0.299 * frames[..., 0] + 0.587 * frames[..., 1]
+            + 0.114 * frames[..., 2]).mean(axis=(1, 2))
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    spec = HazeVideoSpec(height=96, width=128, n_frames=48, seed=2,
+                         a_noise=0.0)
+    vid = generate_haze_video(spec)
+    frames = jnp.asarray(vid.hazy)
+    ids = jnp.arange(spec.n_frames, dtype=jnp.int32)
+    out = []
+    for algo in ("dcp", "cap"):
+        def run(period, lam):
+            cfg = DehazeConfig(algorithm=algo, kernel_mode="ref",
+                               gf_radius=8, update_period=period, lam=lam)
+            o = jax.jit(make_dehaze_step(cfg))(frames, ids, init_atmo_state())
+            return np.asarray(o.frames)
+
+        t0 = time.perf_counter()
+        raw = run(1, 1.0)
+        ema = run(8, 0.05)
+        dt = time.perf_counter() - t0
+        fl_raw = float(np.abs(np.diff(luminance(raw))).std())
+        fl_ema = float(np.abs(np.diff(luminance(ema))).std())
+        fl_in = float(np.abs(np.diff(luminance(vid.hazy))).std())
+        out.append((f"fig6/{algo}", dt * 1e6 / (2 * spec.n_frames),
+                    f"flicker_in={fl_in:.5f};raw={fl_raw:.5f};"
+                    f"ema={fl_ema:.5f};reduction={fl_raw / max(fl_ema, 1e-12):.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: the dehazing hot spots, XLA(ref) path on CPU.
+
+The Pallas kernels target TPU; interpret mode is a correctness harness,
+not a performance path, so wall-clock here benches the XLA reference
+implementations the runtime actually uses on CPU, plus the roofline-model
+expectations for the TPU kernels (bytes-bound estimates at v5e HBM BW).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+HBM_BW = 819e9
+SHAPES = [(8, 240, 320), (4, 480, 640), (2, 576, 1024)]
+
+
+def _timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    out = []
+    for b, h, w in SHAPES:
+        r = np.random.default_rng(0)
+        img = jnp.asarray(r.random((b, h, w, 3), np.float32))
+        tmap = jnp.asarray(r.random((b, h, w), np.float32))
+        A = jnp.asarray(r.random((b, 3), np.float32))
+        tag = f"{b}x{h}x{w}"
+
+        dc = jax.jit(lambda x: ops.dark_channel(x, 7, "ref"))
+        t = _timeit(dc, img)
+        tpu_est = (img.nbytes + tmap.nbytes) / HBM_BW
+        out.append((f"kernels/dark_channel/{tag}", t * 1e6,
+                    f"tpu_roofline_us={tpu_est * 1e6:.1f}"))
+
+        gf = jax.jit(lambda g, p: ops.guided_filter(g, p, 20, 1e-3, "ref"))
+        t = _timeit(gf, tmap, tmap)
+        tpu_est = 12 * tmap.nbytes / HBM_BW    # 5 box passes r+w + extras
+        out.append((f"kernels/guided_filter/{tag}", t * 1e6,
+                    f"tpu_roofline_us={tpu_est * 1e6:.1f}"))
+
+        al = jax.jit(lambda i, tm: ops.atmospheric_light(i, tm, 1, "ref"))
+        t = _timeit(al, img, tmap)
+        out.append((f"kernels/atmolight/{tag}", t * 1e6, ""))
+
+        rc = jax.jit(lambda i, tm, a: ops.recover(i, tm, a, mode="ref"))
+        t = _timeit(rc, img, tmap, A)
+        tpu_est = (2 * img.nbytes + tmap.nbytes) / HBM_BW
+        out.append((f"kernels/recover/{tag}", t * 1e6,
+                    f"tpu_roofline_us={tpu_est * 1e6:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""Roofline report: reads the dry-run JSON records (results/dryrun/) and
+emits one row per (arch x shape x mesh) with the three roofline terms,
+dominant bottleneck, and the useful-FLOPs ratio. This is the bench view
+of deliverable (g); EXPERIMENTS.md carries the narrative."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    out = []
+    if not os.path.isdir(RESULTS_DIR):
+        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+    for name in sorted(os.listdir(RESULTS_DIR)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(RESULTS_DIR, name)) as f:
+            r = json.load(f)
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            out.append((tag, 0.0, r["status"]))
+            continue
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        useful = (r["model_flops"] / (r["hlo_flops_per_device"]
+                                      * r["n_devices"])
+                  if r["hlo_flops_per_device"] else float("nan"))
+        out.append((tag, dom * 1e6,
+                    f"bottleneck={r['bottleneck']};"
+                    f"compute_s={r['compute_s']:.4g};"
+                    f"memory_s={r['memory_s']:.4g};"
+                    f"collective_s={r['collective_s']:.4g};"
+                    f"useful={useful:.3f};"
+                    f"peakGB={(r['memory_analysis']['peak_bytes'] or 0) / 1e9:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

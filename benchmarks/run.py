@@ -1,0 +1,29 @@
+"""Benchmark harness: one module per paper table/figure + roofline view.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+Select subsets with ``python -m benchmarks.run table1 fig8``.
+"""
+import sys
+
+from benchmarks import (fig6_flicker, fig8_atmolight, kernels_bench,
+                        roofline_report, table1_throughput)
+
+SUITES = {
+    "table1": table1_throughput.rows,
+    "fig6": fig6_flicker.rows,
+    "fig8": fig8_atmolight.rows,
+    "kernels": kernels_bench.rows,
+    "roofline": roofline_report.rows,
+}
+
+
+def main() -> None:
+    wanted = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    print("name,us_per_call,derived")
+    for key in wanted:
+        for name, us, derived in SUITES[key]():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Table 1: frames/s by algorithm x resolution x worker count.
+
+Reproduces the table's structure on this container (single CPU core — the
+absolute numbers are CPU numbers; the relative effects the table claims
+are what we validate: (a) the framework beats one-frame-at-a-time
+processing, (b) throughput scales with frame-batch parallelism, which on
+a pod maps to the data axis; the modeled pod-scale numbers come from the
+roofline table in EXPERIMENTS.md).
+
+Rows: baseline (frame-by-frame, the paper's "DCP [13]"/"CAP [23]" rows)
+vs framework with 1/2/3 workers (paper's 1N/2N/3N rows).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.data import HazeVideoSpec, generate_haze_video
+from repro.stream import ElasticServer
+
+RESOLUTIONS = {"320x240": (240, 320), "640x480": (480, 640),
+               "1024x576": (576, 1024)}
+
+
+def bench_baseline(algo: str, h: int, w: int, n_frames: int = 12) -> float:
+    """Frame-by-frame (batch=1) single-worker processing."""
+    vid = generate_haze_video(HazeVideoSpec(height=h, width=w,
+                                            n_frames=n_frames, a_noise=0.0))
+    cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
+    step = jax.jit(make_dehaze_step(cfg))
+    state = init_atmo_state()
+    # warmup/compile
+    out = step(jnp.asarray(vid.hazy[:1]), jnp.arange(1, dtype=jnp.int32), state)
+    jax.block_until_ready(out.frames)
+    t0 = time.perf_counter()
+    for i in range(n_frames):
+        out = step(jnp.asarray(vid.hazy[i:i + 1]),
+                   jnp.asarray([i], jnp.int32), state)
+        state = out.state
+        np.asarray(out.frames)
+    return n_frames / (time.perf_counter() - t0)
+
+
+def bench_framework(algo: str, h: int, w: int, workers: int,
+                    n_frames: int = 24, batch: int = 4) -> float:
+    vid = generate_haze_video(HazeVideoSpec(height=h, width=w,
+                                            n_frames=n_frames, a_noise=0.0))
+    cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
+    srv = ElasticServer(cfg, n_workers=workers, batch=batch, timeout_s=1.0)
+    srv.serve(iter(vid.hazy[:batch]))          # warmup/compile
+    rep = srv.serve(iter(vid.hazy))
+    return rep.fps
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    out = []
+    for algo in ("dcp", "cap"):
+        for res_name, (h, w) in RESOLUTIONS.items():
+            fps0 = bench_baseline(algo, h, w)
+            out.append((f"table1/{algo}-baseline/{res_name}",
+                        1e6 / fps0, f"{fps0:.2f}fps"))
+            for nw in (1, 2, 3):
+                fps = bench_framework(algo, h, w, nw)
+                out.append((f"table1/{nw}N-{algo}/{res_name}",
+                            1e6 / fps, f"{fps:.2f}fps"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,49 @@
+"""Dehazing as a pre-processing component for video analytics (the paper's
+motivating use case §1): hazy frames → dehazer → ViT backbone.
+
+The dehazer and the classifier are just two components in the same stream;
+this is why the framework treats the assigned vision backbones as
+first-class architectures (DESIGN.md §4).
+
+Run:  PYTHONPATH=src python examples/dehaze_then_classify.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgreg
+from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.data import HazeVideoSpec, generate_haze_video
+from repro.models import common as cm
+from repro.models import vit as V
+
+# Hazy input stream.
+video = generate_haze_video(HazeVideoSpec(height=64, width=64, n_frames=8,
+                                          a_noise=0.0))
+frames = jnp.asarray(video.hazy)
+
+# Component 1-3: the dehazer.
+dehaze = jax.jit(make_dehaze_step(DehazeConfig(algorithm="dcp",
+                                               gf_radius=8)))
+out = dehaze(frames, jnp.arange(8, dtype=jnp.int32), init_atmo_state())
+
+# Component 4: a ViT backbone (reduced config for CPU).
+cfg = cfgreg.get_module("vit-l16").smoke_config()
+params = cm.init_params(jax.random.key(0), V.vit_param_table(cfg))
+classify = jax.jit(V.make_forward(cfg))
+
+def resize(x, res):
+    return jax.image.resize(x, (x.shape[0], res, res, 3), "bilinear")
+
+logits_hazy = classify(params, resize(frames, cfg.img_res))
+logits_clean = classify(params, resize(out.frames, cfg.img_res))
+
+# The dehazed features should be closer to the ground-truth-clear features
+# than the hazy ones — dehazing reduces the domain gap for the backbone.
+logits_gt = classify(params, resize(jnp.asarray(video.clear), cfg.img_res))
+gap_hazy = float(jnp.abs(logits_hazy - logits_gt).mean())
+gap_dehazed = float(jnp.abs(logits_clean - logits_gt).mean())
+print(f"feature gap vs clear-scene logits: hazy={gap_hazy:.4f} "
+      f"dehazed={gap_dehazed:.4f}")
+assert gap_dehazed < gap_hazy
+print("dehazing shrinks the backbone's domain gap — OK")

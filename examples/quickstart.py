@@ -1,0 +1,38 @@
+"""Quickstart: dehaze a synthetic hazy clip with the component framework.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.data import HazeVideoSpec, generate_haze_video
+
+# 1. A synthetic foggy clip with ground truth (Eq. 1 physics).
+video = generate_haze_video(HazeVideoSpec(height=120, width=160,
+                                          n_frames=16, a_noise=0.0))
+print(f"clip: {video.hazy.shape}, true A ~ {video.A.mean(axis=0).round(3)}")
+
+# 2. Configure the paper's pipeline: DCP transmission estimator, guided
+#    refinement, cross-frame atmospheric-light normalization (§3.3).
+cfg = DehazeConfig(algorithm="dcp", update_period=4, lam=0.05)
+step = jax.jit(make_dehaze_step(cfg))
+
+# 3. One jitted step processes a batch of frames through all three
+#    components; the AtmoState carries the shared A between batches.
+state = init_atmo_state()
+frames = jnp.asarray(video.hazy[:8])
+out = step(frames, jnp.arange(8, dtype=jnp.int32), state)
+out2 = step(jnp.asarray(video.hazy[8:]),
+            jnp.arange(8, 16, dtype=jnp.int32), out.state)
+
+dehazed = np.concatenate([np.asarray(out.frames), np.asarray(out2.frames)])
+err_before = np.abs(video.hazy - video.clear).mean()
+err_after = np.abs(dehazed - video.clear).mean()
+print(f"L1 error vs ground truth: hazy={err_before:.4f} -> "
+      f"dehazed={err_after:.4f}")
+print(f"estimated A after 16 frames: {np.asarray(out2.state.A).round(3)} "
+      f"(true {video.A[-1].round(3)})")
+assert err_after < err_before
+print("OK")

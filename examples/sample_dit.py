@@ -1,0 +1,52 @@
+"""Diffusion serving: a DDIM sampling loop on a reduced DiT, batched
+requests through the stream monitor (out-of-order completion, ordered
+emission) — the paper's layer-5 pattern applied to a diffusion workload
+(DESIGN.md §4).
+
+Run:  PYTHONPATH=src python examples/sample_dit.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgreg
+from repro.models import common as cm
+from repro.models import dit as D
+from repro.stream import Monitor
+
+cfg = cfgreg.get_module("dit-l2").smoke_config()
+params = cm.init_params(jax.random.key(0), D.dit_param_table(cfg))
+sample_step = jax.jit(D.make_sample_step(cfg, guidance=2.0))
+
+B, STEPS = 4, 8
+lat = cfg.latent_res
+rng = jax.random.key(1)
+z = jax.random.normal(rng, (B, lat, lat, 4))
+y = jnp.arange(B) % cfg.n_classes
+
+ts = jnp.linspace(999, 1, STEPS + 1).astype(jnp.int32)
+t0 = time.perf_counter()
+for i in range(STEPS):
+    t = jnp.full((B,), ts[i])
+    t_next = jnp.full((B,), ts[i + 1])
+    z = sample_step(params, z, t, t_next, y)
+jax.block_until_ready(z)
+dt = time.perf_counter() - t0
+assert not bool(jnp.isnan(z).any())
+print(f"sampled {B} latents x {STEPS} DDIM steps in {dt:.2f}s "
+      f"({B * STEPS / dt:.1f} denoise-steps/s); latent std "
+      f"{float(z.std()):.3f}")
+
+# Requests complete out of order (different step counts); the monitor
+# (paper §3.2 layer 5) restores submission order at the sink.
+emitted = []
+mon = Monitor(lambda rid, _: emitted.append(rid), timeout_s=5.0)
+for rid in reversed(range(6)):          # worst case: reverse completion
+    mon.put(rid, None)
+    mon.poll()
+mon.close()
+mon.drain()
+assert emitted == list(range(6))
+print("ordered emission of out-of-order completions — OK")

@@ -1,0 +1,53 @@
+"""Render results/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+import json
+import os
+import sys
+
+RES = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x >= 1000 or x < 0.001:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def main(mesh_filter="pod16x16", include_variants=False):
+    rows = []
+    for name in sorted(os.listdir(RES)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(RES, name)) as f:
+            r = json.load(f)
+        is_variant = "__" in r.get("mesh", "").replace(
+            "pod2x16x16", "X").replace("pod16x16", "X")[1:]
+        if r.get("mesh", "").startswith(mesh_filter):
+            variant = r["mesh"][len(mesh_filter):].lstrip("_")
+            if bool(variant) != include_variants:
+                continue
+            rows.append((r, variant))
+    print("| arch | shape | status | compute_s | memory_s | coll_s | "
+          "bottleneck | useful | MODEL_FLOPS | 6ND | peak GB/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r, variant in rows:
+        arch = r["arch"] + (f" **[{variant}]**" if variant else "")
+        if r["status"] != "ok":
+            reason = (r.get("reason") or r.get("error", ""))[:60]
+            print(f"| {arch} | {r['shape']} | SKIP | | | | | | | | | {reason} |")
+            continue
+        useful = (r["model_flops"] / (r["hlo_flops_per_device"] * r["n_devices"])
+                  if r["hlo_flops_per_device"] else float("nan"))
+        six = fmt(r["six_nd"]) if r.get("six_nd") else "—"
+        peak = (r["memory_analysis"]["peak_bytes"] or 0) / 1e9
+        note = r.get("note", "")
+        print(f"| {arch} | {r['shape']} | ok | {fmt(r['compute_s'])} | "
+              f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+              f"{r['bottleneck']} | {useful:.2f} | {fmt(r['model_flops'])} | "
+              f"{six} | {peak:.1f} | {note[:40]} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or ["pod16x16"]),
+         include_variants="--variants" in sys.argv)

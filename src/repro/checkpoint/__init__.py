@@ -1,0 +1,6 @@
+"""Atomic, manifest-driven checkpointing with async writes."""
+from repro.checkpoint.manager import (AsyncCheckpointer, CheckpointManager,
+                                      load_pytree, save_pytree)
+
+__all__ = ["CheckpointManager", "AsyncCheckpointer", "save_pytree",
+           "load_pytree"]

@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing: atomic, manifest-driven, async-capable.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a temp dir
+and atomically renamed — a crash mid-write can never leave a readable but
+corrupt checkpoint. ``keep`` old checkpoints are retained for rollback.
+``AsyncCheckpointer`` moves serialization off the training critical path
+(device→host copy happens synchronously — it must, for consistency — the
+file I/O happens in a background thread).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: Any, extra: Optional[dict] = None) -> None:
+    """Atomically save a pytree of arrays + JSON-serializable extras."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+    manifest = {
+        "treedef": str(treedef),
+        "n_leaves": len(host_leaves),
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shape/dtype authority)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}"
+    restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for r, l in zip(restored, leaves):
+        assert r.shape == tuple(l.shape), (r.shape, l.shape)
+    return jax.tree_util.tree_unflatten(treedef, restored), manifest["extra"]
+
+
+class CheckpointManager:
+    """step-indexed checkpoints with retention + latest-resume."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        path = self._step_dir(step)
+        save_pytree(path, tree, extra)
+        self._gc()
+        return path
+
+    def restore(self, like: Any, step: Optional[int] = None
+                ) -> Tuple[Any, dict, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        tree, extra = load_pytree(self._step_dir(step), like)
+        return tree, extra, step
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with training (device sync is eager)."""
+
+    def __init__(self, manager: CheckpointManager):
+        self._mgr = manager
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+        self.wait()
+        # Materialize on host NOW (consistency point), write in background.
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            try:
+                self._mgr.save(step, host_tree, extra)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,17 @@
+"""dehaze-cap — the paper's own pipeline with the CAP T-estimator.
+
+Zhu et al. color attenuation prior [23] projected onto the component
+framework (paper §3.1), with the §3.3 update strategy.
+"""
+from repro.core import DehazeConfig
+
+FAMILY = "dehaze"
+ARCH_ID = "dehaze-cap"
+
+
+def config(**kw) -> DehazeConfig:
+    return DehazeConfig(algorithm="cap", **kw)
+
+
+def smoke_config(**kw) -> DehazeConfig:
+    return DehazeConfig(algorithm="cap", gf_radius=4, kernel_mode="ref", **kw)

@@ -1,0 +1,17 @@
+"""dehaze-dcp — the paper's own pipeline with the DCP T-estimator.
+
+He et al. dark channel prior [13] projected onto the component framework
+(paper §3.1), with the §3.3 atmospheric-light update strategy.
+"""
+from repro.core import DehazeConfig
+
+FAMILY = "dehaze"
+ARCH_ID = "dehaze-dcp"
+
+
+def config(**kw) -> DehazeConfig:
+    return DehazeConfig(algorithm="dcp", **kw)
+
+
+def smoke_config(**kw) -> DehazeConfig:
+    return DehazeConfig(algorithm="dcp", gf_radius=4, kernel_mode="ref", **kw)

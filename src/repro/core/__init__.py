@@ -1,0 +1,20 @@
+"""The paper's primary contribution: component-decomposed dehazing.
+
+- ``config``     — DehazeConfig
+- ``physics``    — atmospheric scattering model (Eq. 1/2/8)
+- ``algorithms`` — the three generic components + DCP/CAP instantiations
+- ``normalize``  — cross-frame atmospheric-light EMA normalization (§3.3)
+- ``spatial``    — halo exchange + masked filters for within-frame sharding
+- ``pipeline``   — jitted single-shard and shard_map dehaze steps
+"""
+from repro.core.config import DehazeConfig
+from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
+                                  init_atmo_state)
+from repro.core.pipeline import (DehazeOutput, make_dehaze_step,
+                                 make_sharded_dehaze_step)
+
+__all__ = [
+    "DehazeConfig", "AtmoState", "ema_scan", "ema_scan_associative",
+    "init_atmo_state", "DehazeOutput", "make_dehaze_step",
+    "make_sharded_dehaze_step",
+]

@@ -1,0 +1,109 @@
+"""The three generic dehazing components (paper §3.1) + DCP/CAP instances.
+
+Component protocol (all batched over leading frame axes, images NHWC):
+
+  TransmissionEstimator:  (frames, A_saved, cfg) -> t_raw      (paper Fig. 3 box 1)
+  AtmosphericLightEstimator: (frames, t_raw, cfg) -> A_new     (paper Fig. 3 box 2)
+  HazeFreeGenerator:      (frames, t, A, cfg) -> J             (paper Fig. 3 box 3)
+
+The estimators are black boxes to the framework (paper: "the detail of how
+to compute the transmission map is a black box") — new algorithms register
+via ``register_algorithm``. DCP Eq. 3 and CAP Eq. 4 ship as the two
+reference instantiations, exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core.config import DehazeConfig
+from repro.kernels import ops
+
+TransmissionEstimator = Callable[[jnp.ndarray, jnp.ndarray, DehazeConfig], jnp.ndarray]
+
+
+def luminance(img: jnp.ndarray) -> jnp.ndarray:
+    """Rec.601 luma, used as the guided-filter guide."""
+    w = jnp.asarray([0.299, 0.587, 0.114], img.dtype)
+    return img @ w
+
+
+# ---------------------------------------------------------------------------
+# Transmission map estimators (component 1)
+# ---------------------------------------------------------------------------
+
+def transmission_dcp(frames: jnp.ndarray, a_saved: jnp.ndarray,
+                     cfg: DehazeConfig) -> jnp.ndarray:
+    """DCP, paper Eq. 3: t = 1 - ω · min_Ω min_c I^c/A^c.
+
+    ``a_saved`` is the *shared* atmospheric light from the update strategy
+    (paper §3.3 — the T-estimator runs before the A refresh and therefore
+    uses the saved A_k; bootstrap is white light).
+    """
+    a = jnp.maximum(a_saved, 1e-3)                    # avoid blow-up
+    norm = frames / a[..., None, None, :]
+    dark = ops.dark_channel(norm, cfg.patch_radius, cfg.kernel_mode)
+    return (1.0 - cfg.omega * dark).astype(frames.dtype)
+
+
+def transmission_cap(frames: jnp.ndarray, a_saved: jnp.ndarray,
+                     cfg: DehazeConfig) -> jnp.ndarray:
+    """CAP, paper Eq. 4: t = exp(-β (ω0 + ω1 v + ω2 s)), min-filtered depth."""
+    del a_saved                                        # CAP's t is A-free
+    d = ops.cap_depth(frames, cfg.cap_w0, cfg.cap_w1, cfg.cap_w2)
+    d = ops.min_filter_2d(d, cfg.patch_radius, cfg.kernel_mode)
+    return jnp.exp(-cfg.beta * d).astype(frames.dtype)
+
+
+_ALGORITHMS: Dict[str, TransmissionEstimator] = {}
+
+
+def register_algorithm(name: str, estimator: TransmissionEstimator) -> None:
+    _ALGORITHMS[name] = estimator
+
+
+def get_transmission_estimator(name: str) -> TransmissionEstimator:
+    try:
+        return _ALGORITHMS[name]
+    except KeyError:
+        raise KeyError(f"unknown dehazing algorithm {name!r}; "
+                       f"registered: {sorted(_ALGORITHMS)}") from None
+
+
+register_algorithm("dcp", transmission_dcp)
+register_algorithm("cap", transmission_cap)
+
+
+# ---------------------------------------------------------------------------
+# Atmospheric light estimator (component 2) — common to all algorithms
+# ---------------------------------------------------------------------------
+
+def estimate_atmospheric_light(frames: jnp.ndarray, t_raw: jnp.ndarray,
+                               cfg: DehazeConfig) -> jnp.ndarray:
+    """Paper Eq. 5/6: A = I at the pixel(s) of minimum raw transmission."""
+    return ops.atmospheric_light(frames, t_raw, cfg.topk, cfg.kernel_mode)
+
+
+# ---------------------------------------------------------------------------
+# Transmission refinement (guided filter, He et al. [28])
+# ---------------------------------------------------------------------------
+
+def refine_transmission(frames: jnp.ndarray, t_raw: jnp.ndarray,
+                        cfg: DehazeConfig) -> jnp.ndarray:
+    if not cfg.refine:
+        return t_raw
+    guide = luminance(frames)
+    t = ops.guided_filter(guide, t_raw, cfg.gf_radius, cfg.gf_eps,
+                          cfg.kernel_mode)
+    return jnp.clip(t, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Haze-free image generator (component 3)
+# ---------------------------------------------------------------------------
+
+def generate_haze_free(frames: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
+                       cfg: DehazeConfig) -> jnp.ndarray:
+    """Paper Eq. 8 with the serving tone-curve epilogue."""
+    return ops.recover(frames, t, A, cfg.t0, cfg.gamma, cfg.kernel_mode)

@@ -1,0 +1,54 @@
+"""Configuration for the dehazing pipeline (paper §3)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DehazeConfig:
+    """Static configuration for one dehazing stream.
+
+    Frozen + hashable so it can be closed over by jitted step functions.
+    """
+    # Which T-estimator instantiation (paper gives DCP and CAP).
+    algorithm: str = "dcp"                 # "dcp" | "cap"
+
+    # Shared component parameters.
+    patch_radius: int = 7                  # Ω(x) window radius (15x15 patch)
+    t0: float = 0.1                        # Eq. 8 transmission lower bound
+    topk: int = 1                          # A-estimator candidates; 1 == Eq. 6
+    refine: bool = True                    # guided-filter refinement of t
+    gf_radius: int = 20
+    gf_eps: float = 1e-3
+    gamma: float = 1.0                     # serving epilogue tone curve
+
+    # DCP (He et al. [13]).
+    omega: float = 0.95                    # haze retention factor
+
+    # CAP (Zhu et al. [23]) — published linear model coefficients.
+    beta: float = 1.0
+    cap_w0: float = 0.121779
+    cap_w1: float = 0.959710
+    cap_w2: float = -0.780245
+
+    # Cross-frame atmospheric light update strategy (paper §3.3).
+    update_period: int = 8                 # l: frames between A refreshes
+    lam: float = 0.05                      # λ in A_m = λ A_new + (1-λ) A_k
+
+    # Dataflow options.
+    recompute_t_with_final_a: bool = False # extra accuracy pass (beyond paper)
+    kernel_mode: str = "auto"              # ref | pallas | interpret | auto
+    dtype: str = "float32"
+
+    # Perf levers for the sharded pipeline (EXPERIMENTS.md §Perf):
+    halo_packed: bool = False   # exchange (cmin/depth, luma) 2-ch stack
+    #                             instead of 3-ch RGB halos (1/3 less wire)
+    halo_dtype: str = "float32" # bfloat16 halves halo wire bytes
+
+    def validate(self) -> "DehazeConfig":
+        assert self.algorithm in ("dcp", "cap"), self.algorithm
+        assert 0.0 <= self.lam <= 1.0
+        assert self.update_period >= 1
+        assert self.patch_radius >= 0 and self.gf_radius >= 0
+        assert 0.0 < self.t0 < 1.0
+        return self

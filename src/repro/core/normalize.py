@@ -1,0 +1,127 @@
+"""Cross-frame atmospheric-light normalization (paper §3.3).
+
+The paper's update strategy: a selected estimator broadcasts its estimate;
+peers reuse the saved value while the frame distance to the last update is
+below the period ``l``; at distance >= l the state refreshes through the
+EMA ``A_m = λ·A_new + (1−λ)·A_k`` (Eq. 9) and the new value is shared.
+
+Storm realizes this with asynchronous thread messaging; the result then
+depends on scheduling order. Our SPMD realization is a *deterministic
+causal scan* over the frame axis implementing the identical recurrence:
+
+  - ``ema_scan``             — lax.scan, handles arbitrary (sorted) frame ids,
+                               including gaps left by dropped frames;
+  - ``ema_scan_associative`` — log-depth ``lax.associative_scan`` fast path
+                               for consecutive frame ids (the common case),
+                               bit-identical to ``ema_scan`` there.
+
+State is a tiny pytree so it checkpoints/replicates for free; in the
+sharded pipeline the per-frame candidates are all-gathered along the frame
+axis (a few dozen bytes) before the scan — that collective *is* the
+paper's broadcast, minus the race.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AtmoState:
+    """Shared atmospheric-light state for one video stream."""
+    A: jnp.ndarray            # (3,) float32 — current shared estimate A_k
+    last_update: jnp.ndarray  # ()  int32   — frame id k of the last refresh
+    initialized: jnp.ndarray  # ()  bool    — False until the first frame
+
+
+def init_atmo_state() -> AtmoState:
+    """Bootstrap: white atmospheric light until the first estimate lands."""
+    return AtmoState(
+        A=jnp.ones((3,), jnp.float32),
+        last_update=jnp.asarray(-(2 ** 30), jnp.int32),
+        initialized=jnp.asarray(False),
+    )
+
+
+def ema_scan(a_cand: jnp.ndarray, frame_ids: jnp.ndarray, state: AtmoState,
+             period: int, lam: float) -> Tuple[jnp.ndarray, AtmoState]:
+    """Sequential reference scan (general frame ids, sorted ascending).
+
+    Args:
+      a_cand: (B, 3) per-frame A_new candidates (paper's per-estimator output).
+      frame_ids: (B,) int32 global frame ids.
+    Returns: ((B, 3) per-frame normalized A, updated state).
+    """
+    a_cand = a_cand.astype(jnp.float32)
+
+    def step(carry, x):
+        A_prev, k, inited = carry
+        cand, fid = x
+        bootstrap = jnp.logical_not(inited)
+        do_update = jnp.logical_or(bootstrap, (fid - k) >= period)
+        target = jnp.where(bootstrap, cand, lam * cand + (1.0 - lam) * A_prev)
+        A_next = jnp.where(do_update, target, A_prev)
+        k_next = jnp.where(do_update, fid, k)
+        return (A_next, k_next, jnp.asarray(True)), A_next
+
+    (A_fin, k_fin, _), a_seq = jax.lax.scan(
+        step, (state.A, state.last_update, state.initialized),
+        (a_cand, frame_ids))
+    new_state = AtmoState(A=A_fin, last_update=k_fin,
+                          initialized=jnp.asarray(True))
+    return a_seq, new_state
+
+
+def _update_mask(frame_ids: jnp.ndarray, state: AtmoState,
+                 period: int) -> jnp.ndarray:
+    """Closed-form update positions for *consecutive* frame ids.
+
+    With consecutive ids the data-dependent trigger ``fid - k >= period``
+    collapses to a fixed comb: first update at u0 = max(fid0, k0 + period)
+    (or fid0 when uninitialized), then every ``period`` frames.
+    """
+    fid0 = frame_ids[0]
+    u0 = jnp.where(state.initialized,
+                   jnp.maximum(fid0, state.last_update + period), fid0)
+    d = frame_ids - u0
+    return jnp.logical_and(d >= 0, d % period == 0)
+
+
+def ema_scan_associative(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,
+                         state: AtmoState, period: int,
+                         lam: float) -> Tuple[jnp.ndarray, AtmoState]:
+    """Log-depth path for consecutive frame ids.
+
+    The recurrence is linear: A_i = c_i * A_{i-1} + d_i with
+    c_i = 1 - λ·m_i (or 0 on bootstrap), d_i = λ·m_i·cand_i. Composition
+    (c2, d2) ∘ (c1, d1) = (c2·c1, c2·d1 + d2) is associative.
+    """
+    a_cand = a_cand.astype(jnp.float32)
+    mask = _update_mask(frame_ids, state, period)
+    bootstrap = jnp.logical_and(jnp.logical_not(state.initialized),
+                                jnp.arange(frame_ids.shape[0]) == 0)
+    m = mask.astype(jnp.float32)[:, None]
+    c = jnp.where(bootstrap[:, None], 0.0, 1.0 - lam * m)
+    d = jnp.where(bootstrap[:, None], a_cand, lam * m * a_cand)
+
+    def combine(p, q):
+        (c1, d1), (c2, d2) = p, q
+        return c2 * c1, c2 * d1 + d2
+
+    cc, dd = jax.lax.associative_scan(combine, (c, d))
+    a_seq = cc * state.A[None, :] + dd
+
+    upd = jnp.logical_or(mask, bootstrap)
+    any_upd = jnp.any(upd)
+    idx_last = jnp.where(any_upd, jnp.argmax(
+        jnp.where(upd, frame_ids, jnp.int32(-2 ** 30))), 0)
+    new_state = AtmoState(
+        A=a_seq[-1],
+        last_update=jnp.where(any_upd, frame_ids[idx_last], state.last_update),
+        initialized=jnp.logical_or(state.initialized, jnp.asarray(True)),
+    )
+    return a_seq, new_state

@@ -1,0 +1,40 @@
+"""Atmospheric scattering model (paper Eq. 1-2, 8).
+
+All images are float arrays in [0, 1], layout ``(..., H, W, 3)`` (NHWC for
+batches of frames). Transmission maps are ``(..., H, W)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Lower bound on transmission used by the haze-free generator (paper Eq. 8).
+DEFAULT_T0 = 0.1
+
+
+def synthesize_haze(clear: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    """Forward model, paper Eq. 1:  I(x) = J(x) t(x) + A (1 - t(x)).
+
+    Args:
+      clear: haze-free radiance ``J``, shape (..., H, W, 3).
+      t: transmission map, shape (..., H, W).
+      A: atmospheric light, shape (..., 3) or (3,).
+    """
+    t = t[..., None]
+    A = jnp.broadcast_to(A[..., None, None, :], clear.shape)
+    return clear * t + A * (1.0 - t)
+
+
+def transmission_from_depth(depth: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Paper Eq. 2:  t(x) = exp(-beta d(x))."""
+    return jnp.exp(-beta * depth)
+
+
+def recover(hazy: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
+            t0: float = DEFAULT_T0) -> jnp.ndarray:
+    """Haze-free image generator, paper Eq. 8.
+
+    J(x) = (I(x) - A) / max(t(x), t0) + A, clipped to [0, 1].
+    """
+    t = jnp.maximum(t, t0)[..., None]
+    A = jnp.broadcast_to(A[..., None, None, :], hazy.shape)
+    return jnp.clip((hazy - A) / t + A, 0.0, 1.0)

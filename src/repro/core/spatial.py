@@ -1,0 +1,141 @@
+"""Spatial (within-frame) parallelism primitives: halo exchange + masked filters.
+
+The paper parallelizes only *across* frames (its unit of work is one frame
+on one thread). On a TPU mesh we additionally shard the image height over
+the ``model`` axis so a single high-resolution frame is processed by many
+chips — the windowed min/box filters then need ``halo`` rows of context
+from neighboring shards, fetched with ``lax.ppermute``.
+
+Halo composition rule for the full DCP/CAP chain:
+  halo = patch_radius (+ 2 * gf_radius when guided refinement is on),
+because the guided filter consumes t_raw within 2r_gf of the core and
+t_raw itself consumes the image within patch_radius of that.
+
+Shards at the mesh edge receive no neighbor rows; a validity mask restores
+the exact global border semantics (clipped windows): min filters treat
+invalid rows as +inf, box filters exclude them from both sum and count, so
+the sharded pipeline is bit-comparable to the single-device one (verified
+in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Masked separable filters (reduce_window based — XLA path used under
+# shard_map; the unmasked Pallas kernels remain the single-shard fast path).
+# ---------------------------------------------------------------------------
+
+def masked_min_filter_2d(x: jnp.ndarray, valid: jnp.ndarray,
+                         radius: int) -> jnp.ndarray:
+    """Windowed min ignoring rows where ``valid`` is False.
+
+    x: (..., H, W); valid: (H,) row validity.
+    """
+    big = jnp.asarray(jnp.inf, jnp.float32)
+    xm = jnp.where(valid[:, None], x.astype(jnp.float32), big)
+    from repro.kernels import ref
+    return ref.min_filter_2d(xm, radius).astype(x.dtype)
+
+
+def masked_box_filter_2d(x: jnp.ndarray, valid: jnp.ndarray,
+                         radius: int) -> jnp.ndarray:
+    """Windowed mean over valid rows only (count excludes invalid)."""
+    from repro.kernels import ref
+    v = valid.astype(jnp.float32)[:, None]
+    # `where`, not multiply: invalid rows may hold ±inf from an upstream
+    # masked min filter and inf * 0 would poison the sums with NaN.
+    xm = jnp.where(valid[:, None], x.astype(jnp.float32), 0.0)
+    k = 2 * radius + 1
+    ndim = x.ndim
+    dims_r = (1,) * (ndim - 2) + (k, 1)
+    pads_r = ((0, 0),) * (ndim - 2) + ((radius, radius), (0, 0))
+    dims_c = (1,) * (ndim - 2) + (1, k)
+    pads_c = ((0, 0),) * (ndim - 2) + ((0, 0), (radius, radius))
+
+    def wsum(a):
+        s = lax.reduce_window(a, 0.0, lax.add, dims_r, (1,) * ndim, pads_r)
+        return lax.reduce_window(s, 0.0, lax.add, dims_c, (1,) * ndim, pads_c)
+
+    acc = wsum(xm)
+    cnt = wsum(jnp.broadcast_to(v, x.shape).astype(jnp.float32))
+    return (acc / jnp.maximum(cnt, 1.0)).astype(x.dtype)
+
+
+def masked_guided_filter(guide: jnp.ndarray, src: jnp.ndarray,
+                         valid: jnp.ndarray, radius: int,
+                         eps: float) -> jnp.ndarray:
+    """Guided filter with all five means computed over valid rows only."""
+    g = guide.astype(jnp.float32)
+    p = src.astype(jnp.float32)
+    bf = lambda a: masked_box_filter_2d(a, valid, radius)
+    mean_g = bf(g)
+    mean_p = bf(p)
+    corr_gp = bf(g * p)
+    corr_gg = bf(g * g)
+    var_g = corr_gg - mean_g * mean_g
+    cov_gp = corr_gp - mean_g * mean_p
+    a = cov_gp / (var_g + eps)
+    b = mean_p - a * mean_g
+    return (bf(a) * g + bf(b)).astype(src.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange along a mesh axis sharding image height
+# ---------------------------------------------------------------------------
+
+def halo_exchange_height(x: jnp.ndarray, halo: int, axis_name: str,
+                         n_shards: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Extend local blocks with ``halo`` rows of context from each side.
+
+    x: (B, H_loc, W, C) local block, H globally sharded over ``axis_name``
+    (shard 0 holds the top rows). Returns ``(x_ext, valid)`` where x_ext is
+    (B, H_loc + 2*halo, W, C) and valid is (H_loc + 2*halo,) marking rows
+    that exist in the global image.
+
+    Rows that live ``s`` shards away arrive via a single distance-s
+    ``ppermute`` (any fixed permutation is one collective on TPU), so a
+    halo spanning multiple shards costs ceil(halo/H_loc) permutes per side,
+    each moving only the rows actually needed.
+    """
+    b, h_loc, w = x.shape[:3]
+    trailing = x.shape[3:]
+    if halo == 0:
+        return x, jnp.ones((h_loc,), bool)
+    hops = math.ceil(halo / h_loc)
+    idx = lax.axis_index(axis_name)
+
+    top_parts = []   # ordered top -> bottom, total `halo` rows
+    bot_parts = []
+    for s in range(hops, 0, -1):
+        # Rows contributed by the shard `s` above: its bottom c_s rows.
+        c_s = min(h_loc, halo - (s - 1) * h_loc)
+        if c_s <= 0:
+            continue
+        down_perm = [(j, j + s) for j in range(n_shards - s)]
+        up_perm = [(j + s, j) for j in range(n_shards - s)]
+        from_above = lax.ppermute(x[:, h_loc - c_s:], axis_name, down_perm)
+        from_below = lax.ppermute(x[:, :c_s], axis_name, up_perm)
+        top_parts.append((from_above, s, c_s))
+        bot_parts.append((from_below, s, c_s))
+
+    x_ext = jnp.concatenate([p for p, _, _ in top_parts] + [x] +
+                            [p for p, _, _ in reversed(bot_parts)], axis=1)
+
+    # Validity: a top part from distance s exists iff idx >= s; bottom iff
+    # idx < n_shards - s.
+    rows = []
+    for _, s, c_s in top_parts:
+        rows.append(jnp.broadcast_to(idx >= s, (c_s,)))
+    rows.append(jnp.ones((h_loc,), bool))
+    for _, s, c_s in reversed(bot_parts):
+        rows.append(jnp.broadcast_to(idx < n_shards - s, (c_s,)))
+    valid = jnp.concatenate(rows)
+    del b, w, trailing
+    return x_ext, valid

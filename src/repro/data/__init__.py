@@ -1,0 +1,8 @@
+"""Data substrates: synthetic hazy video (paper physics) + arch pipelines."""
+from repro.data.haze_video import HazeVideo, HazeVideoSpec, generate_haze_video
+from repro.data.synthetic import (DiffusionStream, ImageStream, TokenStream,
+                                  prefetch_to_device)
+
+__all__ = ["HazeVideo", "HazeVideoSpec", "generate_haze_video",
+           "TokenStream", "ImageStream", "DiffusionStream",
+           "prefetch_to_device"]

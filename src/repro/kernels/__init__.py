@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the dehazing hot spots + jnp oracles.
+
+Modules:
+  dark_channel  — fused channel-min + separable windowed-min (DCP Eq. 3)
+  boxfilter     — running-sum separable box filter (guided-filter core)
+  recover       — fused haze-free recovery epilogue (Eq. 8)
+  atmolight     — argmin-t atmospheric light reduction (Eq. 6)
+  ops           — jitted dispatch wrappers (ref | pallas | interpret)
+  ref           — pure-jnp oracles for all of the above
+"""
+from repro.kernels import ops, ref  # noqa: F401

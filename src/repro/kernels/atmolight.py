@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: atmospheric-light argmin-t reduction (paper Eq. 6).
+
+A = I(x*) where x* = argmin_x t(x). Implemented as a fused single-pass
+reduction: each grid step reduces one frame's row-tile in VMEM to a
+(min_t, R, G, B) quadruple and folds it into the running output — the
+sequential TPU grid makes the cross-tile fold race-free. The robust top-k
+variant (k > 1) stays in XLA (``kernels.ref.atmospheric_light``): top-k is
+sort-shaped and tiny (three scalars per frame), so a kernel buys nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _atmolight_kernel(img_ref, t_ref, out_ref):
+    h_idx = pl.program_id(1)
+    img = img_ref[0].astype(jnp.float32)           # (TH, W, 3)
+    t = t_ref[0].astype(jnp.float32)               # (TH, W)
+
+    flat_t = t.reshape(-1)
+    flat_i = img.reshape(-1, 3)
+    j = jnp.argmin(flat_t)
+    tile_min = flat_t[j]
+    tile_rgb = flat_i[j]
+
+    @pl.when(h_idx == 0)
+    def _init():
+        out_ref[0, 0] = tile_min
+        out_ref[0, 1:4] = tile_rgb
+
+    @pl.when(h_idx != 0)
+    def _fold():
+        best = out_ref[0, 0]
+        take = tile_min < best
+        out_ref[0, 0] = jnp.where(take, tile_min, best)
+        out_ref[0, 1:4] = jnp.where(take, tile_rgb, out_ref[0, 1:4])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "interpret"))
+def atmolight_pallas(img: jnp.ndarray, t_raw: jnp.ndarray,
+                     tile_h: int = 0, interpret: bool = False) -> jnp.ndarray:
+    """(B,H,W,3), (B,H,W) -> (B,3): I at the per-frame argmin of t_raw."""
+    b, h, w, c = img.shape
+    assert c == 3 and t_raw.shape == (b, h, w)
+    if tile_h <= 0 or h % tile_h != 0:
+        tile_h = h
+    n_tiles = h // tile_h
+    out = pl.pallas_call(
+        _atmolight_kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_h, w, 3), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, tile_h, w), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 4), jnp.float32),
+        interpret=interpret,
+    )(img, t_raw)
+    return out[:, 1:4].astype(img.dtype)

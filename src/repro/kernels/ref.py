@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations: numerically exact, shape-
+polymorphic, differentiable where meaningful. The Pallas kernels in the
+sibling modules must ``allclose`` against these across the shape/dtype
+sweeps in ``tests/test_kernels.py``.
+
+Conventions: images are ``(..., H, W, C)`` float in [0, 1]; scalar maps are
+``(..., H, W)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Windowed min filter (dark channel prior, paper Eq. 3)
+# ---------------------------------------------------------------------------
+
+def min_filter_2d(x: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """Windowed minimum over a (2r+1)x(2r+1) box, clipped at borders.
+
+    Border semantics match DCP's patch definition: the window is the
+    intersection of the box with the image (equivalent to +inf padding).
+    ``x``: (..., H, W).
+    """
+    if radius == 0:
+        return x
+    k = 2 * radius + 1
+    ndim = x.ndim
+    dims = (1,) * (ndim - 2) + (k, 1)
+    pads = ((0, 0),) * (ndim - 2) + ((radius, radius), (0, 0))
+    # Separable: rows then cols.
+    rows = lax.reduce_window(x, jnp.inf, lax.min, dims, (1,) * ndim, pads)
+    dims_c = (1,) * (ndim - 2) + (1, k)
+    pads_c = ((0, 0),) * (ndim - 2) + ((0, 0), (radius, radius))
+    out = lax.reduce_window(rows, jnp.inf, lax.min, dims_c, (1,) * ndim, pads_c)
+    return out.astype(x.dtype)
+
+
+def dark_channel(img: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """min over channels then windowed min (He et al. DCP). (...,H,W,3)->(...,H,W)."""
+    return min_filter_2d(jnp.min(img, axis=-1), radius)
+
+
+# ---------------------------------------------------------------------------
+# Box filter / guided filter (He et al. [28], transmission refinement)
+# ---------------------------------------------------------------------------
+
+def box_filter_2d(x: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """Windowed mean over a (2r+1)^2 box normalized by the per-pixel count
+    of in-bounds window elements (matches the reference guided-filter code).
+    """
+    if radius == 0:
+        return x
+    k = 2 * radius + 1
+    ndim = x.ndim
+    dims_r = (1,) * (ndim - 2) + (k, 1)
+    pads_r = ((0, 0),) * (ndim - 2) + ((radius, radius), (0, 0))
+    dims_c = (1,) * (ndim - 2) + (1, k)
+    pads_c = ((0, 0),) * (ndim - 2) + ((0, 0), (radius, radius))
+
+    def windowed_sum(v):
+        s = lax.reduce_window(v, 0.0, lax.add, dims_r, (1,) * ndim, pads_r)
+        return lax.reduce_window(s, 0.0, lax.add, dims_c, (1,) * ndim, pads_c)
+
+    acc = windowed_sum(x.astype(jnp.float32))
+    # Closed-form per-pixel in-bounds window counts (avoids a second
+    # reduce_window over a constant ones-image, which XLA would try to
+    # constant-fold at compile time).
+    h, w = x.shape[-2], x.shape[-1]
+
+    def axis_counts(n):
+        i = jnp.arange(n, dtype=jnp.float32)
+        return (jnp.minimum(i + radius, n - 1.0)
+                - jnp.maximum(i - radius, 0.0) + 1.0)
+
+    cnt = axis_counts(h)[:, None] * axis_counts(w)[None, :]
+    return (acc / cnt).astype(x.dtype)
+
+
+def guided_filter(guide: jnp.ndarray, src: jnp.ndarray, radius: int,
+                  eps: float) -> jnp.ndarray:
+    """Gray-guide guided filter. guide/src: (..., H, W)."""
+    g = guide.astype(jnp.float32)
+    p = src.astype(jnp.float32)
+    mean_g = box_filter_2d(g, radius)
+    mean_p = box_filter_2d(p, radius)
+    corr_gp = box_filter_2d(g * p, radius)
+    corr_gg = box_filter_2d(g * g, radius)
+    var_g = corr_gg - mean_g * mean_g
+    cov_gp = corr_gp - mean_g * mean_p
+    a = cov_gp / (var_g + eps)
+    b = mean_p - a * mean_g
+    mean_a = box_filter_2d(a, radius)
+    mean_b = box_filter_2d(b, radius)
+    return (mean_a * g + mean_b).astype(src.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Atmospheric light estimation (paper Eq. 5/6, robust top-k form)
+# ---------------------------------------------------------------------------
+
+def atmospheric_light(img: jnp.ndarray, t_raw: jnp.ndarray, k: int = 1) -> jnp.ndarray:
+    """A = mean of I over the k pixels with smallest raw transmission.
+
+    k=1 reproduces paper Eq. 6 exactly (the argmin-t pixel). Larger k is
+    the standard robustification (top 0.1 %). ``img``: (..., H, W, 3),
+    ``t_raw``: (..., H, W) -> (..., 3).
+    """
+    flat_t = t_raw.reshape(*t_raw.shape[:-2], -1)
+    flat_i = img.reshape(*img.shape[:-3], -1, 3)
+    _, idx = lax.top_k(-flat_t, k)                      # smallest t
+    picked = jnp.take_along_axis(flat_i, idx[..., None], axis=-2)
+    return picked.mean(axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Fused haze-free recovery (paper Eq. 8)
+# ---------------------------------------------------------------------------
+
+def recover(hazy: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
+            t0: float = 0.1) -> jnp.ndarray:
+    """J = clip((I - A)/max(t, t0) + A, 0, 1). A: (..., 3)."""
+    tt = jnp.maximum(t, t0)[..., None]
+    A = jnp.broadcast_to(A[..., None, None, :], hazy.shape)
+    return jnp.clip((hazy - A) / tt + A, 0.0, 1.0).astype(hazy.dtype)
+
+
+# ---------------------------------------------------------------------------
+# CAP depth map (Zhu et al. [23], paper Eq. 4)
+# ---------------------------------------------------------------------------
+
+def cap_depth(img: jnp.ndarray, w0: float, w1: float, w2: float) -> jnp.ndarray:
+    """d(x) = w0 + w1 * value(x) + w2 * saturation(x) from RGB in [0,1]."""
+    v = jnp.max(img, axis=-1)
+    mn = jnp.min(img, axis=-1)
+    s = jnp.where(v > 0, (v - mn) / jnp.maximum(v, 1e-12), 0.0)
+    return (w0 + w1 * v + w2 * s).astype(img.dtype)

@@ -1,0 +1,420 @@
+"""Cell builder: (arch x shape x mesh) -> loweable jitted step.
+
+A *cell* is one entry of the assigned architecture x input-shape grid.
+``build_cell`` returns everything ``dryrun.py`` (and train.py/serve.py)
+needs: the step function, allocation-free argument ShapeDtypeStructs, the
+matching NamedSharding trees, donation hints, and the analytic
+MODEL_FLOPS terms for the roofline table.
+
+Sharding policy (DESIGN.md §3):
+  - batch over (pod, data) when divisible (else data, else replicated);
+  - TP over "model" per the logical-axis rules of each param table,
+    with LM head padding to the model-axis size;
+  - LM residual stream sequence-sharded over "model" between layers
+    (memory: remat-saved activations drop by the TP degree);
+  - optimizer moments ZeRO-1 sharded: params' specs plus a "data" axis on
+    the first still-unsharded divisible dimension;
+  - KV caches: batch over data axes, kv heads over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as cfgreg
+from repro.launch import flops as flops_mod
+from repro.launch.mesh import batch_axes_for
+from repro.models import common as cm
+from repro.models import steps as steps_mod
+from repro.optim import AdamWState, adamw_init, cosine_schedule
+
+
+class CellSkip(Exception):
+    """Raised when an (arch, shape) cell is a documented skip."""
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str                    # train | prefill | decode | sample | serve | dehaze
+    step_fn: Callable
+    args: Tuple[Any, ...]        # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    model_flops: float           # traced ideal FLOPs per step execution
+    six_nd: Optional[float]      # brief's 6·N·D / 2·N·D convention (LM/DiT)
+    steps_multiplier: int = 1    # e.g. sampler steps for diffusion inference
+    note: str = ""
+
+
+def _shard(mesh: Mesh, tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _zero1_pspecs(table, pspecs, data_axes: Tuple[str, ...], n_data: int):
+    """Moment specs: param specs + 'data' on the first unsharded divisible
+    dim (ZeRO-1 optimizer-state sharding)."""
+
+    def one(spec: cm.ParamSpec, ps: P):
+        parts = list(ps) + [None] * (len(spec.shape) - len(ps))
+        for i, (dim, cur) in enumerate(zip(spec.shape, parts)):
+            if cur is None and dim % n_data == 0 and dim >= n_data:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, table, pspecs,
+                        is_leaf=lambda x: isinstance(x, cm.ParamSpec))
+
+
+def _opt_shapes_and_shardings(table, mesh, data_axes, rules=None):
+    params_sh = cm.param_shapes(table)
+    opt_shapes = jax.eval_shape(adamw_init, params_sh)
+    pspecs = cm.param_pspecs(table, rules=rules, mesh=mesh)
+    if data_axes:
+        n_data = math.prod(mesh.shape[a] for a in data_axes)
+        mspecs = _zero1_pspecs(table, pspecs, data_axes, n_data)
+    else:
+        mspecs = pspecs
+    opt_specs = AdamWState(step=P(), mu=mspecs, nu=mspecs)
+    return params_sh, opt_shapes, pspecs, opt_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch_id, shape_name, shape, mesh,
+             overrides: Optional[Dict] = None) -> Cell:
+    from repro.models import transformer as T
+    mod = cfgreg.get_module(arch_id)
+    n_model = mesh.shape.get("model", 1)
+    bt = batch_axes_for(mesh, shape["global_batch"])
+    cfg: T.LMConfig = mod.config(pad_heads_to=n_model, **(overrides or {}))
+    ref_cfg: T.LMConfig = mod.config(remat=False)      # unpadded reference
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+    table = T.lm_param_table(cfg)
+    rules = T.lm_rules(cfg)
+    pspecs = cm.param_pspecs(table, rules=rules, mesh=mesh)
+    params_sh = cm.param_shapes(table)
+
+    n_active = cfg.active_param_count() - cfg.vocab * cfg.d_model
+
+    if kind == "train":
+        params_sh, opt_shapes, pspecs, opt_specs = _opt_shapes_and_shardings(
+            table, mesh, bt, rules=rules)
+        loss_fn = T.make_loss_fn(cfg, mesh, bt)
+        step = steps_mod.make_train_step(
+            loss_fn, cosine_schedule(3e-4, 100, 1000),
+            microbatches=cfg.microbatch,
+            accum_shardings=(_shard(mesh, opt_specs.mu)
+                             if cfg.microbatch > 1 else None))
+        batch_sh = {"tokens": _sds((B, S), jnp.int32),
+                    "labels": _sds((B, S), jnp.int32)}
+        batch_spec = {"tokens": P(bt, None), "labels": P(bt, None)}
+        ref_loss = T.make_loss_fn(ref_cfg, None, None)
+        mf = flops_mod.traced_flops(
+            lambda p, b: jax.grad(lambda pp: ref_loss(pp, b)[0])(p),
+            cm.param_shapes(T.lm_param_table(ref_cfg)), batch_sh)
+        return Cell(arch_id, shape_name, kind, step,
+                    (params_sh, opt_shapes, batch_sh),
+                    (_shard(mesh, pspecs), _shard(mesh, opt_specs),
+                     _shard(mesh, batch_spec)),
+                    donate_argnums=(0, 1),
+                    model_flops=mf, six_nd=6.0 * n_active * B * S)
+
+    if kind == "prefill":
+        step = T.make_prefill(cfg, mesh, bt)
+        toks = _sds((B, S), jnp.int32)
+        mf = flops_mod.traced_flops(
+            T.make_prefill(ref_cfg, None, None),
+            cm.param_shapes(T.lm_param_table(ref_cfg)), toks)
+        return Cell(arch_id, shape_name, kind, step, (params_sh, toks),
+                    (_shard(mesh, pspecs), _shard(mesh, P(bt, None))),
+                    donate_argnums=(),
+                    model_flops=mf, six_nd=2.0 * n_active * B * S)
+
+    if kind == "decode":
+        if cfg.decode_seq_shard:
+            # Flash-decoding mode: heads replicated (no TP padding), KV
+            # cache sequence-sharded over the model axis.
+            cfg = mod.config(pad_heads_to=1, **(overrides or {}))
+            rules = dict(T.lm_rules(cfg), heads=None, kv_heads=None)
+            table = T.lm_param_table(cfg)
+            pspecs = cm.param_pspecs(table, rules=rules, mesh=mesh)
+            params_sh = cm.param_shapes(table)
+            cache_spec = {"k": P(None, bt, "model", None, None),
+                          "v": P(None, bt, "model", None, None),
+                          "pos": P()}
+        else:
+            cache_spec = T.cache_pspecs(cfg, bt)
+        step = T.make_decode_step(cfg, mesh, bt)
+        cache_sh = T.cache_shapes(cfg, B, S)
+        toks = _sds((B, 1), jnp.int32)
+        ref_cache = T.cache_shapes(ref_cfg, B, S)
+        mf = flops_mod.traced_flops(
+            T.make_decode_step(ref_cfg, None, None),
+            cm.param_shapes(T.lm_param_table(ref_cfg)), ref_cache, toks)
+        return Cell(arch_id, shape_name, kind, step,
+                    (params_sh, cache_sh, toks),
+                    (_shard(mesh, pspecs), _shard(mesh, cache_spec),
+                     _shard(mesh, P(bt, None))),
+                    donate_argnums=(1,),
+                    model_flops=mf, six_nd=2.0 * n_active * B)
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Diffusion cells
+# ---------------------------------------------------------------------------
+
+def _diffusion_cell(arch_id, shape_name, shape, mesh) -> Cell:
+    mod = cfgreg.get_module(arch_id)
+    B, R = shape["batch"], shape["img_res"]
+    bt = batch_axes_for(mesh, shape["batch"])
+    kind = shape["kind"]
+    lat = R // 8
+    steps_mult = 1 if kind == "train" else shape["steps"]
+
+    if arch_id == "dit-l2":
+        from repro.models import dit as M
+        cfg = mod.config()
+        ref_cfg = mod.config(remat=False, dtype="float32")
+        table = M.dit_param_table(cfg)
+        batch_sh = {"latents": _sds((B, lat, lat, 4), jnp.float32),
+                    "timesteps": _sds((B,), jnp.int32),
+                    "labels": _sds((B,), jnp.int32),
+                    "noise": _sds((B, lat, lat, 4), jnp.float32)}
+        batch_spec = {"latents": P(bt, None, None, None),
+                      "timesteps": P(bt), "labels": P(bt),
+                      "noise": P(bt, None, None, None)}
+        if kind == "train":
+            loss = M.make_loss_fn(cfg, mesh, bt, img_res=R)
+            ref_loss = M.make_loss_fn(ref_cfg, None, None, img_res=R)
+            sample_args = None
+        else:
+            step_fn = M.make_sample_step(cfg, mesh, bt, img_res=R)
+            ref_fn = M.make_sample_step(ref_cfg, None, None, img_res=R)
+            sample_args = ({"zt": _sds((B, lat, lat, 4), jnp.float32),
+                            "t": _sds((B,), jnp.int32),
+                            "t_next": _sds((B,), jnp.int32),
+                            "y": _sds((B,), jnp.int32)},
+                           {"zt": P(bt, None, None, None), "t": P(bt),
+                            "t_next": P(bt), "y": P(bt)})
+
+            def step(params, a):
+                return step_fn(params, a["zt"], a["t"], a["t_next"], a["y"])
+
+            def ref_step(params, a):
+                return ref_fn(params, a["zt"], a["t"], a["t_next"], a["y"])
+        ref_table = M.dit_param_table(ref_cfg)
+    else:  # unet-sdxl
+        from repro.models import unet as M
+        cfg = mod.config(img_res=R)
+        ref_cfg = mod.config(img_res=R, remat=False, dtype="float32")
+        table = M.unet_param_table(cfg)
+        batch_sh = {"latents": _sds((B, lat, lat, 4), jnp.float32),
+                    "timesteps": _sds((B,), jnp.int32),
+                    "noise": _sds((B, lat, lat, 4), jnp.float32),
+                    "context": _sds((B, cfg.ctx_len, cfg.ctx_dim), jnp.float32),
+                    "pooled": _sds((B, cfg.ctx_dim), jnp.float32)}
+        batch_spec = {"latents": P(bt, None, None, None), "timesteps": P(bt),
+                      "noise": P(bt, None, None, None),
+                      "context": P(bt, None, None), "pooled": P(bt, None)}
+        if kind == "train":
+            loss = M.make_loss_fn(cfg, mesh, bt, img_res=R)
+            ref_loss = M.make_loss_fn(ref_cfg, None, None, img_res=R)
+            sample_args = None
+        else:
+            step_fn = M.make_sample_step(cfg, mesh, bt, img_res=R)
+            ref_fn = M.make_sample_step(ref_cfg, None, None, img_res=R)
+            sample_args = ({"zt": _sds((B, lat, lat, 4), jnp.float32),
+                            "t": _sds((B,), jnp.int32),
+                            "t_next": _sds((B,), jnp.int32),
+                            "context": batch_sh["context"],
+                            "pooled": batch_sh["pooled"]},
+                           {"zt": P(bt, None, None, None), "t": P(bt),
+                            "t_next": P(bt),
+                            "context": P(bt, None, None),
+                            "pooled": P(bt, None)})
+
+            def step(params, a):
+                return step_fn(params, a["zt"], a["t"], a["t_next"],
+                               a["context"], a["pooled"])
+
+            def ref_step(params, a):
+                return ref_fn(params, a["zt"], a["t"], a["t_next"],
+                              a["context"], a["pooled"])
+        ref_table = M.unet_param_table(ref_cfg)
+
+    pspecs = cm.param_pspecs(table, mesh=mesh)
+    params_sh = cm.param_shapes(table)
+    n_params = cm.param_count(table)
+
+    if kind == "train":
+        params_sh, opt_shapes, pspecs, opt_specs = _opt_shapes_and_shardings(
+            table, mesh, bt)
+        step = steps_mod.make_train_step(loss, cosine_schedule(1e-4, 100, 1000))
+        mf = flops_mod.traced_flops(
+            lambda p, b: jax.grad(lambda pp: ref_loss(pp, b)[0])(p),
+            cm.param_shapes(ref_table), batch_sh)
+        six_nd = 6.0 * n_params * B * (lat // 2) ** 2 \
+            if arch_id == "dit-l2" else None
+        return Cell(arch_id, shape_name, kind, step,
+                    (params_sh, opt_shapes, batch_sh),
+                    (_shard(mesh, pspecs), _shard(mesh, opt_specs),
+                     _shard(mesh, batch_spec)),
+                    donate_argnums=(0, 1), model_flops=mf, six_nd=six_nd)
+
+    args_sh, args_spec = sample_args
+    mf = flops_mod.traced_flops(ref_step, cm.param_shapes(ref_table), args_sh)
+    six_nd = 2.0 * n_params * 2 * B * (lat // 2) ** 2 \
+        if arch_id == "dit-l2" else None
+    return Cell(arch_id, shape_name, kind, step, (params_sh, args_sh),
+                (_shard(mesh, pspecs), _shard(mesh, args_spec)),
+                donate_argnums=(), model_flops=mf, six_nd=six_nd,
+                steps_multiplier=steps_mult,
+                note=f"one denoise step; totals scale x{steps_mult}")
+
+
+# ---------------------------------------------------------------------------
+# Vision cells
+# ---------------------------------------------------------------------------
+
+def _vision_cell(arch_id, shape_name, shape, mesh) -> Cell:
+    mod = cfgreg.get_module(arch_id)
+    B, R = shape["batch"], shape["img_res"]
+    bt = batch_axes_for(mesh, B)
+    kind = shape["kind"]
+    has_bn = arch_id in ("resnet-50", "efficientnet-b7")
+
+    if arch_id == "vit-l16":
+        from repro.models import vit as M
+        cfg = mod.config()
+        table = M.vit_param_table(cfg, img_res=R)
+        ref_cfg = mod.config(remat=False, dtype="float32")
+        ref_table = M.vit_param_table(ref_cfg, img_res=R)
+        make_fwd = lambda c, trn: M.make_forward(c)
+        make_loss = lambda c: M.make_loss_fn(c)
+    elif arch_id == "resnet-50":
+        from repro.models import resnet as M
+        cfg = ref_cfg = mod.config()
+        table = ref_table = M.resnet_param_table(cfg)
+        make_fwd = lambda c, trn: (
+            lambda p, x: M.make_forward(c, training=trn)(p, x)[0])
+        make_loss = lambda c: M.make_loss_fn(c)
+    elif arch_id == "efficientnet-b7":
+        from repro.models import efficientnet as M
+        cfg = ref_cfg = mod.config()
+        table = ref_table = M.efficientnet_param_table(cfg)
+        make_fwd = lambda c, trn: (
+            lambda p, x: M.make_forward(c, training=trn)(p, x)[0])
+        make_loss = lambda c: M.make_loss_fn(c)
+    else:  # convnext-b
+        from repro.models import convnext as M
+        cfg = mod.config()
+        ref_cfg = mod.config(dtype="float32")
+        table = M.convnext_param_table(cfg)
+        ref_table = M.convnext_param_table(ref_cfg)
+        make_fwd = lambda c, trn: M.make_forward(c)
+        make_loss = lambda c: M.make_loss_fn(c)
+
+    pspecs = cm.param_pspecs(table, mesh=mesh)
+    params_sh = cm.param_shapes(table)
+    images = _sds((B, R, R, 3), jnp.float32)
+    labels = _sds((B,), jnp.int32)
+
+    if kind == "train":
+        params_sh, opt_shapes, pspecs, opt_specs = _opt_shapes_and_shardings(
+            table, mesh, bt)
+        step = steps_mod.make_train_step(
+            make_loss(cfg), cosine_schedule(1e-3, 100, 1000), has_bn=has_bn)
+        batch_sh = {"images": images, "labels": labels}
+        batch_spec = {"images": P(bt, None, None, None), "labels": P(bt)}
+        mf = flops_mod.traced_flops(
+            lambda p, b: jax.grad(lambda pp: make_loss(ref_cfg)(pp, b)[0])(p),
+            cm.param_shapes(ref_table), batch_sh)
+        return Cell(arch_id, shape_name, kind, step,
+                    (params_sh, opt_shapes, batch_sh),
+                    (_shard(mesh, pspecs), _shard(mesh, opt_specs),
+                     _shard(mesh, batch_spec)),
+                    donate_argnums=(0, 1), model_flops=mf, six_nd=None)
+
+    step = make_fwd(cfg, False)
+    mf = flops_mod.traced_flops(make_fwd(ref_cfg, False),
+                                cm.param_shapes(ref_table), images)
+    return Cell(arch_id, shape_name, "serve", step, (params_sh, images),
+                (_shard(mesh, pspecs),
+                 _shard(mesh, P(bt, None, None, None))),
+                donate_argnums=(), model_flops=mf, six_nd=None)
+
+
+# ---------------------------------------------------------------------------
+# Dehaze cells (the paper's own pipeline)
+# ---------------------------------------------------------------------------
+
+def _dehaze_cell(arch_id, shape_name, shape, mesh,
+                 overrides: Optional[Dict] = None) -> Cell:
+    from repro.core import (AtmoState, init_atmo_state, make_dehaze_step,
+                            make_sharded_dehaze_step)
+    mod = cfgreg.get_module(arch_id)
+    cfg = mod.config(kernel_mode="ref", **(overrides or {}))
+    B, H, W = shape["batch"], shape["height"], shape["width"]
+    bt = batch_axes_for(mesh, B)
+    n_model = mesh.shape.get("model", 1)
+    height_axis = "model" if H % n_model == 0 else None
+    step, fspec, ispec = make_sharded_dehaze_step(
+        cfg, mesh, batch_axes=bt or (), height_axis=height_axis)
+
+    frames = _sds((B, H, W, 3), jnp.float32)
+    ids = _sds((B,), jnp.int32)
+    state_sh = jax.eval_shape(init_atmo_state)
+    state_spec = AtmoState(A=P(), last_update=P(), initialized=P())
+
+    mf = flops_mod.traced_flops(
+        make_dehaze_step(cfg), frames, ids, state_sh)
+    return Cell(arch_id, shape_name, "dehaze", step, (frames, ids, state_sh),
+                (_shard(mesh, fspec), _shard(mesh, ispec),
+                 _shard(mesh, state_spec)),
+                donate_argnums=(), model_flops=mf, six_nd=None,
+                note=f"height_axis={height_axis}")
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[Dict] = None) -> Cell:
+    """``overrides``: config-field overrides for perf iteration (e.g.
+    {"seq_shard": True}); applied to the lowered config only — the
+    reference MODEL_FLOPS trace stays at the paper-faithful baseline so
+    the useful-FLOPs ratio remains comparable across variants."""
+    skip = cfgreg.cell_skip_reason(arch_id, shape_name)
+    if skip:
+        raise CellSkip(skip)
+    shape = cfgreg.shapes_for(arch_id)[shape_name]
+    family = cfgreg.get_module(arch_id).FAMILY
+    if family == "lm":
+        return _lm_cell(arch_id, shape_name, shape, mesh, overrides)
+    if family == "dehaze":
+        return _dehaze_cell(arch_id, shape_name, shape, mesh, overrides)
+    if overrides:
+        raise ValueError(f"overrides unsupported for family {family}")
+    if family == "diffusion":
+        return _diffusion_cell(arch_id, shape_name, shape, mesh)
+    if family == "vision":
+        return _vision_cell(arch_id, shape_name, shape, mesh)
+    raise ValueError(family)

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (the SPMD
+partitioner accepts it, no sharding mismatch, no unsupported collective)
+and extracts the roofline inputs:
+
+  - compiled.memory_analysis()  -> bytes per device (does it fit HBM)
+  - compiled.cost_analysis()    -> HLO FLOPs / HBM bytes
+  - compiled.as_text() parse    -> collective bytes per kind
+
+Results are cached as JSON under results/dryrun/ so the full 40-cell x
+2-mesh sweep can run incrementally.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--include-dehaze]
+  python -m repro.launch.dryrun --summary
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro import configs as cfgreg
+from repro.launch.cells import Cell, CellSkip, build_cell
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# TPU v5e constants (per chip).
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link
+
+def _analyze(rec: dict, hlo: str, mem, cell) -> dict:
+    """Fill the roofline fields of ``rec`` from the HLO text + memory
+    analysis. Kept separate so --reanalyze can recompute metrics from the
+    saved HLO without recompiling."""
+    from repro.launch import hlocost
+    hcost = hlocost.cost_from_hlo_text(hlo)
+    flops = hcost.flops
+    bytes_acc = hcost.traffic_bytes
+    coll = dict(hcost.collective_bytes)
+    coll_total = hcost.collective_total
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_total / ICI_BW
+    rec.update(
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=bytes_acc,
+        collective_bytes_per_device=coll,
+        collective_bytes_total=coll_total,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", collective_s)),
+                       key=lambda kv: kv[1])[0],
+    )
+    if mem is not None:
+        rec["memory_analysis"] = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "output_size_in_bytes", 0) or 0),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    return rec
+
+
+def _paths(arch_id, shape_name, mesh_name):
+    base = f"{arch_id}__{shape_name}__{mesh_name}"
+    return (os.path.join(RESULTS_DIR, base + ".json"),
+            os.path.join(RESULTS_DIR, "hlo", base + ".txt.gz"))
+
+
+def reanalyze_all() -> None:
+    """Recompute roofline metrics from cached HLO (no recompilation)."""
+    import gzip
+    n = 0
+    for name in sorted(os.listdir(RESULTS_DIR)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(RESULTS_DIR, name)
+        with open(path) as f:
+            rec = json.load(f)
+        hlo_path = os.path.join(RESULTS_DIR, "hlo",
+                                name[:-5] + ".txt.gz")
+        if rec.get("status") != "ok" or not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        _analyze(rec, hlo, None, None)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             force: bool = False, save: bool = True,
+             overrides: Optional[dict] = None,
+             variant: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if variant:
+        mesh_name += f"__{variant}"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    os.makedirs(os.path.join(RESULTS_DIR, "hlo"), exist_ok=True)
+    out_path, hlo_path = _paths(arch_id, shape_name, mesh_name)
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "status": "error"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        try:
+            cell = build_cell(arch_id, shape_name, mesh,
+                              overrides=overrides)
+        except CellSkip as e:
+            rec.update(status="skip", reason=str(e))
+            if save:
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            return rec
+
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        with mesh:
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        import gzip
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+
+        rec.update(
+            status="ok",
+            n_devices=n_dev,
+            kind=cell.kind,
+            note=cell.note,
+            steps_multiplier=cell.steps_multiplier,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            xla_cost_analysis={"flops": float(cost.get("flops", 0.0)),
+                               "bytes": float(cost.get("bytes accessed", 0.0)),
+                               "note": "while-bodies counted once by XLA"},
+            model_flops=cell.model_flops,
+            six_nd=cell.six_nd,
+        )
+        # Corrected per-device cost model: parses the SPMD HLO with while
+        # trip counts (XLA's cost_analysis counts loop bodies once), ring-
+        # derated collective wire bytes, fusion-boundary HBM traffic
+        # (upper bound — CPU-backend fusion is coarser than TPU's).
+        _analyze(rec, hlo, mem, cell)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    if save:
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def summary() -> None:
+    rows = []
+    for name in sorted(os.listdir(RESULTS_DIR)):
+        if name.endswith(".json"):
+            with open(os.path.join(RESULTS_DIR, name)) as f:
+                rows.append(json.load(f))
+    print(f"{'arch':26s} {'shape':12s} {'mesh':11s} {'status':7s} "
+          f"{'bottleneck':10s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'useful%':>8s} {'peakGB':>7s}")
+    for r in rows:
+        if r["status"] == "ok":
+            useful = (100.0 * r["model_flops"] / r["hlo_flops_per_device"]
+                      / r["n_devices"] if r["hlo_flops_per_device"] else 0.0)
+            peak = (r["memory_analysis"]["peak_bytes"] or 0) / 1e9
+            print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:11s} "
+                  f"{r['status']:7s} {r.get('bottleneck',''):10s} "
+                  f"{r['compute_s']:10.4g} {r['memory_s']:10.4g} "
+                  f"{r['collective_s']:10.4g} {useful:8.1f} {peak:7.2f}")
+        else:
+            msg = r.get("reason") or r.get("error", "")
+            print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:11s} "
+                  f"{r['status']:7s} {msg[:70]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-dehaze", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (perf iteration); "
+                         "repeatable. Adds a __<variant> suffix to the record.")
+    ap.add_argument("--variant", default="",
+                    help="label for the override variant record")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute metrics from cached HLO, no recompile")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze_all()
+        return
+    if args.summary:
+        summary()
+        return
+
+    import ast
+    overrides = None
+    if args.override:
+        overrides = {}
+        for kv in args.override:
+            k, v = kv.split("=", 1)
+            try:
+                overrides[k] = ast.literal_eval(v)
+            except (ValueError, SyntaxError):
+                overrides[k] = v
+        if not args.variant:
+            args.variant = "-".join(f"{k}={v}" for k, v in overrides.items())
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = cfgreg.all_cells(include_dehaze=args.include_dehaze)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch_id, shape_name in cells:
+            rec = run_cell(arch_id, shape_name, multi_pod=multi_pod,
+                           force=args.force, overrides=overrides,
+                           variant=args.variant)
+            status = rec["status"]
+            extra = rec.get("reason") or rec.get("error", "")
+            print(f"[{rec['mesh']}] {arch_id} x {shape_name}: {status} "
+                  f"({rec.get('wall_s', 0)}s) {extra[:100]}", flush=True)
+            if status == "error":
+                failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Analytic MODEL_FLOPS: a jaxpr walker counting ideal compute.
+
+Traces the *reference* computation (no TP head padding, no remat, no SPMD
+partitioning) with ``jax.make_jaxpr`` — cheap, no compilation — and counts:
+
+  - dot_general: 2 * prod(batch) * M * N * K
+  - conv_general_dilated: 2 * out_spatial * k_spatial * Cin/g * Cout * B
+  - elementwise / reductions / reduce_window: 1 FLOP per output (x window)
+  - scan bodies multiplied by trip count; cond branches take the max
+
+This is the "useful FLOPs" denominator for the roofline table: the ratio
+MODEL_FLOPS / HLO_FLOPs exposes padding, remat recompute, and capacity
+waste in the compiled program. The brief's 6·N·D convention is reported
+alongside (``six_nd``) for LM cells.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "neg", "abs", "floor", "ceil", "sign",
+    "erf", "cos", "sin", "integer_pow", "select_n", "clamp", "and", "or",
+    "xor", "not", "rem",
+}
+REDUCTIONS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+              "reduce_and", "reduce_or", "argmax", "argmin",
+              "cumsum", "cumlogsumexp", "cummax", "cummin", "cumprod"}
+
+
+def _size(v) -> int:
+    try:
+        return int(np.prod(v.aval.shape))
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(lhs.shape[i] for i in range(len(lhs.shape))
+                  if i not in set(lc) | set(lb))
+    n = math.prod(rhs.shape[i] for i in range(len(rhs.shape))
+                  if i not in set(rc) | set(rb))
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    rhs = eqn.invars[1].aval                     # kernel (HWIO order via spec)
+    dn = eqn.params["dimension_numbers"]
+    k_spatial = math.prod(rhs.shape[i] for i in dn.rhs_spec[2:])
+    cin_per_g = rhs.shape[dn.rhs_spec[1]]        # already per-group
+    return 2.0 * _size(eqn.outvars[0]) * k_spatial * cin_per_g
+
+
+def _jaxpr_flops(jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_flops(eqn)
+        elif prim == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif prim == "scan":
+            total += eqn.params["length"] * _jaxpr_flops(
+                eqn.params["jaxpr"].jaxpr)
+        elif prim == "while":
+            total += _jaxpr_flops(eqn.params["body_jaxpr"].jaxpr)
+        elif prim == "cond":
+            total += max((_jaxpr_flops(b.jaxpr)
+                          for b in eqn.params["branches"]), default=0.0)
+        elif prim in ("pjit", "closed_call", "core_call", "remat2",
+                      "checkpoint", "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "shard_map"):
+            inner = (eqn.params.get("jaxpr")
+                     or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                total += _jaxpr_flops(getattr(inner, "jaxpr", inner))
+        elif prim in ELEMENTWISE:
+            total += _size(eqn.outvars[0])
+        elif prim in REDUCTIONS:
+            total += _size(eqn.invars[0])
+        elif prim == "reduce_window_sum" or prim == "reduce_window":
+            w = eqn.params.get("window_dimensions", ())
+            total += _size(eqn.outvars[0]) * math.prod(w)
+        elif prim == "reduce_window_max" or prim == "reduce_window_min":
+            w = eqn.params.get("window_dimensions", ())
+            total += _size(eqn.outvars[0]) * math.prod(w)
+    return total
+
+
+def traced_flops(fn, *args, **kwargs) -> float:
+    """FLOPs of fn(*args) per the walker above (args: ShapeDtypeStructs ok)."""
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    return _jaxpr_flops(jaxpr.jaxpr)

@@ -1,0 +1,6 @@
+"""Architecture zoo (pure-JAX param-pytree models)."""
+from repro.models import (common, convnext, dit, efficientnet, resnet, steps,
+                          transformer, unet, vit)
+
+__all__ = ["common", "transformer", "dit", "unet", "vit", "resnet",
+           "efficientnet", "convnext", "steps"]

@@ -1,0 +1,368 @@
+"""Model-zoo substrate: param tables, sharding rules, attention, conv/norm.
+
+Single source of truth per model is a *param table*: a pytree of
+``ParamSpec(shape, dtype, axes)`` where ``axes`` names each dimension with
+a logical axis ("embed", "heads", "mlp", "experts", "vocab", ...). From
+the table we derive (a) initialized parameters, (b) ``PartitionSpec``
+trees via a logical→mesh rule set, and (c) allocation-free
+``ShapeDtypeStruct`` trees for ``.lower()`` dry-runs. One structure, three
+views — the trees cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                 # normal | zeros | ones
+    scale: float = 1.0                   # stddev multiplier for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# Default logical→mesh rules for the production mesh (DESIGN.md §3).
+# "model"-axis tensor parallelism on heads / mlp / experts / vocab;
+# everything else replicated; batch dims handled by input shardings.
+DEFAULT_RULES: Dict[str, Optional[Any]] = {
+    "vocab": "model",
+    "vocab_embed": "model",
+    "dm_embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "mlp": "model",
+    "experts": "model",
+    "conv_out": None,
+    "embed": None,
+    "layers": None,
+    "head_dim": None,
+    None: None,
+}
+
+
+def fanin_scale(spec: ParamSpec) -> float:
+    """1/sqrt(fan_in) init, fan_in = product of non-output dims."""
+    if len(spec.shape) < 2:
+        return 1.0
+    fan_in = math.prod(spec.shape[:-1]) / (
+        spec.shape[0] if spec.axes and spec.axes[0] == "layers" else 1)
+    return 1.0 / math.sqrt(max(fan_in, 1.0))
+
+
+def init_params(rng: jax.Array, table: Any) -> Any:
+    """Initialize a param pytree from a table of ParamSpec."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        table, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, spec in zip(keys, leaves):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            std = spec.scale * fanin_scale(spec)
+            out.append((jax.random.normal(key, spec.shape, jnp.float32)
+                        * std).astype(spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shapes(table: Any) -> Any:
+    """ShapeDtypeStruct tree (dry-run view — no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), table,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_pspecs(table: Any, rules: Optional[Mapping] = None,
+                 mesh: Optional[Any] = None) -> Any:
+    """PartitionSpec tree via logical→mesh rules.
+
+    When ``mesh`` is given, a dimension whose size is not divisible by the
+    mapped mesh axis size falls back to replication (NamedSharding rejects
+    uneven shards) — e.g. a 1000-class head under a 16-way model axis."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def axis_size(entry) -> int:
+        if mesh is None or entry is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in names:
+            n *= mesh.shape[a]
+        return n
+
+    def one(spec: ParamSpec) -> P:
+        parts = []
+        for dim, a in zip(spec.shape, spec.axes):
+            entry = rules.get(a, None)
+            n = axis_size(entry)
+            parts.append(entry if (n > 1 and dim % n == 0) or mesh is None
+                         else None)
+        return P(*parts)
+
+    return jax.tree.map(one, table, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(table: Any) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree_util.tree_leaves(
+        table, is_leaf=lambda x: isinstance(x, ParamSpec)))
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+         ) -> jnp.ndarray:
+    """Rotary embedding, interleaved-pair formulation.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, KV-blocked online softmax)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     q_offset: int | jnp.ndarray = 0,
+                     kv_block: int = 1024) -> jnp.ndarray:
+    """Memory-efficient causal attention via online softmax over KV blocks.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) with H % Hkv == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0
+    with Sq == Skv; decode: cache length). Never materializes the full
+    (Sq, Skv) score matrix — peak is (Sq, kv_block) per head.
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scale = 1.0 / math.sqrt(d)
+    q32 = q.astype(jnp.float32) * scale
+
+    if skv <= kv_block:
+        # Single-block fast path.
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, k.astype(jnp.float32))
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    n_blocks = math.ceil(skv / kv_block)
+    pad = n_blocks * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, kv_block, h, d).astype(jnp.float32)
+    vb = v.reshape(b, n_blocks, kv_block, h, d).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, blk):
+        m_prev, l_prev, o_prev = carry
+        k_blk, v_blk, blk_idx = blk
+        kpos = blk_idx * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, k_blk)
+        mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < skv)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        # Guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use 0.
+        safe = jnp.isfinite(m_new)
+        alpha = jnp.where(safe, jnp.exp(m_prev - jnp.where(safe, m_new, 0.0)), 0.0)
+        p = jnp.exp(s - jnp.where(safe, m_new, 0.0)[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        o_new = alpha[..., None] * o_prev + jnp.einsum("bhqk,bkhd->bhqd", p, v_blk)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    o0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, o), _ = lax.scan(
+        body, (m0, l0, o0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_blocks)))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv / pooling helpers (NHWC)
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+           padding: str | Sequence[Tuple[int, int]] = "SAME",
+           groups: int = 1) -> jnp.ndarray:
+    """x: (B,H,W,Cin), w: (kh,kw,Cin/groups,Cout)."""
+    return lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(stride, stride),
+        padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def depthwise_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                     padding="SAME") -> jnp.ndarray:
+    """w: (kh, kw, 1, C) with feature_group_count=C."""
+    return conv2d(x, w, stride=stride, padding=padding, groups=x.shape[-1])
+
+
+def avg_pool(x: jnp.ndarray, window: int, stride: int,
+             padding: str = "VALID") -> jnp.ndarray:
+    s = lax.reduce_window(x.astype(jnp.float32), 0.0, lax.add,
+                          (1, window, window, 1), (1, stride, stride, 1),
+                          padding)
+    return (s / (window * window)).astype(x.dtype)
+
+
+def max_pool(x: jnp.ndarray, window: int, stride: int,
+             padding: str = "SAME") -> jnp.ndarray:
+    return lax.reduce_window(x, -jnp.inf, lax.max,
+                             (1, window, window, 1),
+                             (1, stride, stride, 1), padding).astype(x.dtype)
+
+
+def batch_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               mean: jnp.ndarray, var: jnp.ndarray,
+               training: bool, eps: float = 1e-5,
+               axis_name: Optional[str] = None):
+    """BatchNorm. In training mode returns (y, batch_mean, batch_var) with
+    cross-replica stats when ``axis_name`` is set (sync-BN); in inference
+    mode returns (y, mean, var) using the running stats."""
+    x32 = x.astype(jnp.float32)
+    if training:
+        red = tuple(range(x.ndim - 1))
+        bm = jnp.mean(x32, axis=red)
+        bv = jnp.mean(jnp.square(x32), axis=red) - jnp.square(bm)
+        if axis_name is not None:
+            bm = lax.pmean(bm, axis_name)
+            bv = lax.pmean(bv, axis_name)
+    else:
+        bm, bv = mean.astype(jnp.float32), var.astype(jnp.float32)
+    y = (x32 - bm) * lax.rsqrt(bv + eps) * scale.astype(jnp.float32) + bias
+    return y.astype(x.dtype), bm, bv
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               groups: int = 32, eps: float = 1e-5) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    g = math.gcd(groups, c)      # largest group count dividing c
+    x32 = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = jnp.mean(x32, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(x32, axis=(1, 2, 4), keepdims=True)
+    y = ((x32 - mu) * lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return y.astype(x.dtype) * scale + bias
+
+
+def bn_table(ch: int, dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    """BatchNorm parameter group. ``mean``/``var`` are running stats: they
+    receive zero gradients (never used in the training-mode loss path) and
+    are refreshed functionally by ``bn_apply`` — the train step merges the
+    returned stats back into the param tree."""
+    return {
+        "scale": ParamSpec((ch,), ("conv_out",), dtype, init="ones"),
+        "bias": ParamSpec((ch,), ("conv_out",), dtype, init="zeros"),
+        "mean": ParamSpec((ch,), ("conv_out",), dtype, init="zeros"),
+        "var": ParamSpec((ch,), ("conv_out",), dtype, init="ones"),
+    }
+
+
+def bn_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray, training: bool,
+             axis_name=None, momentum: float = 0.9):
+    """Returns (y, new_bn_params) — new stats only change in training."""
+    y, bm, bv = batch_norm(x, p["scale"], p["bias"], p["mean"], p["var"],
+                           training, axis_name=axis_name)
+    if training:
+        new = dict(p)
+        new["mean"] = (momentum * p["mean"]
+                       + (1 - momentum) * lax.stop_gradient(bm)).astype(
+                           p["mean"].dtype)
+        new["var"] = (momentum * p["var"]
+                      + (1 - momentum) * lax.stop_gradient(bv)).astype(
+                          p["var"].dtype)
+        return y, new
+    return y, p
+
+
+def merge_bn_stats(opt_params: Any, stats_params: Any) -> Any:
+    """Take optimizer-updated leaves except BN running stats, which come
+    from the forward pass (paths ending in mean/var under a bn group)."""
+    flat_opt = jax.tree_util.tree_flatten_with_path(opt_params)[0]
+    flat_new = jax.tree_util.tree_leaves(stats_params)
+    treedef = jax.tree_util.tree_structure(opt_params)
+    out = []
+    for (path, leaf), new_leaf in zip(flat_opt, flat_new):
+        key = jax.tree_util.keystr(path)
+        if key.endswith("['mean']") or key.endswith("['var']"):
+            out.append(new_leaf)
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int,
+                       max_period: float = 10000.0) -> jnp.ndarray:
+    """Sinusoidal embedding, (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def posemb_sincos_2d(h: int, w: int, dim: int) -> jnp.ndarray:
+    """(h*w, dim) fixed 2-D sin-cos position embedding."""
+    y, x = jnp.mgrid[:h, :w]
+    omega = jnp.arange(dim // 4, dtype=jnp.float32) / (dim // 4 - 1)
+    omega = 1.0 / (10000 ** omega)
+    y = y.reshape(-1).astype(jnp.float32)[:, None] * omega[None]
+    x = x.reshape(-1).astype(jnp.float32)[:, None] * omega[None]
+    return jnp.concatenate([jnp.sin(x), jnp.cos(x), jnp.sin(y), jnp.cos(y)],
+                           axis=1)

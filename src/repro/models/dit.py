@@ -1,0 +1,193 @@
+"""DiT (Peebles & Xie, arXiv:2212.09748) — dit-l2 (DiT-L/2).
+
+Latent-space diffusion transformer with adaLN-zero conditioning on
+(timestep, class). Operates on VAE latents at img_res/8; patch size 2.
+Predicts (eps, sigma) — 2x latent channels — like the paper
+(learn_sigma=True). Layers are scanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str = "dit"
+    img_res: int = 256
+    patch: int = 2
+    n_layers: int = 24
+    d_model: int = 1024
+    n_heads: int = 16
+    latent_ch: int = 4
+    n_classes: int = 1000
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    def n_tokens(self, img_res: Optional[int] = None) -> int:
+        r = (img_res or self.img_res) // 8
+        return (r // self.patch) ** 2
+
+
+def dit_param_table(c: DiTConfig) -> Dict[str, Any]:
+    dt = c.jdtype
+    L, dm = c.n_layers, c.d_model
+    hd = dm // c.n_heads
+    pdim = c.patch * c.patch * c.latent_ch
+    return {
+        "patch_embed": ParamSpec((pdim, dm), (None, "embed"), dt),
+        "t_mlp1": ParamSpec((256, dm), (None, "embed"), dt),
+        "t_mlp2": ParamSpec((dm, dm), ("embed", None), dt),
+        "y_embed": ParamSpec((c.n_classes + 1, dm), ("vocab", "embed"), dt),
+        "layers": {
+            "wq": ParamSpec((L, dm, c.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wk": ParamSpec((L, dm, c.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wv": ParamSpec((L, dm, c.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wo": ParamSpec((L, c.n_heads, hd, dm), ("layers", "heads", "head_dim", "embed"), dt),
+            "w_in": ParamSpec((L, dm, 4 * dm), ("layers", "embed", "mlp"), dt),
+            "w_out": ParamSpec((L, 4 * dm, dm), ("layers", "mlp", "embed"), dt),
+            # adaLN-zero: 6 modulation vectors from conditioning.
+            "ada_w": ParamSpec((L, dm, 6 * dm), ("layers", "embed", None), dt,
+                               init="zeros"),
+            "ada_b": ParamSpec((L, 6 * dm), ("layers", None), dt, init="zeros"),
+        },
+        "final_ada_w": ParamSpec((dm, 2 * dm), ("embed", None), dt, init="zeros"),
+        "final_ada_b": ParamSpec((2 * dm,), (None,), dt, init="zeros"),
+        "final_proj": ParamSpec((dm, 2 * pdim), ("embed", None), dt,
+                                init="zeros"),
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _ln(x):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+def _block(x, c_emb, lp, cfg: DiTConfig):
+    mod = (jnp.einsum("bd,de->be", c_emb, lp["ada_w"]) + lp["ada_b"])
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    h = _modulate(_ln(x), sh1, sc1)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(
+                       jnp.asarray(q.shape[-1], jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+    attn = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    x = x + g1[:, None, :] * attn
+    h = _modulate(_ln(x), sh2, sc2)
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, lp["w_in"]))
+    mlp = jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), lp["w_out"])
+    return x + g2[:, None, :] * mlp
+
+
+def make_forward(cfg: DiTConfig, mesh: Optional[Mesh] = None,
+                 batch_axes: Optional[Tuple[str, ...]] = ("data",),
+                 img_res: Optional[int] = None):
+    """forward(params, latents (B,r,r,C), t (B,), y (B,)) -> (B,r,r,2C)."""
+    del mesh, batch_axes
+    r = (img_res or cfg.img_res) // 8
+    g = r // cfg.patch
+
+    def forward(params, latents, t, y):
+        b = latents.shape[0]
+        # Patchify: (B, g, p, g, p, C) -> (B, g*g, p*p*C).
+        x = latents.astype(cfg.jdtype).reshape(
+            b, g, cfg.patch, g, cfg.patch, cfg.latent_ch)
+        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, g * g, -1)
+        x = jnp.einsum("bsp,pd->bsd", x, params["patch_embed"])
+        x = x + cm.posemb_sincos_2d(g, g, cfg.d_model).astype(x.dtype)[None]
+
+        t_emb = cm.timestep_embedding(t, 256).astype(cfg.jdtype)
+        t_emb = jnp.einsum("be,ed->bd", t_emb, params["t_mlp1"])
+        t_emb = jnp.einsum("bd,de->be", jax.nn.silu(t_emb), params["t_mlp2"])
+        y_emb = params["y_embed"].at[y].get(mode="clip")
+        c_emb = jax.nn.silu(t_emb + y_emb)
+
+        def block(x, lp):
+            return _block(x, c_emb, lp, cfg), None
+
+        if cfg.remat:
+            block = jax.checkpoint(block)
+        x, _ = lax.scan(block, x, params["layers"])
+
+        mod = jnp.einsum("bd,de->be", c_emb, params["final_ada_w"]) \
+            + params["final_ada_b"]
+        sh, sc = jnp.split(mod, 2, axis=-1)
+        x = _modulate(_ln(x), sh, sc)
+        x = jnp.einsum("bsd,dp->bsp", x, params["final_proj"])
+        # Unpatchify to (B, r, r, 2C).
+        x = x.reshape(b, g, g, cfg.patch, cfg.patch, 2 * cfg.latent_ch)
+        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, r, r, 2 * cfg.latent_ch)
+        return x
+
+    return forward
+
+
+def make_loss_fn(cfg: DiTConfig, mesh=None, batch_axes=("data",),
+                 img_res: Optional[int] = None):
+    """Denoising MSE (eps-prediction) with a cosine-ish schedule."""
+    forward = make_forward(cfg, mesh, batch_axes, img_res)
+
+    def loss_fn(params, batch):
+        z0 = batch["latents"]
+        t = batch["timesteps"]
+        # Deterministic pseudo-noise from the batch (keeps the step pure).
+        noise = batch["noise"]
+        abar = jnp.cos((t.astype(jnp.float32) / 1000.0) * jnp.pi / 2) ** 2
+        abar = abar[:, None, None, None]
+        zt = jnp.sqrt(abar) * z0 + jnp.sqrt(1 - abar) * noise
+        out = forward(params, zt, t, batch["labels"]).astype(jnp.float32)
+        eps_hat = out[..., :cfg.latent_ch]
+        loss = jnp.mean(jnp.square(eps_hat - noise))
+        return loss, {"mse": loss}
+
+    return loss_fn
+
+
+def make_sample_step(cfg: DiTConfig, mesh=None, batch_axes=("data",),
+                     img_res: Optional[int] = None, guidance: float = 4.0):
+    """One classifier-free-guided DDIM step: (params, z_t, t, t_next, y)."""
+    forward = make_forward(cfg, mesh, batch_axes, img_res)
+
+    def sample_step(params, zt, t, t_next, y):
+        b = zt.shape[0]
+        null_y = jnp.full_like(y, cfg.n_classes)      # CFG null class
+        z2 = jnp.concatenate([zt, zt], axis=0)
+        t2 = jnp.concatenate([t, t], axis=0)
+        y2 = jnp.concatenate([y, null_y], axis=0)
+        out = forward(params, z2, t2, y2).astype(jnp.float32)
+        eps_c, eps_u = jnp.split(out[..., :cfg.latent_ch], 2, axis=0)
+        eps = eps_u + guidance * (eps_c - eps_u)
+        abar = jnp.cos((t.astype(jnp.float32) / 1000.0) * jnp.pi / 2) ** 2
+        abar_n = jnp.cos((t_next.astype(jnp.float32) / 1000.0) * jnp.pi / 2) ** 2
+        abar = abar[:, None, None, None]
+        abar_n = abar_n[:, None, None, None]
+        z0 = (zt - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        return jnp.sqrt(abar_n) * z0 + jnp.sqrt(1 - abar_n) * eps
+
+    return sample_step

@@ -1,0 +1,83 @@
+"""Generic train/serve step builders shared by all architectures."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.optim import (AdamWState, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule)
+
+
+def make_train_step(loss_fn: Callable, lr_schedule: Callable,
+                    grad_clip: float = 1.0, has_bn: bool = False,
+                    weight_decay: float = 0.1, microbatches: int = 1,
+                    accum_shardings=None):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    BN-carrying models return their refreshed running stats in
+    ``metrics["bn_params"]``; those leaves overwrite the optimizer's output
+    (they receive zero gradient, so this is the only path that moves them).
+
+    ``microbatches > 1`` = gradient accumulation via lax.scan: the global
+    batch splits along its leading dim, activations scale down by the
+    factor, gradients accumulate in f32 (sharded like the params, so the
+    extra state is params/|mesh| bytes per device).
+    """
+
+    def apply_update(params, opt_state, grads, metrics, loss):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(opt_state.step)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr,
+                                           weight_decay=weight_decay)
+        if has_bn:
+            new_params = cm.merge_bn_stats(new_params,
+                                           metrics.pop("bn_params"))
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, out_metrics
+
+    if microbatches <= 1:
+        def train_step(params, opt_state: AdamWState, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return apply_update(params, opt_state, grads, metrics, loss)
+        return train_step
+
+    assert not has_bn, "microbatching + BN stat merge not supported"
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if accum_shardings is not None:
+            # ZeRO-style sharding for the f32 accumulator (same specs as
+            # the optimizer moments) — without it the accumulator is the
+            # per-device memory floor for large models.
+            constrain = lambda t: jax.tree.map(
+                jax.lax.with_sharding_constraint, t, accum_shardings)
+        else:
+            constrain = lambda t: t
+        g0 = constrain(g0)
+
+        def acc(carry, mbatch):
+            gsum, loss_sum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            gsum = constrain(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+            return (gsum, loss_sum + loss), metrics
+
+        (gsum, loss_sum), metrics = jax.lax.scan(acc, (g0, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return apply_update(params, opt_state, grads, metrics,
+                            loss_sum / microbatches)
+
+    return train_step

@@ -1,0 +1,332 @@
+"""SDXL-class U-Net (Podell et al., arXiv:2307.01952) — unet-sdxl.
+
+Latent-space U-Net: ch=320, ch_mult=(1,2,4), 2 res blocks per level,
+spatial transformers with per-level depth (1,2,10) (assigned config),
+cross-attention to a 2048-d text context, GroupNorm+SiLU, time embedding
+(+ pooled-context add-embedding, SDXL style).
+
+The architecture is *plan-driven*: ``build_plan`` simulates the skip-stack
+channel flow once and emits a flat list of typed block descriptors; the
+param table and the forward pass both walk that plan, so they cannot
+disagree. Depth-10 transformer stacks run under lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    name: str = "unet"
+    img_res: int = 1024
+    latent_ch: int = 4
+    ch: int = 320
+    ch_mult: Tuple[int, ...] = (1, 2, 4)
+    n_res_blocks: int = 2
+    transformer_depth: Tuple[int, ...] = (1, 2, 10)
+    ctx_dim: int = 2048
+    ctx_len: int = 77
+    head_dim: int = 64
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def t_dim(self) -> int:
+        return self.ch * 4
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    kind: str                  # res | attn | down | up
+    name: str
+    cin: int = 0
+    cout: int = 0
+    depth: int = 0             # transformer depth for attn
+    skip: int = 0              # channels popped from the skip stack (res-up)
+
+
+def build_plan(c: UNetConfig) -> Tuple[List[Block], List[Block], List[Block]]:
+    """Returns (down_plan, mid_plan, up_plan)."""
+    chs = [c.ch * m for m in c.ch_mult]
+    down: List[Block] = []
+    stack = [c.ch]                       # conv_in output
+    cur = c.ch
+    for lvl, ch in enumerate(chs):
+        for i in range(c.n_res_blocks):
+            down.append(Block("res", f"d{lvl}_res{i}", cur, ch))
+            cur = ch
+            if c.transformer_depth[lvl]:
+                down.append(Block("attn", f"d{lvl}_attn{i}", cur, cur,
+                                  depth=c.transformer_depth[lvl]))
+            stack.append(cur)
+        if lvl < len(chs) - 1:
+            down.append(Block("down", f"d{lvl}_down", cur, cur))
+            stack.append(cur)
+    mid = [Block("res", "mid_res0", cur, cur),
+           Block("attn", "mid_attn", cur, cur, depth=c.transformer_depth[-1]),
+           Block("res", "mid_res1", cur, cur)]
+    up: List[Block] = []
+    for lvl in reversed(range(len(chs))):
+        ch = chs[lvl]
+        for i in range(c.n_res_blocks + 1):
+            skip = stack.pop()
+            up.append(Block("res", f"u{lvl}_res{i}", cur + skip, ch, skip=skip))
+            cur = ch
+            if c.transformer_depth[lvl]:
+                up.append(Block("attn", f"u{lvl}_attn{i}", cur, cur,
+                                depth=c.transformer_depth[lvl]))
+        if lvl > 0:
+            up.append(Block("up", f"u{lvl}_up", cur, cur))
+    assert not stack
+    return down, mid, up
+
+
+# ---------------------------------------------------------------------------
+# Param table
+# ---------------------------------------------------------------------------
+
+def _gn(ch, dt, lead=(), la=()):
+    return {"s": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="ones"),
+            "b": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="zeros")}
+
+
+def _res_table(b: Block, c: UNetConfig, dt):
+    t = {
+        "gn1": _gn(b.cin, dt),
+        "conv1": ParamSpec((3, 3, b.cin, b.cout), (None, None, None, "conv_out"), dt),
+        "t_proj": ParamSpec((c.t_dim, b.cout), (None, "conv_out"), dt),
+        "t_proj_b": ParamSpec((b.cout,), ("conv_out",), dt, init="zeros"),
+        "gn2": _gn(b.cout, dt),
+        "conv2": ParamSpec((3, 3, b.cout, b.cout), (None, None, None, "conv_out"), dt),
+    }
+    if b.cin != b.cout:
+        t["skip_proj"] = ParamSpec((1, 1, b.cin, b.cout),
+                                   (None, None, None, "conv_out"), dt)
+    return t
+
+
+def _attn_table(b: Block, c: UNetConfig, dt):
+    ch, d = b.cout, b.depth
+    lead, la = (d,), ("layers",)
+    heads = ch // c.head_dim
+    inner = {
+        "ln1_s": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="ones"),
+        "ln1_b": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="zeros"),
+        "self_q": ParamSpec(lead + (ch, ch), la + (None, "heads_flat"), dt),
+        "self_k": ParamSpec(lead + (ch, ch), la + (None, "heads_flat"), dt),
+        "self_v": ParamSpec(lead + (ch, ch), la + (None, "heads_flat"), dt),
+        "self_o": ParamSpec(lead + (ch, ch), la + ("heads_flat", None), dt),
+        "ln2_s": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="ones"),
+        "ln2_b": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="zeros"),
+        "cross_q": ParamSpec(lead + (ch, ch), la + (None, "heads_flat"), dt),
+        "cross_k": ParamSpec(lead + (c.ctx_dim, ch), la + (None, "heads_flat"), dt),
+        "cross_v": ParamSpec(lead + (c.ctx_dim, ch), la + (None, "heads_flat"), dt),
+        "cross_o": ParamSpec(lead + (ch, ch), la + ("heads_flat", None), dt),
+        "ln3_s": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="ones"),
+        "ln3_b": ParamSpec(lead + (ch,), la + ("conv_out",), dt, init="zeros"),
+        "ff1": ParamSpec(lead + (ch, 8 * ch), la + (None, "mlp"), dt),
+        "ff2": ParamSpec(lead + (4 * ch, ch), la + ("mlp", None), dt),
+    }
+    del heads
+    return {
+        "gn": _gn(ch, dt),
+        "proj_in": ParamSpec((ch, ch), (None, None), dt),
+        "blocks": inner,
+        "proj_out": ParamSpec((ch, ch), (None, None), dt, init="zeros"),
+    }
+
+
+def unet_param_table(c: UNetConfig) -> Dict[str, Any]:
+    dt = c.jdtype
+    down, mid, up = build_plan(c)
+    t: Dict[str, Any] = {
+        "conv_in": ParamSpec((3, 3, c.latent_ch, c.ch),
+                             (None, None, None, "conv_out"), dt),
+        "t_mlp1": ParamSpec((c.ch, c.t_dim), (None, None), dt),
+        "t_mlp2": ParamSpec((c.t_dim, c.t_dim), (None, None), dt),
+        "pool_proj": ParamSpec((c.ctx_dim, c.t_dim), (None, None), dt),
+        "out_gn": _gn(c.ch, dt),
+        "conv_out": ParamSpec((3, 3, c.ch, c.latent_ch),
+                              (None, None, None, None), dt, init="zeros"),
+    }
+    for b in down + mid + up:
+        if b.kind == "res":
+            t[b.name] = _res_table(b, c, dt)
+        elif b.kind == "attn":
+            t[b.name] = _attn_table(b, c, dt)
+        elif b.kind == "down":
+            t[b.name] = ParamSpec((3, 3, b.cin, b.cout),
+                                  (None, None, None, "conv_out"), dt)
+        elif b.kind == "up":
+            t[b.name] = ParamSpec((3, 3, b.cin, b.cout),
+                                  (None, None, None, "conv_out"), dt)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _resblock(p, x, t_emb, dt):
+    h = cm.group_norm(x, p["gn1"]["s"], p["gn1"]["b"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(dt)
+    h = cm.conv2d(h, p["conv1"])
+    h = h + (jax.nn.silu(t_emb.astype(jnp.float32)).astype(dt)
+             @ p["t_proj"] + p["t_proj_b"])[:, None, None, :]
+    h = cm.group_norm(h, p["gn2"]["s"], p["gn2"]["b"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(dt)
+    h = cm.conv2d(h, p["conv2"])
+    skip = cm.conv2d(x, p["skip_proj"]) if "skip_proj" in p else x
+    return h + skip
+
+
+def _mha(q_in, kv_in, wq, wk, wv, wo, head_dim):
+    b, sq, _ = q_in.shape
+    h = wq.shape[-1] // head_dim
+    q = (q_in @ wq).reshape(b, sq, h, head_dim)
+    k = (kv_in @ wk).reshape(b, kv_in.shape[1], h, head_dim)
+    v = (kv_in @ wv).reshape(b, kv_in.shape[1], h, head_dim)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(head_dim))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, -1).astype(q_in.dtype) @ wo
+
+
+def _spatial_transformer(p, x, ctx, cfg: UNetConfig):
+    b, hh, ww, ch = x.shape
+    h = cm.group_norm(x, p["gn"]["s"], p["gn"]["b"])
+    h = h.reshape(b, hh * ww, ch) @ p["proj_in"]
+
+    def block(h, lp):
+        y = cm.layer_norm(h, lp["ln1_s"], lp["ln1_b"])
+        h = h + _mha(y, y, lp["self_q"], lp["self_k"], lp["self_v"],
+                     lp["self_o"], cfg.head_dim)
+        y = cm.layer_norm(h, lp["ln2_s"], lp["ln2_b"])
+        h = h + _mha(y, ctx, lp["cross_q"], lp["cross_k"], lp["cross_v"],
+                     lp["cross_o"], cfg.head_dim)
+        y = cm.layer_norm(h, lp["ln3_s"], lp["ln3_b"])
+        ff = y @ lp["ff1"]
+        gate, val = jnp.split(ff, 2, axis=-1)
+        ff = jax.nn.gelu(gate.astype(jnp.float32)).astype(h.dtype) * val
+        h = h + ff @ lp["ff2"]
+        return h, None
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    h, _ = lax.scan(block, h, p["blocks"])
+    h = h @ p["proj_out"]
+    return x + h.reshape(b, hh, ww, ch)
+
+
+def make_forward(cfg: UNetConfig, mesh: Optional[Any] = None,
+                 batch_axes: Optional[Tuple[str, ...]] = ("data",),
+                 img_res: Optional[int] = None):
+    """forward(params, latents (B,r,r,4), t (B,), ctx (B,77,2048),
+    pooled (B,2048)) -> (B,r,r,4)."""
+    del mesh, batch_axes, img_res
+    down, mid, up = build_plan(cfg)
+    dt = cfg.jdtype
+
+    def forward(params, latents, t, ctx, pooled):
+        ctx = ctx.astype(dt)
+        t_emb = cm.timestep_embedding(t, cfg.ch).astype(dt)
+        t_emb = jax.nn.silu((t_emb @ params["t_mlp1"]).astype(jnp.float32)
+                            ).astype(dt) @ params["t_mlp2"]
+        t_emb = t_emb + pooled.astype(dt) @ params["pool_proj"]
+
+        x = cm.conv2d(latents.astype(dt), params["conv_in"])
+        hs = [x]
+        for b in down:
+            p = params[b.name]
+            if b.kind == "res":
+                x = _resblock(p, x, t_emb, dt)
+                hs.append(x)
+            elif b.kind == "attn":
+                x = _spatial_transformer(p, x, ctx, cfg)
+                hs[-1] = x
+            elif b.kind == "down":
+                x = cm.conv2d(x, p, stride=2)
+                hs.append(x)
+        for b in mid:
+            p = params[b.name]
+            x = _resblock(p, x, t_emb, dt) if b.kind == "res" \
+                else _spatial_transformer(p, x, ctx, cfg)
+        for b in up:
+            p = params[b.name]
+            if b.kind == "res":
+                x = jnp.concatenate([x, hs.pop()], axis=-1)
+                x = _resblock(p, x, t_emb, dt)
+            elif b.kind == "attn":
+                x = _spatial_transformer(p, x, ctx, cfg)
+            elif b.kind == "up":
+                bsz, hh, ww, ch = x.shape
+                x = jax.image.resize(x, (bsz, hh * 2, ww * 2, ch), "nearest")
+                x = cm.conv2d(x, p)
+        assert not hs
+        x = cm.group_norm(x, params["out_gn"]["s"], params["out_gn"]["b"])
+        x = jax.nn.silu(x.astype(jnp.float32)).astype(dt)
+        return cm.conv2d(x, params["conv_out"])
+
+    return forward
+
+
+def make_loss_fn(cfg: UNetConfig, mesh=None, batch_axes=("data",),
+                 img_res: Optional[int] = None):
+    forward = make_forward(cfg, mesh, batch_axes, img_res)
+
+    def loss_fn(params, batch):
+        z0, t = batch["latents"], batch["timesteps"]
+        noise = batch["noise"]
+        abar = jnp.cos((t.astype(jnp.float32) / 1000.0) * jnp.pi / 2) ** 2
+        abar = abar[:, None, None, None]
+        zt = jnp.sqrt(abar) * z0 + jnp.sqrt(1 - abar) * noise
+        eps_hat = forward(params, zt, t, batch["context"],
+                          batch["pooled"]).astype(jnp.float32)
+        loss = jnp.mean(jnp.square(eps_hat - noise))
+        return loss, {"mse": loss}
+
+    return loss_fn
+
+
+def make_sample_step(cfg: UNetConfig, mesh=None, batch_axes=("data",),
+                     img_res: Optional[int] = None, guidance: float = 7.5):
+    forward = make_forward(cfg, mesh, batch_axes, img_res)
+
+    def sample_step(params, zt, t, t_next, ctx, pooled):
+        # CFG: null context = zeros.
+        z2 = jnp.concatenate([zt, zt], axis=0)
+        t2 = jnp.concatenate([t, t], axis=0)
+        c2 = jnp.concatenate([ctx, jnp.zeros_like(ctx)], axis=0)
+        p2 = jnp.concatenate([pooled, jnp.zeros_like(pooled)], axis=0)
+        eps2 = forward(params, z2, t2, c2, p2).astype(jnp.float32)
+        eps_c, eps_u = jnp.split(eps2, 2, axis=0)
+        eps = eps_u + guidance * (eps_c - eps_u)
+        abar = jnp.cos((t.astype(jnp.float32) / 1000.0) * jnp.pi / 2) ** 2
+        abar_n = jnp.cos((t_next.astype(jnp.float32) / 1000.0) * jnp.pi / 2) ** 2
+        abar = abar[:, None, None, None]
+        abar_n = abar_n[:, None, None, None]
+        z0 = (zt - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(abar)
+        return jnp.sqrt(abar_n) * z0 + jnp.sqrt(1 - abar_n) * eps
+
+    return sample_step

@@ -1,0 +1,129 @@
+"""ViT classifier (Dosovitskiy et al., arXiv:2010.11929) — vit-l16.
+
+Pre-LN encoder, learned position embeddings, CLS token, GELU MLP.
+Layers run under lax.scan (stacked params) for flat compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str = "vit"
+    img_res: int = 224
+    patch: int = 16
+    n_layers: int = 24
+    d_model: int = 1024
+    n_heads: int = 16
+    d_ff: int = 4096
+    n_classes: int = 1000
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_tokens(self, img_res: Optional[int] = None) -> int:
+        r = img_res or self.img_res
+        return (r // self.patch) ** 2 + 1
+
+
+def vit_param_table(c: ViTConfig, img_res: Optional[int] = None) -> Dict[str, Any]:
+    dt = c.jdtype
+    L, dm = c.n_layers, c.d_model
+    hd = dm // c.n_heads
+    n_tok = c.n_tokens(img_res)
+    return {
+        "patch_embed": ParamSpec((c.patch, c.patch, 3, dm),
+                                 (None, None, None, "embed"), dt),
+        "patch_bias": ParamSpec((dm,), ("embed",), dt, init="zeros"),
+        "cls": ParamSpec((1, 1, dm), (None, None, "embed"), dt, init="zeros"),
+        "pos_embed": ParamSpec((1, n_tok, dm), (None, None, "embed"), dt,
+                               scale=0.02),
+        "layers": {
+            "ln1_s": ParamSpec((L, dm), ("layers", "embed"), dt, init="ones"),
+            "ln1_b": ParamSpec((L, dm), ("layers", "embed"), dt, init="zeros"),
+            "wq": ParamSpec((L, dm, c.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wk": ParamSpec((L, dm, c.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wv": ParamSpec((L, dm, c.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wo": ParamSpec((L, c.n_heads, hd, dm), ("layers", "heads", "head_dim", "embed"), dt),
+            "ln2_s": ParamSpec((L, dm), ("layers", "embed"), dt, init="ones"),
+            "ln2_b": ParamSpec((L, dm), ("layers", "embed"), dt, init="zeros"),
+            "w_in": ParamSpec((L, dm, c.d_ff), ("layers", "embed", "mlp"), dt),
+            "b_in": ParamSpec((L, c.d_ff), ("layers", "mlp"), dt, init="zeros"),
+            "w_out": ParamSpec((L, c.d_ff, dm), ("layers", "mlp", "embed"), dt),
+            "b_out": ParamSpec((L, dm), ("layers", "embed"), dt, init="zeros"),
+        },
+        "final_ln_s": ParamSpec((dm,), ("embed",), dt, init="ones"),
+        "final_ln_b": ParamSpec((dm,), ("embed",), dt, init="zeros"),
+        "head": ParamSpec((dm, c.n_classes), ("embed", "vocab"), dt),
+    }
+
+
+def _encoder_block(x, lp, cfg: ViTConfig):
+    h = cm.layer_norm(x, lp["ln1_s"], lp["ln1_b"])
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(
+                       jnp.asarray(q.shape[-1], jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    h = cm.layer_norm(x, lp["ln2_s"], lp["ln2_b"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, lp["w_in"]) + lp["b_in"])
+    x = x + jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), lp["w_out"]) + lp["b_out"]
+    return x
+
+
+def make_forward(cfg: ViTConfig, mesh: Optional[Mesh] = None,
+                 batch_axes: Optional[Tuple[str, ...]] = ("data",)):
+    """Returns forward(params, images (B,R,R,3)) -> logits (B, n_classes)."""
+    del mesh, batch_axes   # batch sharding comes from in_shardings
+
+    def forward(params, images):
+        x = cm.conv2d(images.astype(cfg.jdtype), params["patch_embed"],
+                      stride=cfg.patch, padding="VALID") + params["patch_bias"]
+        b = x.shape[0]
+        x = x.reshape(b, -1, cfg.d_model)
+        cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+        x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"]
+
+        def block(x, lp):
+            return _encoder_block(x, lp, cfg), None
+
+        if cfg.remat:
+            block = jax.checkpoint(block)
+        x, _ = lax.scan(block, x, params["layers"])
+        x = cm.layer_norm(x[:, 0], params["final_ln_s"], params["final_ln_b"])
+        return jnp.einsum("bd,dc->bc", x, params["head"])
+
+    return forward
+
+
+def make_loss_fn(cfg: ViTConfig, mesh=None, batch_axes=("data",)):
+    forward = make_forward(cfg, mesh, batch_axes)
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch["images"]).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][:, None],
+                                   axis=-1)[:, 0]
+        nll = jnp.mean(logz - gold)
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                        ).astype(jnp.float32))
+        return nll, {"nll": nll, "acc": acc}
+
+    return loss_fn

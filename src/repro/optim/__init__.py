@@ -1,0 +1,7 @@
+"""Optimizers + schedules (pure-pytree, no external deps)."""
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule,
+                               global_norm)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "clip_by_global_norm", "global_norm"]

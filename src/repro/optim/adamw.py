@@ -1,0 +1,108 @@
+"""AdamW with decoupled weight decay, global-norm clipping, schedules.
+
+Implemented directly over pytrees (optax is not available in this
+environment, and a framework should own its optimizer step anyway: the
+update is where gradient-compression / distributed-overlap tricks hook in).
+
+Distributed notes: moments inherit the parameter sharding (first/second
+moment carry the same PartitionSpec as their parameter), so pjit shards
+optimizer state for free — ZeRO-1-style sharding then comes from assigning
+data-axis specs to the moments in the train-step wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray   # () int32
+    mu: Any             # first moment, same structure as params
+    nu: Any             # second moment
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 lr: jnp.ndarray | float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 decay_mask: Optional[Callable[[str], bool]] = None
+                 ) -> Tuple[Any, AdamWState]:
+    """One AdamW step. Returns (new_params, new_state).
+
+    ``decay_mask(path)`` — True to apply weight decay to that leaf (default:
+    decay everything with ndim >= 2, the usual no-decay-on-bias/norm rule).
+    """
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if decay_mask is not None:
+            do_decay = decay_mask(jax.tree_util.keystr(path))
+        else:
+            do_decay = p.ndim >= 2
+        if do_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    gs = jax.tree.leaves(grads)
+    ms = jax.tree.leaves(state.mu)
+    vs = jax.tree.leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat, gs, ms, vs):
+        np_, nm, nv = upd(path, p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            AdamWState(step=step,
+                       mu=jax.tree_util.tree_unflatten(treedef, new_m),
+                       nu=jax.tree_util.tree_unflatten(treedef, new_v)))
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

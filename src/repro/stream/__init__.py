@@ -1,0 +1,10 @@
+"""Host-side streaming runtime (paper §3.2): spout → workers → monitor."""
+from repro.stream.dispatcher import DispatchStats, StreamDispatcher
+from repro.stream.elastic import ElasticServer, ServeReport
+from repro.stream.monitor import Monitor, MonitorStats
+from repro.stream.spout import FrameBatch, Spout
+from repro.stream.state import StreamStateStore
+
+__all__ = ["Monitor", "MonitorStats", "Spout", "FrameBatch",
+           "StreamDispatcher", "DispatchStats", "ElasticServer",
+           "ServeReport", "StreamStateStore"]

@@ -1,0 +1,51 @@
+"""The spout (paper §3.2 layer 1): frame source, id assignment, batching."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FrameBatch:
+    frames: np.ndarray      # (B, H, W, 3) float32 in [0, 1]
+    frame_ids: np.ndarray   # (B,) int32 global ids (consecutive)
+    n_valid: int            # trailing frames may be padding on the last batch
+    stream_id: str = "default"
+
+
+class Spout:
+    """Wraps an iterator of frames, assigns consecutive ids, emits batches.
+
+    The final partial batch is padded by repeating the last frame so the
+    jitted step always sees a static shape; ``n_valid`` tells the sink how
+    many outputs are real.
+    """
+
+    def __init__(self, frames: Iterator[np.ndarray], batch: int,
+                 start_frame: int = 0, stream_id: str = "default"):
+        self._it = iter(frames)
+        self._batch = batch
+        self._next_id = start_frame
+        self._stream_id = stream_id
+
+    def __iter__(self) -> Iterator[FrameBatch]:
+        buf = []
+        for f in self._it:
+            buf.append(np.asarray(f, np.float32))
+            if len(buf) == self._batch:
+                yield self._emit(buf)
+                buf = []
+        if buf:
+            yield self._emit(buf)
+
+    def _emit(self, buf) -> FrameBatch:
+        n_valid = len(buf)
+        while len(buf) < self._batch:
+            buf.append(buf[-1])
+        ids = np.arange(self._next_id, self._next_id + self._batch,
+                        dtype=np.int32)
+        self._next_id += n_valid
+        return FrameBatch(frames=np.stack(buf), frame_ids=ids,
+                          n_valid=n_valid, stream_id=self._stream_id)

@@ -1,0 +1,59 @@
+"""Keyed per-stream state store (paper §3.3 state + §5 future work).
+
+Holds the shared atmospheric-light state and the frame cursor for every
+live video stream (the paper's future-work item — coordinating A across
+multiple videos — falls out of keying the store by stream id). The store
+is a plain pytree-of-pytrees, so it checkpoints through
+``repro.checkpoint`` and a restarted server continues the *same* coherent
+A trajectory it crashed on.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict
+
+import jax
+
+from repro.core.normalize import AtmoState, init_atmo_state
+
+
+class StreamStateStore:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._states: Dict[str, AtmoState] = {}
+        self._cursors: Dict[str, int] = {}
+
+    def get(self, stream_id: str) -> AtmoState:
+        with self._lock:
+            if stream_id not in self._states:
+                self._states[stream_id] = init_atmo_state()
+                self._cursors[stream_id] = 0
+            return self._states[stream_id]
+
+    def update(self, stream_id: str, state: AtmoState, cursor: int) -> None:
+        with self._lock:
+            self._states[stream_id] = state
+            self._cursors[stream_id] = cursor
+
+    def cursor(self, stream_id: str) -> int:
+        with self._lock:
+            return self._cursors.get(stream_id, 0)
+
+    # -- checkpoint integration --------------------------------------------
+
+    def to_pytree(self):
+        with self._lock:
+            keys = sorted(self._states)
+            return {
+                "keys": list(keys),
+                "states": [jax.device_get(self._states[k]) for k in keys],
+                "cursors": [self._cursors[k] for k in keys],
+            }
+
+    @classmethod
+    def from_pytree(cls, tree) -> "StreamStateStore":
+        store = cls()
+        for k, s, c in zip(tree["keys"], tree["states"], tree["cursors"]):
+            store._states[k] = s
+            store._cursors[k] = int(c)
+        return store

@@ -1,0 +1,11 @@
+# NOTE: deliberately NO XLA_FLAGS / device-count manipulation here — smoke
+# tests and benches must see the real single CPU device. Multi-device tests
+# spawn subprocesses that set --xla_force_host_platform_device_count
+# themselves (tests/test_distributed.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,161 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle.
+
+Sweeps shapes and dtypes per the deliverable spec; hypothesis drives
+randomized shapes/content for the filter kernels.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(1, 8, 8), (2, 24, 32), (1, 33, 17), (3, 48, 64)]
+RADII = [1, 3, 7]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _img(shape, dtype, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.random(shape + (3,), np.float32)).astype(dtype)
+
+
+def _map(shape, dtype, seed=1):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.random(shape, np.float32)).astype(dtype)
+
+
+def _tol(dtype):
+    return 1e-5 if dtype == jnp.float32 else 2e-2
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("radius", RADII)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dark_channel_matches_oracle(shape, radius, dtype):
+    img = _img(shape, dtype)
+    got = ops.dark_channel(img, radius, mode="interpret")
+    want = ref.dark_channel(img, radius)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("radius", RADII)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_box_filter_matches_oracle(shape, radius, dtype):
+    x = _map(shape, dtype)
+    got = ops.box_filter_2d(x, radius, mode="interpret")
+    want = ref.box_filter_2d(x, radius)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype) * 4)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("radius", [1, 5])
+def test_min_filter_matches_oracle(shape, radius):
+    x = _map(shape, jnp.float32)
+    got = ops.min_filter_2d(x, radius, mode="interpret")
+    np.testing.assert_allclose(got, ref.min_filter_2d(x, radius), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_atmolight_matches_oracle(shape):
+    img, t = _img(shape, jnp.float32), _map(shape, jnp.float32)
+    got = ops.atmospheric_light(img, t, k=1, mode="interpret")
+    want = ref.atmospheric_light(img, t, k=1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_atmolight_tiled_grid():
+    """Multi-tile sequential-grid fold must equal the global argmin."""
+    from repro.kernels.atmolight import atmolight_pallas
+    img, t = _img((2, 32, 16), jnp.float32), _map((2, 32, 16), jnp.float32)
+    got = atmolight_pallas(img, t, tile_h=8, interpret=True)
+    want = ref.atmospheric_light(img, t, k=1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("gamma", [1.0, 2.2])
+def test_recover_matches_oracle(shape, dtype, gamma):
+    img = _img(shape, dtype)
+    t = _map(shape, dtype)
+    A = jnp.asarray(np.random.default_rng(2).random((shape[0], 3)),
+                    dtype)
+    got = ops.recover(img, t, A, gamma=gamma, mode="interpret")
+    want = ref.recover(img, t, A)
+    if gamma != 1.0:
+        want = want ** gamma
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype) * 4)
+
+
+@pytest.mark.parametrize("radius", [2, 6])
+def test_guided_filter_matches_oracle(radius):
+    g = _map((2, 32, 24), jnp.float32)
+    p = _map((2, 32, 24), jnp.float32, seed=3)
+    got = ops.guided_filter(g, p, radius, 1e-3, mode="interpret")
+    want = ref.guided_filter(g, p, radius, 1e-3)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("radius", [1, 3, 7])
+def test_masked_kernels_match_spatial_reference(radius):
+    """The halo-path masked kernels (row-validity masks) must match the
+    reduce_window reference used by the sharded pipeline."""
+    from repro.core import spatial
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((2, 24, 32), np.float32))
+    valid = jnp.asarray(
+        np.concatenate([np.zeros(5), np.ones(14), np.zeros(5)]).astype(bool))
+    got = ops.masked_min_filter_2d(x, valid, radius, mode="interpret")
+    want = spatial.masked_min_filter_2d(x, valid, radius)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    got = ops.masked_box_filter_2d(x, valid, radius, mode="interpret")
+    want = spatial.masked_box_filter_2d(x, valid, radius)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_masked_kernels_all_valid_equal_unmasked():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((1, 16, 16), np.float32))
+    valid = jnp.ones((16,), bool)
+    np.testing.assert_allclose(
+        np.asarray(ops.masked_min_filter_2d(x, valid, 3, mode="interpret")),
+        np.asarray(ref.min_filter_2d(x, 3)), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.masked_box_filter_2d(x, valid, 3, mode="interpret")),
+        np.asarray(ref.box_filter_2d(x, 3)), atol=1e-5)
+
+
+# --- hypothesis sweeps -----------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 40), w=st.integers(4, 40), r=st.integers(0, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_min_filter_property(h, w, r, seed):
+    x = _map((1, h, w), jnp.float32, seed)
+    got = np.asarray(ops.min_filter_2d(x, r, mode="interpret"))[0]
+    xn = np.asarray(x)[0]
+    # Oracle-by-definition: brute-force clipped window min.
+    i, j = np.random.default_rng(seed).integers(0, (h, w))
+    want = xn[max(0, i - r):i + r + 1, max(0, j - r):j + r + 1].min()
+    np.testing.assert_allclose(got[i, j], want, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 32), w=st.integers(4, 32), r=st.integers(0, 6),
+       seed=st.integers(0, 2 ** 16))
+def test_box_filter_property(h, w, r, seed):
+    x = _map((1, h, w), jnp.float32, seed)
+    got = np.asarray(ops.box_filter_2d(x, r, mode="interpret"))[0]
+    xn = np.asarray(x)[0]
+    i, j = np.random.default_rng(seed).integers(0, (h, w))
+    win = xn[max(0, i - r):i + r + 1, max(0, j - r):j + r + 1]
+    np.testing.assert_allclose(got[i, j], win.mean(), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,197 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward /
+train step on CPU, asserting output shapes and absence of NaNs. The FULL
+assigned configs are exercised only through the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgreg
+from repro.models import common as cm
+
+
+def _assert_finite(x):
+    assert not bool(jnp.isnan(x).any()) and not bool(jnp.isinf(x).any())
+
+
+# --- LM family ----------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["moonshot-v1-16b-a3b",
+                                  "llama4-scout-17b-a16e",
+                                  "granite-20b", "llama3-8b"])
+def test_lm_smoke_forward_and_decode(arch):
+    from repro.models import transformer as T
+    cfg = cfgreg.get_module(arch).smoke_config()
+    params = cm.init_params(jax.random.key(0), T.lm_param_table(cfg))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    logits, aux = jax.jit(T.make_forward(cfg))(params, toks)
+    assert logits.shape == (2, 16, cfg.vocab)
+    _assert_finite(logits)
+    if cfg.moe_experts:
+        assert float(aux) > 0.0
+
+    loss_fn = jax.jit(T.make_loss_fn(cfg))
+    l, m = loss_fn(params, {"tokens": toks, "labels": jnp.roll(toks, -1, 1)})
+    _assert_finite(l)
+    # sanity: loss near ln(vocab) at init
+    assert abs(float(m["nll"]) - np.log(cfg.vocab)) < 1.5
+
+    prefill = jax.jit(T.make_prefill(cfg, max_len=32))
+    decode = jax.jit(T.make_decode_step(cfg))
+    last, cache = prefill(params, toks[:, :8])
+    assert last.shape == (2, cfg.vocab)
+    lg, cache2 = decode(params, cache, toks[:, 8:9])
+    assert lg.shape == (2, 1, cfg.vocab)
+    assert int(cache2["pos"]) == 9
+    _assert_finite(lg)
+
+
+def test_lm_train_step_reduces_loss():
+    from repro.models import transformer as T
+    from repro.models.steps import make_train_step
+    from repro.optim import adamw_init, cosine_schedule
+    cfg = cfgreg.get_module("llama3-8b").smoke_config()
+    params = cm.init_params(jax.random.key(0), T.lm_param_table(cfg))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(T.make_loss_fn(cfg),
+                                   cosine_schedule(3e-3, 5, 200)))
+    toks = jax.random.randint(jax.random.key(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    first = None
+    for _ in range(30):
+        params, opt, metrics = step(params, opt, batch)
+        first = first if first is not None else float(metrics["loss"])
+    assert float(metrics["loss"]) < first * 0.7
+    assert int(opt.step) == 30
+
+
+# --- diffusion family ----------------------------------------------------------
+
+def test_dit_smoke():
+    from repro.models import dit as M
+    cfg = cfgreg.get_module("dit-l2").smoke_config()
+    params = cm.init_params(jax.random.key(0), M.dit_param_table(cfg))
+    lat = cfg.latent_res
+    z = jax.random.normal(jax.random.key(1), (2, lat, lat, 4))
+    t = jnp.asarray([1, 500])
+    y = jnp.asarray([0, 3])
+    out = jax.jit(M.make_forward(cfg))(params, z, t, y)
+    assert out.shape == (2, lat, lat, 8)
+    _assert_finite(out)
+    z2 = jax.jit(M.make_sample_step(cfg))(params, z, t, t - 1, y)
+    assert z2.shape == z.shape
+    _assert_finite(z2)
+
+
+def test_unet_smoke():
+    from repro.models import unet as M
+    cfg = cfgreg.get_module("unet-sdxl").smoke_config()
+    params = cm.init_params(jax.random.key(0), M.unet_param_table(cfg))
+    lat = cfg.latent_res
+    z = jax.random.normal(jax.random.key(1), (2, lat, lat, 4))
+    ctx = jax.random.normal(jax.random.key(2), (2, cfg.ctx_len, cfg.ctx_dim))
+    pooled = jax.random.normal(jax.random.key(3), (2, cfg.ctx_dim))
+    out = jax.jit(M.make_forward(cfg))(params, z, jnp.asarray([7, 9]),
+                                       ctx, pooled)
+    assert out.shape == (2, lat, lat, 4)
+    _assert_finite(out)
+
+
+def test_unet_plan_stack_balances():
+    from repro.models.unet import build_plan
+    cfg = cfgreg.get_module("unet-sdxl").config()
+    down, mid, up = build_plan(cfg)
+    pushes = 1 + sum(1 for b in down if b.kind in ("res", "down"))
+    pops = sum(1 for b in up if b.kind == "res")
+    assert pushes == pops
+    assert sum(1 for b in mid if b.kind == "attn") == 1
+
+
+# --- vision family ---------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["vit-l16", "resnet-50",
+                                  "efficientnet-b7", "convnext-b"])
+def test_vision_smoke_forward(arch):
+    mod = cfgreg.get_module(arch)
+    cfg = mod.smoke_config()
+    img = jax.random.uniform(jax.random.key(1), (2, cfg.img_res, cfg.img_res, 3))
+    if arch == "vit-l16":
+        from repro.models import vit as M
+        params = cm.init_params(jax.random.key(0), M.vit_param_table(cfg))
+        logits = jax.jit(M.make_forward(cfg))(params, img)
+        n_cls = cfg.n_classes
+    elif arch == "resnet-50":
+        from repro.models import resnet as M
+        params = cm.init_params(jax.random.key(0), M.resnet_param_table(cfg))
+        logits, _ = jax.jit(M.make_forward(cfg, training=False))(params, img)
+        n_cls = cfg.n_classes
+    elif arch == "efficientnet-b7":
+        from repro.models import efficientnet as M
+        params = cm.init_params(jax.random.key(0),
+                                M.efficientnet_param_table(cfg))
+        logits, _ = jax.jit(M.make_forward(cfg, training=False))(params, img)
+        n_cls = cfg.n_classes
+    else:
+        from repro.models import convnext as M
+        params = cm.init_params(jax.random.key(0),
+                                M.convnext_param_table(cfg))
+        logits = jax.jit(M.make_forward(cfg))(params, img)
+        n_cls = cfg.n_classes
+    assert logits.shape == (2, n_cls)
+    _assert_finite(logits)
+
+
+def test_resnet_bn_stats_update_and_merge():
+    from repro.models import resnet as M
+    from repro.models.steps import make_train_step
+    from repro.optim import adamw_init, cosine_schedule
+    cfg = cfgreg.get_module("resnet-50").smoke_config()
+    params = cm.init_params(jax.random.key(0), M.resnet_param_table(cfg))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(M.make_loss_fn(cfg),
+                                   cosine_schedule(1e-3, 5, 100),
+                                   has_bn=True))
+    img = jax.random.uniform(jax.random.key(1), (4, cfg.img_res, cfg.img_res, 3))
+    batch = {"images": img, "labels": jnp.asarray([0, 1, 2, 3])}
+    before = np.asarray(params["stem_bn"]["mean"]).copy()
+    params, opt, metrics = step(params, opt, batch)
+    after = np.asarray(params["stem_bn"]["mean"])
+    assert not np.allclose(before, after), "BN running stats must move"
+    _assert_finite(metrics["loss"])
+
+
+# --- structural invariants ----------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(cfgreg.ASSIGNED_ARCHS))
+def test_param_table_specs_and_shapes_align(arch):
+    """params, pspecs and ShapeDtypeStructs must share one tree structure."""
+    mod = cfgreg.get_module(arch)
+    cfg = mod.smoke_config()
+    fam = mod.FAMILY
+    if fam == "lm":
+        from repro.models.transformer import lm_param_table as table_fn
+    elif arch == "dit-l2":
+        from repro.models.dit import dit_param_table as table_fn
+    elif arch == "unet-sdxl":
+        from repro.models.unet import unet_param_table as table_fn
+    elif arch == "vit-l16":
+        from repro.models.vit import vit_param_table as table_fn
+    elif arch == "resnet-50":
+        from repro.models.resnet import resnet_param_table as table_fn
+    elif arch == "efficientnet-b7":
+        from repro.models.efficientnet import efficientnet_param_table as table_fn
+    else:
+        from repro.models.convnext import convnext_param_table as table_fn
+    table = table_fn(cfg)
+    shapes = cm.param_shapes(table)
+    specs = cm.param_pspecs(table)
+    s1 = jax.tree_util.tree_structure(shapes)
+    s2 = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))
+    assert s1 == s2
+    for sh, spec in zip(jax.tree_util.tree_leaves(shapes),
+                        jax.tree_util.tree_leaves(
+                            specs, is_leaf=lambda x: isinstance(
+                                x, jax.sharding.PartitionSpec))):
+        assert len(spec) <= len(sh.shape)

@@ -1,0 +1,106 @@
+"""Registry + cell-table invariants: 40 assigned cells, documented skips,
+exact assigned configurations."""
+import pytest
+
+from repro import configs as cfgreg
+
+
+def test_forty_assigned_cells():
+    cells = cfgreg.all_cells()
+    assert len(cells) == 40
+    archs = {a for a, _ in cells}
+    assert archs == set(cfgreg.ASSIGNED_ARCHS)
+
+
+def test_documented_skips_are_exactly_three():
+    skips = [(a, s) for a, s in cfgreg.all_cells()
+             if cfgreg.cell_skip_reason(a, s)]
+    assert sorted(skips) == [
+        ("granite-20b", "long_500k"),
+        ("llama3-8b", "long_500k"),
+        ("moonshot-v1-16b-a3b", "long_500k"),
+    ]
+
+
+def test_llama4_long500k_runs():
+    assert cfgreg.cell_skip_reason("llama4-scout-17b-a16e", "long_500k") is None
+
+
+@pytest.mark.parametrize("arch", list(cfgreg.ASSIGNED_ARCHS)
+                         + ["dehaze-dcp", "dehaze-cap"])
+def test_every_arch_has_config_and_smoke(arch):
+    mod = cfgreg.get_module(arch)
+    assert mod.ARCH_ID == arch
+    cfg = mod.config()
+    smoke = mod.smoke_config()
+    assert cfg is not None and smoke is not None
+
+
+def test_exact_assigned_configs():
+    """Spot-check the published numbers (the assignment block verbatim)."""
+    c = cfgreg.get_module("moonshot-v1-16b-a3b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.moe_experts, c.moe_topk) == \
+        (48, 2048, 16, 16, 1408, 163840, 64, 6)
+    c = cfgreg.get_module("llama4-scout-17b-a16e").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.moe_experts, c.moe_topk) == \
+        (48, 5120, 40, 8, 8192, 202048, 16, 1)
+    c = cfgreg.get_module("granite-20b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (52, 6144, 48, 1, 24576, 49152)
+    c = cfgreg.get_module("llama3-8b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 4096, 32, 8, 14336, 128256)
+    c = cfgreg.get_module("dit-l2").config()
+    assert (c.img_res, c.patch, c.n_layers, c.d_model, c.n_heads) == \
+        (256, 2, 24, 1024, 16)
+    c = cfgreg.get_module("unet-sdxl").config()
+    assert (c.img_res, c.ch, c.ch_mult, c.n_res_blocks, c.transformer_depth,
+            c.ctx_dim) == (1024, 320, (1, 2, 4), 2, (1, 2, 10), 2048)
+    c = cfgreg.get_module("vit-l16").config()
+    assert (c.img_res, c.patch, c.n_layers, c.d_model, c.n_heads, c.d_ff) \
+        == (224, 16, 24, 1024, 16, 4096)
+    c = cfgreg.get_module("efficientnet-b7").config()
+    assert (c.img_res, c.width_mult, c.depth_mult) == (600, 2.0, 3.1)
+    c = cfgreg.get_module("resnet-50").config()
+    assert (c.img_res, c.depths, c.width) == (224, (3, 4, 6, 3), 64)
+    c = cfgreg.get_module("convnext-b").config()
+    assert (c.img_res, c.depths, c.dims) == \
+        (224, (3, 3, 27, 3), (128, 256, 512, 1024))
+
+
+def test_lm_param_counts_consistent_with_assigned_configs():
+    """Param-count arithmetic of the assigned configs (note: the assigned
+    granite/moonshot configs compute to ~28B — we implement the assignment
+    verbatim, not the marketing name)."""
+    for arch, lo, hi in [("llama3-8b", 7.5e9, 8.5e9),
+                         ("granite-20b", 26e9, 30e9),
+                         ("moonshot-v1-16b-a3b", 26e9, 30e9),
+                         ("llama4-scout-17b-a16e", 95e9, 110e9)]:
+        n = cfgreg.get_module(arch).config().param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_active_params_moe():
+    c = cfgreg.get_module("moonshot-v1-16b-a3b").config()
+    n_act = c.active_param_count()
+    # ~3B-class active (name says a3b; active incl. embeddings)
+    assert 1.5e9 < n_act < 4.5e9, n_act
+
+
+def test_head_dims_all_128():
+    for arch in ("moonshot-v1-16b-a3b", "llama4-scout-17b-a16e",
+                 "granite-20b", "llama3-8b"):
+        c = cfgreg.get_module(arch).config()
+        assert c.head_dim == 128
+        assert c.d_model == c.n_heads * 128
+
+
+def test_shapes_tables():
+    assert set(cfgreg.LM_SHAPES) == {"train_4k", "prefill_32k",
+                                     "decode_32k", "long_500k"}
+    assert set(cfgreg.DIFFUSION_SHAPES) == {"train_256", "gen_1024",
+                                            "gen_fast", "train_1024"}
+    assert set(cfgreg.VISION_SHAPES) == {"cls_224", "cls_384",
+                                         "serve_b1", "serve_b128"}

@@ -1,0 +1,133 @@
+"""Stream runtime: monitor ordering property, straggler skip, spout, server."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DehazeConfig
+from repro.stream import (ElasticServer, Monitor, Spout, StreamStateStore)
+
+
+# --- monitor (paper §3.2 layer 5) --------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 60), seed=st.integers(0, 10_000))
+def test_monitor_emits_in_order_for_any_completion_order(n, seed):
+    order = np.random.default_rng(seed).permutation(n)
+    got = []
+    mon = Monitor(lambda fid, _: got.append(fid), timeout_s=60.0)
+    for fid in order:
+        mon.put(int(fid), None)
+        mon.poll()
+    mon.close()
+    mon.drain()
+    assert got == list(range(n))
+
+
+def test_monitor_skips_on_timeout():
+    """The paper's 20 ms reader rule: a missing frame is skipped, later
+    frames still flow, and the skip is recorded."""
+    clock = [0.0]
+    got = []
+    mon = Monitor(lambda fid, _: got.append(fid), timeout_s=0.02,
+                  clock=lambda: clock[0])
+    mon.put(0, None)
+    mon.poll()
+    mon.put(2, None)          # frame 1 is missing
+    mon.poll()                # arms the deadline
+    assert got == [0]
+    clock[0] = 0.5            # deadline passes
+    mon.poll()
+    assert got == [0, 2]
+    assert mon.stats.skipped == 1 and mon.stats.skipped_ids == [1]
+    mon.put(1, None)          # late straggler arrives -> dropped
+    mon.poll()
+    assert got == [0, 2]
+
+
+def test_monitor_waits_within_deadline():
+    clock = [0.0]
+    got = []
+    mon = Monitor(lambda fid, _: got.append(fid), timeout_s=0.02,
+                  clock=lambda: clock[0])
+    mon.put(1, None)
+    mon.poll()
+    clock[0] = 0.01           # still within deadline
+    mon.poll()
+    assert got == []          # waiting for frame 0
+    mon.put(0, None)
+    mon.poll()
+    assert got == [0, 1]
+    assert mon.stats.skipped == 0
+
+
+# --- spout -------------------------------------------------------------------
+
+def test_spout_batches_and_pads():
+    frames = [np.full((4, 4, 3), i, np.float32) for i in range(10)]
+    batches = list(Spout(iter(frames), batch=4))
+    assert len(batches) == 3
+    assert [b.n_valid for b in batches] == [4, 4, 2]
+    assert batches[2].frames.shape == (4, 4, 4, 3)
+    # padding repeats the last real frame
+    np.testing.assert_array_equal(batches[2].frames[3], frames[-1])
+    ids = np.concatenate([b.frame_ids[:b.n_valid] for b in batches])
+    np.testing.assert_array_equal(ids, np.arange(10))
+
+
+# --- end-to-end server ---------------------------------------------------------
+
+def test_elastic_server_ordered_and_complete():
+    rng = np.random.default_rng(3)
+    frames = [rng.random((24, 32, 3)).astype(np.float32) for _ in range(21)]
+    srv = ElasticServer(DehazeConfig(kernel_mode="ref", gf_radius=3),
+                        n_workers=3, batch=4, timeout_s=1.0)
+    got = []
+    rep = srv.serve(iter(frames), sink=lambda fid, f: got.append(fid))
+    assert got == list(range(21))
+    assert rep.frames == 21 and rep.skipped == 0
+
+
+def test_elastic_server_straggler_skip():
+    """A pathologically slow worker triggers the paper's skip rule yet the
+    output stays ordered."""
+    rng = np.random.default_rng(4)
+    frames = [rng.random((16, 16, 3)).astype(np.float32) for _ in range(24)]
+    srv = ElasticServer(DehazeConfig(kernel_mode="ref", gf_radius=2),
+                        n_workers=3, batch=4, timeout_s=0.005,
+                        worker_delay_s=lambda w: 0.25 if w == 1 else 0.0)
+    got = []
+    rep = srv.serve(iter(frames), sink=lambda fid, f: got.append(fid))
+    assert got == sorted(got)
+    assert rep.skipped + len(got) == 24
+
+
+def test_elastic_resize_and_stream_state_continuity():
+    rng = np.random.default_rng(5)
+    frames = [rng.random((16, 16, 3)).astype(np.float32) for _ in range(8)]
+    srv = ElasticServer(DehazeConfig(kernel_mode="ref", gf_radius=2),
+                        n_workers=1, batch=4)
+    srv.serve(iter(frames))
+    state1 = srv.store.get("default")
+    assert bool(state1.initialized)
+    srv.resize(3)
+    rep = srv.serve(iter(frames))
+    assert rep.n_workers == 3
+    assert srv.store.cursor("default") == 16
+
+
+def test_stream_state_store_checkpoint_roundtrip():
+    import jax.numpy as jnp
+    from repro.core.normalize import AtmoState
+    store = StreamStateStore()
+    store.update("cam0", AtmoState(
+        A=jnp.asarray([0.5, 0.6, 0.7]),
+        last_update=jnp.asarray(12, jnp.int32),
+        initialized=jnp.asarray(True)), cursor=13)
+    tree = store.to_pytree()
+    restored = StreamStateStore.from_pytree(tree)
+    assert restored.cursor("cam0") == 13
+    np.testing.assert_allclose(np.asarray(restored.get("cam0").A),
+                               [0.5, 0.6, 0.7], atol=1e-6)

@@ -1,0 +1,203 @@
+"""Substrates: optimizer, schedules, checkpointing, data pipelines."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, CheckpointManager,
+                              load_pytree, save_pytree)
+from repro.data import (DiffusionStream, HazeVideoSpec, ImageStream,
+                        TokenStream, generate_haze_video, prefetch_to_device)
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, global_norm)
+
+
+# --- optimizer ----------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    opt = adamw_init(params)
+    loss = lambda p: jnp.sum((p["w"] - 2.0) ** 2) + jnp.sum((p["b"] + 1) ** 2)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(loss)(p)
+        return adamw_update(g, s, p, 0.05, weight_decay=0.0)
+
+    for _ in range(300):
+        params, opt = step(params, opt)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(norm), 20.0)
+    g2, _ = clip_by_global_norm({"a": jnp.full((4,), 0.01)}, 1.0)
+    np.testing.assert_allclose(np.asarray(g2["a"]), 0.01)  # below max: no-op
+
+
+def test_weight_decay_mask_default():
+    """ndim<2 leaves (biases, norms) are not decayed by default."""
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    opt = adamw_init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new, _ = adamw_update(zeros, opt, params, lr=1.0, weight_decay=0.1)
+    assert float(jnp.abs(new["b"] - 1.0).max()) < 1e-6     # no decay
+    assert float(jnp.abs(new["w"] - 1.0).max()) > 1e-3     # decayed
+
+
+def test_microbatched_train_step_matches_plain():
+    """Gradient accumulation (EXPERIMENTS §Perf A3/B4) must be numerically
+    equivalent to the full-batch step."""
+    from repro.models import transformer as T
+    from repro.models.common import init_params
+    from repro.models.steps import make_train_step
+    cfg = T.LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                     head_dim=8, d_ff=64, vocab=64, dtype="float32",
+                     kv_block=16, remat=False)
+    params = init_params(jax.random.key(0), T.lm_param_table(cfg))
+    opt = adamw_init(params)
+    toks = jax.random.randint(jax.random.key(1), (4, 16), 0, 64)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    lr = cosine_schedule(1e-3, 2, 10)
+    s1 = jax.jit(make_train_step(T.make_loss_fn(cfg), lr))
+    s2 = jax.jit(make_train_step(T.make_loss_fn(cfg), lr, microbatches=4))
+    p1, _, m1 = s1(params, opt, batch)
+    p2, _, m2 = s2(params, opt, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, 10, 100, min_ratio=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(lr(jnp.asarray(55))) < 1.0
+    np.testing.assert_allclose(float(lr(jnp.asarray(100))), 0.1, rtol=1e-4)
+
+
+# --- checkpointing ----------------------------------------------------------------
+
+def test_checkpoint_atomic_and_retention():
+    tree = {"a": jnp.arange(10), "b": {"c": jnp.ones((3, 3))}}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree, {"step": s})
+        assert mgr.all_steps() == [3, 4]
+        restored, extra, step = mgr.restore(tree)
+        assert step == 4 and extra["step"] == 4
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(10))
+
+
+def test_checkpoint_structure_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(os.path.join(d, "ck"), {"a": jnp.ones(3)})
+        with pytest.raises(AssertionError):
+            load_pytree(os.path.join(d, "ck"),
+                        {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_async_checkpointer_overlaps_and_surfaces_errors():
+    tree = {"a": jnp.arange(5)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        ck = AsyncCheckpointer(mgr)
+        ck.save(1, tree)
+        ck.wait()
+        assert mgr.all_steps() == [1]
+        # Background-write failures must surface on the next wait().
+        def boom(*a, **k):
+            raise RuntimeError("disk gone")
+        mgr.save = boom
+        ck.save(2, tree)
+        with pytest.raises(RuntimeError, match="disk gone"):
+            ck.wait()
+
+
+def test_train_resume_equivalence():
+    """Fault tolerance: save at step k, restart, continue — trajectories
+    must match an uninterrupted run exactly."""
+    from repro.models import transformer as T
+    from repro.models.common import init_params
+    from repro.models.steps import make_train_step
+    from repro import configs as cfgreg
+    cfg = cfgreg.get_module("llama3-8b").smoke_config()
+    params = init_params(jax.random.key(0), T.lm_param_table(cfg))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(T.make_loss_fn(cfg),
+                                   cosine_schedule(1e-3, 2, 50)))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+    # Uninterrupted: 6 steps.
+    p1, o1 = params, opt
+    for _ in range(6):
+        p1, o1, _ = step(p1, o1, batch)
+
+    # Interrupted at 3, checkpoint, restore, continue.
+    p2, o2 = params, opt
+    for _ in range(3):
+        p2, o2, _ = step(p2, o2, batch)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(3, {"params": p2, "opt": o2})
+        restored, _, _ = mgr.restore({"params": p2, "opt": o2})
+    p3, o3 = restored["params"], restored["opt"]
+    for _ in range(3):
+        p3, o3, _ = step(p3, o3, batch)
+
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+# --- data ----------------------------------------------------------------------
+
+def test_haze_video_physics_consistency():
+    spec = HazeVideoSpec(height=32, width=40, n_frames=6, seed=3)
+    vid = generate_haze_video(spec)
+    assert vid.hazy.shape == (6, 32, 40, 3)
+    # I = J t + A(1-t) must hold exactly (pre-clip).
+    i = 2
+    recon = (vid.clear[i] * vid.t[i][..., None]
+             + vid.A[i] * (1 - vid.t[i][..., None]))
+    np.testing.assert_allclose(np.clip(recon, 0, 1), vid.hazy[i], atol=1e-6)
+    # determinism
+    vid2 = generate_haze_video(spec)
+    np.testing.assert_array_equal(vid.hazy, vid2.hazy)
+
+
+def test_token_stream_shapes_and_labels():
+    it = iter(TokenStream(batch=4, seq_len=16, vocab=100, seed=0))
+    b = next(it)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert b["tokens"].max() < 100
+
+
+def test_image_stream_learnable_signal():
+    it = iter(ImageStream(batch=32, height=8, width=8, n_classes=8, seed=0))
+    b = next(it)
+    means = [b["images"][b["labels"] % 8 == k].mean() for k in (0, 7)]
+    assert abs(means[0] - means[1]) > 0.3   # class-dependent mean
+
+
+def test_diffusion_stream_keys():
+    it = iter(DiffusionStream(batch=2, latent_res=8, channels=4,
+                              ctx_len=7, ctx_dim=16))
+    b = next(it)
+    assert set(b) == {"latents", "timesteps", "labels", "context"}
+
+
+def test_prefetch_to_device_preserves_order():
+    src = ({"x": np.full((2,), i, np.float32)} for i in range(5))
+    out = [int(b["x"][0]) for b in prefetch_to_device(iter(src), size=2)]
+    assert out == [0, 1, 2, 3, 4]
