@@ -7,6 +7,7 @@ expectations for the TPU kernels (bytes-bound estimates at v5e HBM BW).
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Tuple
 
@@ -18,6 +19,8 @@ from repro.kernels import ops
 
 HBM_BW = 819e9
 SHAPES = [(8, 240, 320), (4, 480, 640), (2, 576, 1024)]
+if os.environ.get("REPRO_BENCH_SMOKE"):        # tiny shapes for CI smoke
+    SHAPES = [(2, 32, 40)]
 
 
 def _timeit(fn, *args, iters=5):
@@ -60,7 +63,53 @@ def rows() -> List[Tuple[str, float, str]]:
         tpu_est = (2 * img.nbytes + tmap.nbytes) / HBM_BW
         out.append((f"kernels/recover/{tag}", t * 1e6,
                     f"tpu_roofline_us={tpu_est * 1e6:.1f}"))
+
+        out.extend(_staged_vs_fused_rows(img, tag))
     return out
+
+
+def _staged_vs_fused_rows(img: jnp.ndarray, tag: str):
+    """The tentpole comparison: four per-stage launches (device sync between
+    each, the pre-megakernel dispatch pattern) vs the single-pass fused op.
+    GB/s is derived from the fused op's minimal HBM traffic (read I, write
+    J + t) so the two rows are directly comparable.
+    """
+    b = img.shape[0]
+    ids = jnp.arange(b, dtype=jnp.int32)
+    A0 = jnp.ones((3,), jnp.float32)
+    k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+    init = jnp.asarray(False)
+    kw = dict(radius=7, omega=0.95, refine=True, gf_radius=20, gf_eps=1e-3,
+              t0=0.1, gamma=1.0, period=8, lam=0.05)
+    min_bytes = 2 * img.nbytes + img.nbytes // 3      # I in, J + t out
+
+    dc = jax.jit(lambda x: 1.0 - 0.95 * ops.dark_channel(x, 7, "ref"))
+    al = jax.jit(lambda x, t: ops.atmospheric_light(x, t, 1, "ref"))
+    from repro.kernels.ref import LUMA_WEIGHTS
+    gf = jax.jit(lambda x, t: jnp.clip(ops.guided_filter(
+        x @ jnp.asarray(LUMA_WEIGHTS, x.dtype), t, 20, 1e-3, "ref"),
+        0.0, 1.0))
+    rc = jax.jit(lambda x, t, a: ops.recover(x, t, a, mode="ref"))
+
+    def staged():
+        t_raw = jax.block_until_ready(dc(img))
+        A = jax.block_until_ready(al(img, t_raw))
+        t = jax.block_until_ready(gf(img, t_raw))
+        return rc(img, t, A)
+
+    fused = jax.jit(lambda x: ops.fused_dehaze_dcp(
+        x, ids, A0, k0, init, mode="auto", **kw)[0])
+
+    t_staged = _timeit(staged)
+    t_fused = _timeit(fused, img)
+    rows = [
+        (f"kernels/dehaze_staged/{tag}", t_staged * 1e6 / b,
+         f"gbps={min_bytes / t_staged / 1e9:.2f}"),
+        (f"kernels/dehaze_fused/{tag}", t_fused * 1e6 / b,
+         f"gbps={min_bytes / t_fused / 1e9:.2f}"
+         f";speedup_vs_staged={t_staged / t_fused:.2f}x"),
+    ]
+    return rows
 
 
 if __name__ == "__main__":

@@ -19,13 +19,14 @@ import jax.numpy as jnp
 
 from repro.core.config import DehazeConfig
 from repro.kernels import ops
+from repro.kernels.ref import LUMA_WEIGHTS
 
 TransmissionEstimator = Callable[[jnp.ndarray, jnp.ndarray, DehazeConfig], jnp.ndarray]
 
 
 def luminance(img: jnp.ndarray) -> jnp.ndarray:
     """Rec.601 luma, used as the guided-filter guide."""
-    w = jnp.asarray([0.299, 0.587, 0.114], img.dtype)
+    w = jnp.asarray(LUMA_WEIGHTS, img.dtype)
     return img @ w
 
 
@@ -107,3 +108,45 @@ def generate_haze_free(frames: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
                        cfg: DehazeConfig) -> jnp.ndarray:
     """Paper Eq. 8 with the serving tone-curve epilogue."""
     return ops.recover(frames, t, A, cfg.t0, cfg.gamma, cfg.kernel_mode)
+
+
+# ---------------------------------------------------------------------------
+# Fused megakernel path (all three components in one launch)
+# ---------------------------------------------------------------------------
+
+def supports_fused(cfg: DehazeConfig) -> bool:
+    """The single-pass megakernel covers DCP with the Eq. 6 (k=1) estimator.
+
+    CAP and the robust top-k / recompute variants fall back to the
+    per-stage chain (ROADMAP open items track the CAP fused variant).
+    """
+    return (cfg.algorithm == "dcp" and cfg.topk == 1
+            and not cfg.recompute_t_with_final_a)
+
+
+def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
+                 cfg: DehazeConfig):
+    """Run components 1-3 + the §3.3 EMA as one fused op.
+
+    Returns (J, t, a_seq, new AtmoState); semantics match the per-stage
+    chain in ``pipeline.make_dehaze_step``.
+    """
+    from repro.core.normalize import AtmoState
+    J, t, a_seq, a_fin, k_fin = ops.fused_dehaze_dcp(
+        frames, frame_ids, state.A, state.last_update, state.initialized,
+        radius=cfg.patch_radius, omega=cfg.omega, refine=cfg.refine,
+        gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, t0=cfg.t0,
+        gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
+        mode=cfg.kernel_mode)
+    new_state = AtmoState(A=a_fin, last_update=k_fin,
+                          initialized=jnp.asarray(True))
+    return J, t, a_seq, new_state
+
+
+def fused_transmission(frames: jnp.ndarray, a_saved: jnp.ndarray,
+                       cfg: DehazeConfig):
+    """Fused t-map + argmin-t candidate stage for the sharded step."""
+    return ops.fused_transmission_dcp(
+        frames, a_saved, radius=cfg.patch_radius, omega=cfg.omega,
+        refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
+        mode=cfg.kernel_mode)

@@ -1,0 +1,36 @@
+"""Version shims for JAX APIs that moved between releases.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+replication-check kwarg is ``check_rep``) to the top level (where it is
+``check_vma``). The pipeline and model step builders call this wrapper so
+the repo runs on both sides of the move.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, explicit: bool = False):
+    """``jax.make_mesh`` across versions: pass ``axis_types`` only where the
+    kwarg exists (older releases have neither it nor ``AxisType``)."""
+    import inspect
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        kind = (jax.sharding.AxisType.Explicit if explicit
+                else jax.sharding.AxisType.Auto)
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(kind,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    import inspect
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+    # The top-level graduation and the check_rep -> check_vma rename were
+    # separate changes; key the kwarg off the signature, not the location.
+    kwarg = ("check_vma" if "check_vma" in inspect.signature(fn).parameters
+             else "check_rep")
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kwarg: check_vma})

@@ -37,7 +37,9 @@ class DehazeConfig:
 
     # Dataflow options.
     recompute_t_with_final_a: bool = False # extra accuracy pass (beyond paper)
-    kernel_mode: str = "auto"              # ref | pallas | interpret | auto
+    kernel_mode: str = "auto"              # ref | pallas | interpret | fused | auto
+    #   "fused": single-pass megakernel path (DCP only; other configs fall
+    #   back to the per-stage chain — see core.algorithms.supports_fused).
     dtype: str = "float32"
 
     # Perf levers for the sharded pipeline (EXPERIMENTS.md §Perf):
@@ -47,6 +49,8 @@ class DehazeConfig:
 
     def validate(self) -> "DehazeConfig":
         assert self.algorithm in ("dcp", "cap"), self.algorithm
+        assert self.kernel_mode in ("auto", "ref", "pallas", "interpret",
+                                    "fused"), self.kernel_mode
         assert 0.0 <= self.lam <= 1.0
         assert self.update_period >= 1
         assert self.patch_radius >= 0 and self.gf_radius >= 0

@@ -24,6 +24,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import algorithms as alg
+from repro.core import compat
 from repro.core import spatial
 from repro.core.config import DehazeConfig
 from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
@@ -44,8 +45,21 @@ class DehazeOutput:
 # ---------------------------------------------------------------------------
 
 def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
-    """Returns step(frames (B,H,W,3), frame_ids (B,), state) -> DehazeOutput."""
+    """Returns step(frames (B,H,W,3), frame_ids (B,), state) -> DehazeOutput.
+
+    With ``cfg.kernel_mode == "fused"`` (and a config the megakernel covers,
+    see ``algorithms.supports_fused``) the whole component chain runs as one
+    single-pass launch; otherwise the per-stage chain below.
+    """
     cfg.validate()
+    if cfg.kernel_mode == "fused" and alg.supports_fused(cfg):
+        def fused_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
+                       state: AtmoState) -> DehazeOutput:
+            out, t, a_seq, new_state = alg.fused_dehaze(
+                frames, frame_ids, state, cfg)
+            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+        return fused_step
+
     t_est = alg.get_transmission_estimator(cfg.algorithm)
     scan = ema_scan_associative if associative else ema_scan
 
@@ -95,14 +109,21 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
     """
     cfg = cfg.validate()
     t_est = alg.get_transmission_estimator(cfg.algorithm)
+    del t_est  # estimators are inlined below (halo-aware masked forms)
     n_h = mesh.shape[height_axis] if height_axis else 1
     halo = cfg.patch_radius + (2 * cfg.gf_radius if cfg.refine else 0)
+    # The megakernel path needs the full frame height in VMEM; with height
+    # sharding (halos) we fall back to the masked per-stage chain (the
+    # fused halo step is a ROADMAP open item).
+    use_fused = (cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
+                 and not (height_axis and n_h > 1))
 
     fspec = P(batch_axes, height_axis) if height_axis else P(batch_axes)
     ispec = P(batch_axes)
 
-    def local_step(frames, frame_ids, state):
-        b_loc = frames.shape[0]
+    def staged_t_and_candidates(frames, state):
+        """Per-stage chain: masked filters over halo-extended blocks ->
+        (refined t, per-frame (t_min, rgb) candidates)."""
         hdt = jnp.dtype(cfg.halo_dtype)
 
         # Per-pixel pre-maps (no neighborhood -> computable pre-exchange).
@@ -152,7 +173,8 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             else slice(None)
         t_raw = t_raw_ext[:, core]
 
-        # --- Component 2: candidates + state sync (paper's A broadcast). ---
+        # --- Component 2: per-frame candidates (paper Eq. 6). ---
+        b_loc = frames.shape[0]
         flat_t = t_raw.reshape(b_loc, -1)
         jmin = jnp.argmin(flat_t, axis=-1)
         t_min = jnp.take_along_axis(flat_t, jmin[:, None], axis=-1)[:, 0]
@@ -161,7 +183,25 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
         if height_axis and n_h > 1:
             rgb = _gather_argmin_over_model(t_min, rgb, height_axis)
 
-        # All-gather candidates over the frame axes, scan, slice local part.
+        # --- Refinement on the halo-extended block. ---
+        if cfg.refine:
+            t_ext = spatial.masked_guided_filter(
+                guide_ext, t_raw_ext, valid, cfg.gf_radius, cfg.gf_eps)
+            t = jnp.clip(t_ext[:, core], 0.0, 1.0)
+        else:
+            t = t_raw
+        return t, t_min, rgb
+
+    def local_step(frames, frame_ids, state):
+        b_loc = frames.shape[0]
+        if use_fused:
+            # Components 1 + 2 candidates + refinement in ONE launch.
+            t, t_min, rgb = alg.fused_transmission(frames, state.A, cfg)
+        else:
+            t, t_min, rgb = staged_t_and_candidates(frames, state)
+
+        # State sync: all-gather candidates over the frame axes, scan,
+        # slice the local part (the paper's A broadcast, minus the race).
         a_all = lax.all_gather(rgb, batch_axes, axis=0, tiled=True)
         ids_all = lax.all_gather(frame_ids, batch_axes, axis=0, tiled=True)
         a_seq_all, new_state = ema_scan_associative(
@@ -170,19 +210,13 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
         a_seq = lax.dynamic_slice_in_dim(a_seq_all, didx * b_loc, b_loc)
         a_seq = a_seq.astype(frames.dtype)
 
-        # --- Refinement + Component 3 on the core block. ---
-        if cfg.refine:
-            t_ext = spatial.masked_guided_filter(
-                guide_ext, t_raw_ext, valid, cfg.gf_radius, cfg.gf_eps)
-            t = jnp.clip(t_ext[:, core], 0.0, 1.0)
-        else:
-            t = t_raw
+        # --- Component 3 on the core block. ---
         out = alg.generate_haze_free(frames, t, a_seq,
                                      dataclasses.replace(cfg, kernel_mode="ref"))
         return DehazeOutput(out, t, a_seq, new_state)
 
     state_spec = AtmoState(A=P(), last_update=P(), initialized=P())
-    step = jax.shard_map(
+    step = compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(fspec, ispec, state_spec),
         out_specs=DehazeOutput(frames=fspec, transmission=fspec,

@@ -5,7 +5,9 @@ Modules:
   boxfilter     — running-sum separable box filter (guided-filter core)
   recover       — fused haze-free recovery epilogue (Eq. 8)
   atmolight     — argmin-t atmospheric light reduction (Eq. 6)
-  ops           — jitted dispatch wrappers (ref | pallas | interpret)
+  fused         — single-pass DCP megakernel (Eq. 3+6+9+8 in one launch)
+  tuning        — block-size/tiling registry + autotune sweep
+  ops           — jitted dispatch wrappers (ref | pallas | interpret | fused)
   ref           — pure-jnp oracles for all of the above
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, tuning  # noqa: F401

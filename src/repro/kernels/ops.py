@@ -5,6 +5,12 @@ Every op has three execution paths selected by ``mode``:
   - ``"pallas"``   : compiled Pallas TPU kernel (default on TPU)
   - ``"interpret"``: Pallas kernel body interpreted on CPU (tests)
 
+``"fused"`` is a fourth, *pipeline-level* mode: instead of one launch per
+stage, the whole DCP chain runs as the single-pass megakernel in
+``kernels.fused`` (see ``fused_dehaze_dcp`` below). Its execution substrate
+is still resolved to ref/pallas/interpret per backend/env, so the fused
+path also runs on the CPU CI container.
+
 Core code calls these and never touches pallas_call directly, so the same
 pipeline runs on the CPU CI container and on a real pod unchanged.
 """
@@ -12,27 +18,43 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Literal
+from typing import Literal, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels import tuning
 from repro.kernels.dark_channel import dark_channel_pallas, min_filter_2d_pallas
 from repro.kernels.boxfilter import box_filter_2d_pallas
 from repro.kernels.recover import recover_pallas
 from repro.kernels.atmolight import atmolight_pallas
+from repro.kernels.fused import (fused_dehaze_dcp_pallas,
+                                 fused_transmission_pallas)
 
-Mode = Literal["auto", "ref", "pallas", "interpret"]
+Mode = Literal["auto", "ref", "pallas", "interpret", "fused"]
 
 
 def resolve_mode(mode: Mode = "auto") -> str:
-    if mode != "auto":
-        return mode
-    env = os.environ.get("REPRO_KERNEL_MODE")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    """Resolve to an execution substrate: ref | pallas | interpret.
+
+    ``"fused"`` is a pipeline-level mode (it selects *which* ops run, not
+    *how*); here it resolves like "auto": env ``REPRO_KERNEL_MODE`` if it
+    names a substrate, else Pallas on TPU and the XLA oracle elsewhere.
+    """
+    m = mode
+    if m == "auto":
+        m = os.environ.get("REPRO_KERNEL_MODE", "") or \
+            ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if m == "fused":
+        env = os.environ.get("REPRO_KERNEL_MODE", "")
+        m = env if env in ("ref", "pallas", "interpret") else \
+            ("pallas" if jax.default_backend() == "tpu" else "ref")
+    return m
+
+
+# Alias used by the fused ops, where the distinction matters for readers.
+resolve_substrate = resolve_mode
 
 
 def _batched(x: jnp.ndarray, rank: int):
@@ -149,3 +171,61 @@ def recover(img: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray, t0: float = 0.1,
 def cap_depth(img: jnp.ndarray, w0: float, w1: float, w2: float) -> jnp.ndarray:
     """CAP linear depth model — pure elementwise, XLA fuses it optimally."""
     return _ref.cap_depth(img, w0, w1, w2)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass DCP megakernel (kernels.fused)
+# ---------------------------------------------------------------------------
+
+def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
+                     A_saved: jnp.ndarray, last_update: jnp.ndarray,
+                     initialized: jnp.ndarray, *, radius: int, omega: float,
+                     refine: bool, gf_radius: int, gf_eps: float, t0: float,
+                     gamma: float, period: int, lam: float,
+                     frames_per_block: int = 0,
+                     mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Whole DCP chain in one launch: (..., H, W, 3) -> (J, t, a_seq, A, k).
+
+    ``frames_per_block <= 0`` resolves the tile from the tuning registry
+    (env ``REPRO_TUNE_FUSED_DCP`` > ``results/kernel_tuning.json`` > 1).
+    """
+    m = resolve_substrate(mode)
+    flat, lead = _batched(img, 3)
+    flat_ids = frame_ids.reshape(-1)
+    if m == "ref":
+        j, t, a_seq, a_fin, k_fin = _ref.fused_dehaze_dcp(
+            flat, flat_ids, A_saved, last_update, initialized, radius=radius,
+            omega=omega, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+            t0=t0, gamma=gamma, period=period, lam=lam)
+    else:
+        if frames_per_block <= 0:
+            frames_per_block = int(tuning.get_params(
+                "fused_dcp", flat.shape[:3]).get("frames_per_block", 1))
+        j, t, a_seq, a_fin, k_fin = fused_dehaze_dcp_pallas(
+            flat, flat_ids, A_saved, last_update, initialized, radius=radius,
+            omega=omega, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+            t0=t0, gamma=gamma, period=period, lam=lam,
+            frames_per_block=frames_per_block,
+            interpret=(m == "interpret"))
+    return (j.reshape(lead + j.shape[1:]), t.reshape(lead + t.shape[1:]),
+            a_seq.reshape(lead + (3,)), a_fin, k_fin)
+
+
+def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
+                           radius: int, omega: float, refine: bool,
+                           gf_radius: int, gf_eps: float,
+                           mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Fused t-map + argmin-t candidates (the sharded-step stage):
+    (..., H, W, 3) -> (t, t_min (...,), cand_rgb (..., 3))."""
+    m = resolve_substrate(mode)
+    flat, lead = _batched(img, 3)
+    if m == "ref":
+        t, t_min, cand = _ref.fused_transmission_dcp(
+            flat, A_saved, radius=radius, omega=omega, refine=refine,
+            gf_radius=gf_radius, gf_eps=gf_eps)
+    else:
+        t, t_min, cand = fused_transmission_pallas(
+            flat, A_saved, radius=radius, omega=omega, refine=refine,
+            gf_radius=gf_radius, gf_eps=gf_eps, interpret=(m == "interpret"))
+    return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
+            cand.reshape(lead + (3,)))

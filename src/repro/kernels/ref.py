@@ -139,3 +139,83 @@ def cap_depth(img: jnp.ndarray, w0: float, w1: float, w2: float) -> jnp.ndarray:
     mn = jnp.min(img, axis=-1)
     s = jnp.where(v > 0, (v - mn) / jnp.maximum(v, 1e-12), 0.0)
     return (w0 + w1 * v + w2 * s).astype(img.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused DCP megakernel oracle (paper Eq. 3 + 6 + 9 + 8 in one logical op)
+# ---------------------------------------------------------------------------
+
+# Rec.601 luma — THE guided-filter guide definition. The fused kernel, the
+# per-stage chain (core.algorithms.luminance) and the benchmarks all share
+# these weights; parity between them is asserted to 1e-5 in CI.
+LUMA_WEIGHTS = (0.299, 0.587, 0.114)
+
+
+def luminance(img: jnp.ndarray) -> jnp.ndarray:
+    """Rec.601 luma in float32 — the guided-filter guide of the fused op."""
+    w = jnp.asarray(LUMA_WEIGHTS, jnp.float32)
+    return img.astype(jnp.float32) @ w
+
+
+def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
+                           radius: int, omega: float, refine: bool,
+                           gf_radius: int, gf_eps: float):
+    """Oracle for ``fused.fused_transmission_pallas``.
+
+    (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)): Eq. 3 transmission from the
+    saved A, guided-filter refinement, and the per-frame argmin-t candidate.
+    """
+    b = img.shape[0]
+    x = img.astype(jnp.float32)
+    a0 = jnp.maximum(A_saved.astype(jnp.float32), 1e-3)
+    pre = jnp.min(x / a0, axis=-1)
+    t_raw = 1.0 - omega * min_filter_2d(pre, radius)
+    flat_t = t_raw.reshape(b, -1)
+    j = jnp.argmin(flat_t, axis=-1)
+    t_min = jnp.take_along_axis(flat_t, j[:, None], axis=-1)[:, 0]
+    cand = jnp.take_along_axis(x.reshape(b, -1, 3), j[:, None, None], axis=1)[:, 0]
+    if refine:
+        t = jnp.clip(guided_filter(luminance(x), t_raw, gf_radius, gf_eps),
+                     0.0, 1.0)
+    else:
+        t = t_raw
+    return t.astype(img.dtype), t_min, cand.astype(img.dtype)
+
+
+def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
+                     A_saved: jnp.ndarray, last_update: jnp.ndarray,
+                     initialized: jnp.ndarray, *, radius: int, omega: float,
+                     refine: bool, gf_radius: int, gf_eps: float, t0: float,
+                     gamma: float, period: int, lam: float):
+    """Oracle for ``fused.fused_dehaze_dcp_pallas``: (J, t, a_seq, A_fin, k_fin).
+
+    Composes the per-stage oracles plus the Eq. 9 EMA recurrence (lax.scan)
+    — the sequential scan the megakernel realizes via its grid carry.
+    """
+    x = img.astype(jnp.float32)
+    t, _, cand = fused_transmission_dcp(
+        x, A_saved, radius=radius, omega=omega, refine=refine,
+        gf_radius=gf_radius, gf_eps=gf_eps)
+
+    def step(carry, inp):
+        A_prev, k, inited = carry
+        c, fid = inp
+        bootstrap = jnp.logical_not(inited)
+        do = jnp.logical_or(bootstrap, (fid - k) >= period)
+        target = jnp.where(bootstrap, c, lam * c + (1.0 - lam) * A_prev)
+        A = jnp.where(do, target, A_prev)
+        k_next = jnp.where(do, fid, k)
+        return (A, k_next, jnp.asarray(True)), A
+
+    (A_fin, k_fin, _), a_seq = lax.scan(
+        step,
+        (A_saved.astype(jnp.float32), last_update.astype(jnp.int32),
+         initialized.astype(bool)),
+        (cand.astype(jnp.float32), frame_ids.astype(jnp.int32)))
+    tt = jnp.maximum(t.astype(jnp.float32), t0)[..., None]
+    A_b = a_seq[:, None, None, :]
+    J = jnp.clip((x - A_b) / tt + A_b, 0.0, 1.0)
+    if gamma != 1.0:
+        J = J ** gamma
+    return (J.astype(img.dtype), t.astype(img.dtype), a_seq,
+            A_fin, k_fin.astype(jnp.int32))

@@ -1,0 +1,169 @@
+"""Block-size/tiling registry + autotune sweep for the Pallas kernels.
+
+Tile parameters (frames-per-block for the fused megakernel, row-tile height
+for the atmolight reduction) are resolved per (op, shape-bucket) through a
+three-level lookup, highest priority first:
+
+  1. env override   ``REPRO_TUNE_<OP>`` — a JSON object, e.g.
+                    ``REPRO_TUNE_FUSED_DCP='{"frames_per_block": 4}'``
+  2. persisted table a JSON file written by :func:`autotune`, default
+                    ``results/kernel_tuning.json`` (override the path with
+                    ``REPRO_KERNEL_TUNING``)
+  3. built-in default
+
+:func:`autotune` times a caller-supplied builder over a candidate sweep on
+the *current* backend and persists the winner, so a one-off
+``python -m repro.kernels.tuning`` on the target pod bakes real
+measurements into the table that every later run picks up.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+
+DEFAULTS: Dict[str, Dict[str, Any]] = {
+    "fused_dcp": {"frames_per_block": 1},
+    "atmolight": {"tile_h": 0},          # 0 = whole frame per grid step
+}
+
+_ENV_PATH = "REPRO_KERNEL_TUNING"
+_DEFAULT_PATH = Path("results") / "kernel_tuning.json"
+
+
+def table_path() -> Path:
+    return Path(os.environ.get(_ENV_PATH, str(_DEFAULT_PATH)))
+
+
+def shape_bucket(shape: Iterable[int]) -> str:
+    return "x".join(str(int(s)) for s in shape)
+
+
+# (path, mtime) -> parsed table. get_params sits on the per-batch dispatch
+# path, so eager (non-jitted) streaming must not pay a disk read per frame.
+_TABLE_CACHE: Dict[str, tuple] = {}
+
+
+def load_table(path: Optional[Path] = None) -> Dict[str, Dict[str, Dict[str, Any]]]:
+    p = path or table_path()
+    key = str(p)
+    try:
+        mtime = os.stat(p).st_mtime_ns
+    except OSError:
+        _TABLE_CACHE[key] = (None, {})
+        return {}
+    cached = _TABLE_CACHE.get(key)
+    if cached and cached[0] == mtime:
+        return cached[1]
+    try:
+        with open(p) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        table = {}
+    _TABLE_CACHE[key] = (mtime, table)
+    return table
+
+
+def save_table(table: Dict[str, Any], path: Optional[Path] = None) -> Path:
+    p = path or table_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+    # Update the cache directly: mtime granularity can be coarser than a
+    # save-then-load round trip within one process.
+    _TABLE_CACHE[str(p)] = (os.stat(p).st_mtime_ns, table)
+    return p
+
+
+def get_params(op: str, shape: Iterable[int]) -> Dict[str, Any]:
+    """Resolved tile params for ``op`` at ``shape`` (env > table > default)."""
+    params = dict(DEFAULTS.get(op, {}))
+    table = load_table()
+    params.update(table.get(op, {}).get(shape_bucket(shape), {}))
+    env = os.environ.get(f"REPRO_TUNE_{op.upper()}")
+    if env:
+        try:
+            params.update(json.loads(env))
+        except ValueError:
+            pass                         # malformed override -> ignore
+    return params
+
+
+def _time_callable(fn: Callable[[], Any], iters: int = 3) -> float:
+    jax.block_until_ready(fn())          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def autotune(op: str, shape: Iterable[int],
+             candidates: Iterable[Dict[str, Any]],
+             build: Callable[[Dict[str, Any]], Callable[[], Any]],
+             iters: int = 3, persist: bool = True) -> Dict[str, Any]:
+    """Sweep ``candidates``, persist and return the fastest param dict.
+
+    ``build(params)`` returns a no-arg callable to time; candidates whose
+    build or execution raises are skipped (e.g. a tile that does not divide
+    the shape, or VMEM overflow on a real TPU).
+    """
+    best, best_t = dict(DEFAULTS.get(op, {})), float("inf")
+    for params in candidates:
+        try:
+            t = _time_callable(build(params), iters=iters)
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = dict(params), t
+    if persist:
+        table = load_table()
+        table.setdefault(op, {})[shape_bucket(shape)] = best
+        save_table(table)
+    return best
+
+
+def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
+                   candidates=(1, 2, 4), iters: int = 3,
+                   persist: bool = True) -> Dict[str, Any]:
+    """Sweep ``frames_per_block`` for the fused DCP megakernel.
+
+    Uses the dispatch layer, so it times whatever substrate the current
+    backend resolves to (Pallas on TPU, the XLA oracle on CPU).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    table = {}
+    for b, h, w in shapes:
+        r = np.random.default_rng(0)
+        img = jnp.asarray(r.random((b, h, w, 3), np.float32))
+        ids = jnp.arange(b, dtype=jnp.int32)
+        A = jnp.ones((3,), jnp.float32)
+        k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+        init = jnp.asarray(False)
+
+        def build(params):
+            def run():
+                return ops.fused_dehaze_dcp(
+                    img, ids, A, k0, init, radius=7, omega=0.95, refine=True,
+                    gf_radius=8, gf_eps=1e-3, t0=0.1, gamma=1.0, period=8,
+                    lam=0.05, frames_per_block=params["frames_per_block"])
+            return run
+
+        table[shape_bucket((b, h, w))] = autotune(
+            "fused_dcp", (b, h, w),
+            [{"frames_per_block": f} for f in candidates],
+            build, iters=iters, persist=persist)
+    return table
+
+
+if __name__ == "__main__":
+    out = autotune_fused()
+    print(json.dumps({"fused_dcp": out, "path": str(table_path())}, indent=2))

@@ -30,11 +30,11 @@ def run_child(body: str, devices: int = 8) -> None:
 def test_sharded_dehaze_matches_single_device():
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from repro.core import (DehazeConfig, make_dehaze_step,
                                 make_sharded_dehaze_step, init_atmo_state)
         from repro.core.physics import synthesize_haze, transmission_from_depth
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(2)
         B, H, W = 4, 64, 48
         J = jnp.asarray(rng.random((B, H, W, 3), np.float32)) * 0.8
@@ -64,10 +64,10 @@ def test_sharded_dehaze_multihop_halo():
     """Halo larger than the per-shard height -> multi-hop ppermute path."""
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from repro.core import (DehazeConfig, make_dehaze_step,
                                 make_sharded_dehaze_step, init_atmo_state)
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 8), ("data", "model"))
         rng = np.random.default_rng(3)
         B, H, W = 2, 64, 32          # 8 rows/shard
         I = jnp.asarray(rng.random((B, H, W, 3), np.float32))
@@ -91,10 +91,10 @@ def test_packed_halo_matches_rgb_halo():
     halo path within dtype tolerance."""
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from repro.core import (DehazeConfig, make_dehaze_step,
                                 make_sharded_dehaze_step, init_atmo_state)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(2)
         I = jnp.asarray(rng.random((4, 64, 48, 3), np.float32))
         ids = jnp.arange(4, dtype=jnp.int32)
@@ -118,6 +118,7 @@ def test_moe_ep_matches_single_device():
     """Expert-parallel all-to-all MoE == single-device execution."""
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from repro.models import transformer as T
         from repro.models import common as cm
         cfg = T.LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
@@ -128,8 +129,7 @@ def test_moe_ep_matches_single_device():
         toks = jax.random.randint(jax.random.key(1), (4, 8), 0, 64)
         ref_logits, _ = jax.jit(T.make_forward(cfg))(params, toks)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         fwd = T.make_forward(cfg, mesh, ("data",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         pspecs = cm.param_pspecs(T.lm_param_table(cfg), mesh=mesh)
@@ -150,10 +150,10 @@ def test_ema_state_sync_across_batches_sharded():
     over the data axis (collective state synchronization)."""
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from repro.core import (DehazeConfig, make_dehaze_step,
                                 make_sharded_dehaze_step, init_atmo_state)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(5)
         cfg = DehazeConfig(kernel_mode="ref", gf_radius=4, update_period=3)
         step_ref = jax.jit(make_dehaze_step(cfg))
@@ -178,6 +178,7 @@ def test_seqpar_flash_decode_matches_standard():
     full and chunked attention (EXPERIMENTS §Perf / long_500k)."""
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.models import transformer as T, common as cm
         for chunk in (0, 8):
@@ -191,8 +192,7 @@ def test_seqpar_flash_decode_matches_standard():
             dec = jax.jit(T.make_decode_step(cfg))
             last, cache = pre(params, toks[:, :16])
             ref_lg, ref_cache = dec(params, cache, toks[:, 16:17])
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = compat.make_mesh((2, 4), ("data", "model"))
             cfg2 = T.LMConfig(**{**cfg.__dict__, "decode_seq_shard": True})
             dec2 = T.make_decode_step(cfg2, mesh, ("data",))
             spec = {"k": P(None, "data", "model", None, None),
@@ -213,6 +213,7 @@ def test_seq_sharded_lm_forward_matches():
     """LM forward with batch+TP sharding == single device (numerics)."""
     run_child("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
         from repro.models import transformer as T
         from repro.models import common as cm
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -222,8 +223,7 @@ def test_seq_sharded_lm_forward_matches():
         params = cm.init_params(jax.random.key(0), T.lm_param_table(cfg))
         toks = jax.random.randint(jax.random.key(1), (4, 16), 0, 64)
         ref, _ = jax.jit(T.make_forward(cfg))(params, toks)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         pspecs = cm.param_pspecs(T.lm_param_table(cfg), mesh=mesh)
         shard = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
                              is_leaf=lambda x: isinstance(x, P))

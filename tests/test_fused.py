@@ -1,0 +1,273 @@
+"""Fused DCP megakernel: interpret-mode parity vs the jnp oracle, tiling
+registry behavior, and pipeline-level equivalence with the per-stage chain.
+
+No hypothesis dependency here on purpose — this file is the minimal-install
+coverage for the fused hot path.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.core.normalize import AtmoState
+from repro.kernels import ops, ref, tuning
+from repro.kernels.fused import fused_dehaze_dcp_pallas, fused_transmission_pallas
+
+# Odd H/W (not divisible by any tile), plus an even multi-frame shape.
+SHAPES = [(1, 33, 17), (2, 24, 32), (4, 16, 16)]
+
+FUSED_KW = dict(radius=3, omega=0.95, refine=False, gf_radius=4, gf_eps=1e-3,
+                t0=0.1, gamma=1.0, period=2, lam=0.3)
+
+
+def _img(shape, dtype=jnp.float32, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.random(shape + (3,), np.float32)).astype(dtype)
+
+
+def _state(warm=False):
+    if not warm:
+        s = init_atmo_state()
+    else:
+        s = AtmoState(A=jnp.asarray([0.8, 0.85, 0.9], jnp.float32),
+                      last_update=jnp.asarray(7, jnp.int32),
+                      initialized=jnp.asarray(True))
+    return s
+
+
+def _run(img, state, mode, **kw):
+    b = img.shape[0]
+    ids = jnp.arange(10, 10 + b, dtype=jnp.int32)
+    return ops.fused_dehaze_dcp(img, ids, state.A, state.last_update,
+                                state.initialized, mode=mode, **kw)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("warm", [False, True])
+def test_fused_parity_f32(shape, warm):
+    """Acceptance gate: max abs err <= 1e-5 vs the oracle in float32."""
+    img = _img(shape)
+    state = _state(warm)
+    got = _run(img, state, "interpret", **FUSED_KW)
+    want = _run(img, state, "ref", **FUSED_KW)
+    for g, w in zip(got[:3], want[:3]):                  # J, t, a_seq
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+    np.testing.assert_allclose(np.asarray(got[3]), np.asarray(want[3]),
+                               atol=1e-5)                # final A
+    assert int(got[4]) == int(want[4])                   # final last_update
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_fused_parity_with_guided_refine(shape):
+    kw = dict(FUSED_KW, refine=True)
+    img = _img(shape, seed=3)
+    got = _run(img, _state(), "interpret", **kw)
+    want = _run(img, _state(), "ref", **kw)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               atol=1e-4)
+
+
+def test_fused_parity_bfloat16():
+    img = _img((2, 24, 32), jnp.bfloat16, seed=5)
+    got = _run(img, _state(), "interpret", **FUSED_KW)
+    want = _run(img, _state(), "ref", **FUSED_KW)
+    assert got[0].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got[0], np.float32),
+                               np.asarray(want[0], np.float32), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               atol=2e-2)
+
+
+@pytest.mark.parametrize("fpb", [2, 4, 3])
+def test_fused_frames_per_block(fpb):
+    """Multi-frame grid blocks keep the EMA carry exact; a non-dividing
+    block size falls back to 1 frame per step rather than failing."""
+    img = _img((4, 16, 16), seed=7)
+    state = _state()
+    ids = jnp.arange(4, dtype=jnp.int32)
+    got = fused_dehaze_dcp_pallas(
+        img, ids, state.A, state.last_update, state.initialized,
+        frames_per_block=fpb, interpret=True, **FUSED_KW)
+    want = _run(img, state, "ref", **FUSED_KW)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               atol=1e-5)
+
+
+def test_fused_large_frame_ids_stay_exact():
+    """Frame ids past 2^24 (a week of continuous streaming) must not lose
+    precision in the kernel's EMA carry — ids stay int32 end-to-end."""
+    img = _img((4, 8, 8), seed=23)
+    base = 2 ** 24
+    ids = jnp.asarray([base, base + 1, base + 2, base + 3], jnp.int32)
+    state = AtmoState(A=jnp.asarray([0.8, 0.85, 0.9], jnp.float32),
+                      last_update=jnp.asarray(base - 1, jnp.int32),
+                      initialized=jnp.asarray(True))
+    got = ops.fused_dehaze_dcp(img, ids, state.A, state.last_update,
+                               state.initialized, mode="interpret", **FUSED_KW)
+    want = ops.fused_dehaze_dcp(img, ids, state.A, state.last_update,
+                                state.initialized, mode="ref", **FUSED_KW)
+    assert int(got[4]) == int(want[4])
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("t0", [0.3, 0.95])
+def test_fused_t_min_clamping(t0):
+    """Dense haze: t_raw falls below t0 everywhere; Eq. 8 must clamp, stay
+    finite, and still match the oracle."""
+    # Near-white frames -> dark channel ~1 -> t_raw ~ 1 - omega ~ 0.05 < t0.
+    img = jnp.clip(_img((2, 16, 16), seed=11) * 0.05 + 0.93, 0.0, 1.0)
+    kw = dict(FUSED_KW, t0=t0)
+    got = _run(img, _state(), "interpret", **kw)
+    want = _run(img, _state(), "ref", **kw)
+    assert np.isfinite(np.asarray(got[0])).all()
+    assert float(jnp.min(got[1])) < t0            # raw t really is clamped
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-5)
+
+
+def test_fused_transmission_stage_parity():
+    img = _img((2, 24, 32), seed=13)
+    A = jnp.asarray([0.9, 0.92, 0.88], jnp.float32)
+    kw = dict(radius=3, omega=0.95, refine=True, gf_radius=4, gf_eps=1e-3)
+    t_i, tmin_i, rgb_i = fused_transmission_pallas(img, A, interpret=True, **kw)
+    t_r, tmin_r, rgb_r = ref.fused_transmission_dcp(img, A, **kw)
+    np.testing.assert_allclose(np.asarray(t_i), np.asarray(t_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(tmin_i), np.asarray(tmin_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rgb_i), np.asarray(rgb_r), atol=1e-5)
+
+
+# --- pipeline wiring ---------------------------------------------------------
+
+def _pipeline_pair(monkeypatch, substrate):
+    if substrate:
+        monkeypatch.setenv("REPRO_KERNEL_MODE", substrate)
+    J, _ = _scene()
+    ids = jnp.arange(4, dtype=jnp.int32)
+    out_f = make_dehaze_step(DehazeConfig(kernel_mode="fused",
+                                          update_period=2))(
+        J, ids, init_atmo_state())
+    monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+    out_r = make_dehaze_step(DehazeConfig(kernel_mode="ref",
+                                          update_period=2))(
+        J, ids, init_atmo_state())
+    return out_f, out_r
+
+
+def _scene():
+    r = np.random.default_rng(17)
+    J = jnp.asarray(r.random((4, 24, 32, 3), np.float32))
+    return J, None
+
+
+@pytest.mark.parametrize("substrate", ["", "interpret"])
+def test_pipeline_fused_matches_ref_chain(monkeypatch, substrate):
+    """make_dehaze_step(kernel_mode="fused") == the per-stage ref chain
+    (on CPU the fused substrate resolves to the oracle; with
+    REPRO_KERNEL_MODE=interpret it runs the actual kernel body)."""
+    out_f, out_r = _pipeline_pair(monkeypatch, substrate)
+    np.testing.assert_allclose(np.asarray(out_f.frames),
+                               np.asarray(out_r.frames), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out_f.transmission),
+                               np.asarray(out_r.transmission), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out_f.atmo_light),
+                               np.asarray(out_r.atmo_light), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_f.state.A),
+                               np.asarray(out_r.state.A), atol=1e-4)
+
+
+def test_pipeline_fused_falls_back_for_cap():
+    """CAP has no fused variant yet — kernel_mode="fused" must still work."""
+    J, _ = _scene()
+    ids = jnp.arange(4, dtype=jnp.int32)
+    out = make_dehaze_step(DehazeConfig(algorithm="cap",
+                                        kernel_mode="fused"))(
+        J, ids, init_atmo_state())
+    assert not bool(jnp.isnan(out.frames).any())
+
+
+def test_sharded_step_selects_fused():
+    """Single-device mesh: the sharded step's fused branch must agree with
+    its per-stage branch."""
+    from repro.core.pipeline import make_sharded_dehaze_step
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    J, _ = _scene()
+    ids = jnp.arange(4, dtype=jnp.int32)
+    outs = {}
+    for mode in ("fused", "ref"):
+        cfg = DehazeConfig(kernel_mode=mode, update_period=2)
+        step, _, _ = make_sharded_dehaze_step(cfg, mesh, ("data",), None)
+        outs[mode] = step(J, ids, init_atmo_state())
+    np.testing.assert_allclose(np.asarray(outs["fused"].frames),
+                               np.asarray(outs["ref"].frames), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(outs["fused"].transmission),
+                               np.asarray(outs["ref"].transmission), atol=2e-4)
+
+
+# --- tiling registry / autotune ----------------------------------------------
+
+def test_tuning_defaults_and_env_override(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 1}
+    monkeypatch.setenv("REPRO_TUNE_FUSED_DCP", '{"frames_per_block": 4}')
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 4}
+    monkeypatch.setenv("REPRO_TUNE_FUSED_DCP", "not json")
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 1}
+
+
+def test_tuning_table_roundtrip(monkeypatch, tmp_path):
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(path))
+    tuning.save_table({"fused_dcp": {"4x16x16": {"frames_per_block": 2}}})
+    assert json.loads(path.read_text())["fused_dcp"]["4x16x16"] == \
+        {"frames_per_block": 2}
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 2}
+    # Other shapes fall back to the default.
+    assert tuning.get_params("fused_dcp", (1, 8, 8)) == \
+        {"frames_per_block": 1}
+
+
+def test_autotune_picks_fastest_and_persists(monkeypatch, tmp_path):
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(path))
+
+    def build(params):
+        if params["frames_per_block"] == 3:        # non-dividing tile
+            raise ValueError("bad tile")
+        import time
+
+        def run():
+            time.sleep(0.001 * params["frames_per_block"])
+            return jnp.zeros(())
+        return run
+
+    best = tuning.autotune("fused_dcp", (4, 16, 16),
+                           [{"frames_per_block": f} for f in (3, 1, 2)],
+                           build, iters=1)
+    assert best == {"frames_per_block": 1}
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == best
+
+
+def test_fused_dispatch_reads_registry(monkeypatch, tmp_path):
+    """ops.fused_dehaze_dcp resolves frames_per_block from the registry."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "t.json"))
+    monkeypatch.setenv("REPRO_TUNE_FUSED_DCP", '{"frames_per_block": 2}')
+    img = _img((4, 16, 16), seed=19)
+    got = _run(img, _state(), "auto", **FUSED_KW)
+    want = _run(img, _state(), "ref", **FUSED_KW)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-5)
