@@ -65,6 +65,7 @@ def rows() -> List[Tuple[str, float, str]]:
                     f"tpu_roofline_us={tpu_est * 1e6:.1f}"))
 
         out.extend(_staged_vs_fused_rows(img, tag))
+        out.extend(_sharded_halo_rows(img, tag))
     return out
 
 
@@ -97,7 +98,7 @@ def _staged_vs_fused_rows(img: jnp.ndarray, tag: str):
         t = jax.block_until_ready(gf(img, t_raw))
         return rc(img, t, A)
 
-    fused = jax.jit(lambda x: ops.fused_dehaze_dcp(
+    fused = jax.jit(lambda x: ops.fused_dehaze(
         x, ids, A0, k0, init, mode="auto", **kw)[0])
 
     t_staged = _timeit(staged)
@@ -110,6 +111,72 @@ def _staged_vs_fused_rows(img: jnp.ndarray, tag: str):
          f";speedup_vs_staged={t_staged / t_fused:.2f}x"),
     ]
     return rows
+
+
+def _sharded_halo_rows(img: jnp.ndarray, tag: str, n_h: int = 2):
+    """Height-sharded (n_h > 1) transmission stage: the masked per-stage
+    chain vs the halo-aware fused op, on one shard's workload.
+
+    Benches exactly what one mesh shard computes after the halo exchange —
+    the halo-extended (pre-map, guide) planes plus a row-validity mask with
+    an invalid (mesh-edge) top halo — so it runs on the single-device CI
+    container. Launch boundaries in the staged chain are synced the same
+    way as ``_staged_vs_fused_rows``.
+    """
+    from repro.core import spatial
+    from repro.kernels.ref import luminance, premap
+
+    b, h, w, _ = img.shape
+    radius, gf_radius, gf_eps = 7, 20, 1e-3
+    halo = radius + 2 * gf_radius
+    h_loc = h // n_h
+    img_loc = img[:, :h_loc]
+    pre = premap(img, jnp.ones((3,), jnp.float32), "dcp")
+    guide = luminance(img)
+    # Shard 0 of n_h: top halo rows are off-mesh (validity-masked garbage);
+    # bottom halo rows past the frame (smoke shapes) are masked too.
+    n_avail = min(h, h_loc + halo)
+    pad_top = jnp.zeros((b, halo, w), img.dtype)
+    pad_bot = jnp.zeros((b, h_loc + halo - n_avail, w), img.dtype)
+    pre_ext = jnp.concatenate([pad_top, pre[:, :n_avail], pad_bot], axis=1)
+    guide_ext = jnp.concatenate([pad_top, guide[:, :n_avail], pad_bot],
+                                axis=1)
+    rows_i = jnp.arange(h_loc + 2 * halo)
+    valid = (rows_i >= halo) & (rows_i < halo + n_avail)
+
+    core = slice(halo, halo + h_loc)
+    mmin = jax.jit(lambda p, v: 1.0 - 0.95 * spatial.masked_min_filter_2d(
+        p, v, radius))
+    mgf = jax.jit(lambda g, t, v: jnp.clip(spatial.masked_guided_filter(
+        g, t, v, gf_radius, gf_eps)[:, core], 0.0, 1.0))
+
+    @jax.jit
+    def cands(i, t_raw_ext):
+        # Per-frame argmin-t candidate (Eq. 6) — part of the production
+        # stage, so both rows below pay for it.
+        ft = t_raw_ext[:, core].reshape(i.shape[0], -1)
+        j = jnp.argmin(ft, axis=-1)
+        t_min = jnp.take_along_axis(ft, j[:, None], axis=-1)[:, 0]
+        rgb = jnp.take_along_axis(i.reshape(i.shape[0], -1, 3),
+                                  j[:, None, None], axis=1)[:, 0]
+        return t_min, rgb
+
+    def staged():
+        t_raw_ext = jax.block_until_ready(mmin(pre_ext, valid))
+        t = jax.block_until_ready(mgf(guide_ext, t_raw_ext, valid))
+        return t, cands(img_loc, t_raw_ext)
+
+    fused = jax.jit(lambda i, p, g, v: ops.fused_transmission_halo(
+        i, p, g, v, algorithm="dcp", radius=radius, omega=0.95, refine=True,
+        gf_radius=gf_radius, gf_eps=gf_eps, mode="auto"))
+
+    t_staged = _timeit(staged)
+    t_fused = _timeit(fused, img_loc, pre_ext, guide_ext, valid)
+    return [
+        (f"kernels/sharded_t_staged_nh{n_h}/{tag}", t_staged * 1e6 / b, ""),
+        (f"kernels/sharded_t_fused_nh{n_h}/{tag}", t_fused * 1e6 / b,
+         f"speedup_vs_staged={t_staged / t_fused:.2f}x"),
+    ]
 
 
 if __name__ == "__main__":

@@ -115,13 +115,29 @@ def generate_haze_free(frames: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def supports_fused(cfg: DehazeConfig) -> bool:
-    """The single-pass megakernel covers DCP with the Eq. 6 (k=1) estimator.
+    """The single-pass megakernel covers DCP *and* CAP with the Eq. 6 (k=1)
+    estimator, with or without height sharding (the halo-aware variant).
 
-    CAP and the robust top-k / recompute variants fall back to the
-    per-stage chain (ROADMAP open items track the CAP fused variant).
+    The robust top-k and the DCP recompute-with-final-A variants fall back
+    to the per-stage chain (ROADMAP tracks in-kernel top-k). CAP ignores
+    ``recompute_t_with_final_a`` — its transmission is A-free — so the flag
+    does not gate it, matching the per-stage chain.
     """
-    return (cfg.algorithm == "dcp" and cfg.topk == 1
-            and not cfg.recompute_t_with_final_a)
+    return (cfg.algorithm in ("dcp", "cap") and cfg.topk == 1
+            and not (cfg.algorithm == "dcp" and cfg.recompute_t_with_final_a))
+
+
+def premap(frames: jnp.ndarray, a_saved: jnp.ndarray,
+           cfg: DehazeConfig) -> jnp.ndarray:
+    """Per-pixel stage-1 pre-map: DCP ``min_c I/A`` (Eq. 3 inner min) or CAP
+    linear depth (Eq. 4). No neighborhood -> computable before a halo
+    exchange; the fused halo kernel consumes it as an input plane.
+    Delegates to ``kernels.ref.premap``, the single canonical form.
+    """
+    from repro.kernels import ref as kref
+    a0 = jnp.maximum(a_saved, 1e-3)
+    return kref.premap(frames, a0, cfg.algorithm,
+                       (cfg.cap_w0, cfg.cap_w1, cfg.cap_w2))
 
 
 def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
@@ -132,11 +148,12 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
     chain in ``pipeline.make_dehaze_step``.
     """
     from repro.core.normalize import AtmoState
-    J, t, a_seq, a_fin, k_fin = ops.fused_dehaze_dcp(
+    J, t, a_seq, a_fin, k_fin = ops.fused_dehaze(
         frames, frame_ids, state.A, state.last_update, state.initialized,
-        radius=cfg.patch_radius, omega=cfg.omega, refine=cfg.refine,
-        gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, t0=cfg.t0,
-        gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
+        algorithm=cfg.algorithm, radius=cfg.patch_radius, omega=cfg.omega,
+        beta=cfg.beta, cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2),
+        refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
+        t0=cfg.t0, gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
         mode=cfg.kernel_mode)
     new_state = AtmoState(A=a_fin, last_update=k_fin,
                           initialized=jnp.asarray(True))
@@ -146,7 +163,24 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
 def fused_transmission(frames: jnp.ndarray, a_saved: jnp.ndarray,
                        cfg: DehazeConfig):
     """Fused t-map + argmin-t candidate stage for the sharded step."""
-    return ops.fused_transmission_dcp(
-        frames, a_saved, radius=cfg.patch_radius, omega=cfg.omega,
+    return ops.fused_transmission(
+        frames, a_saved, algorithm=cfg.algorithm, radius=cfg.patch_radius,
+        omega=cfg.omega, beta=cfg.beta,
+        cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2), refine=cfg.refine,
+        gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, mode=cfg.kernel_mode)
+
+
+def fused_transmission_halo(frames: jnp.ndarray, pre_ext: jnp.ndarray,
+                            guide_ext: jnp.ndarray, valid: jnp.ndarray,
+                            cfg: DehazeConfig):
+    """Halo-aware fused t-map stage for the height-sharded step.
+
+    ``pre_ext``/``guide_ext`` are the halo-extended (pre-map, luma-guide)
+    planes from the exchange; ``valid`` is the row-validity mask. The
+    masked min/box filters run inside the kernel.
+    """
+    return ops.fused_transmission_halo(
+        frames, pre_ext, guide_ext, valid, algorithm=cfg.algorithm,
+        radius=cfg.patch_radius, omega=cfg.omega, beta=cfg.beta,
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
         mode=cfg.kernel_mode)

@@ -38,7 +38,8 @@ class DehazeConfig:
     # Dataflow options.
     recompute_t_with_final_a: bool = False # extra accuracy pass (beyond paper)
     kernel_mode: str = "auto"              # ref | pallas | interpret | fused | auto
-    #   "fused": single-pass megakernel path (DCP only; other configs fall
+    #   "fused": single-pass megakernel path (DCP and CAP, k=1, incl. the
+    #   halo-aware height-sharded variant; top-k / recompute configs fall
     #   back to the per-stage chain — see core.algorithms.supports_fused).
     dtype: str = "float32"
 

@@ -55,8 +55,15 @@ def ema_scan(a_cand: jnp.ndarray, frame_ids: jnp.ndarray, state: AtmoState,
       a_cand: (B, 3) per-frame A_new candidates (paper's per-estimator output).
       frame_ids: (B,) int32 global frame ids.
     Returns: ((B, 3) per-frame normalized A, updated state).
+
+    A zero-length batch (empty spout tail, elastic drain) is a no-op: the
+    state — *including* ``initialized`` — passes through unchanged, so the
+    next real first frame still bootstraps (replaces the white-light
+    placeholder) instead of being EMA-blended with it.
     """
     a_cand = a_cand.astype(jnp.float32)
+    if a_cand.shape[0] == 0:
+        return a_cand.reshape(0, 3), state
 
     def step(carry, x):
         A_prev, k, inited = carry
@@ -99,8 +106,12 @@ def ema_scan_associative(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,
     The recurrence is linear: A_i = c_i * A_{i-1} + d_i with
     c_i = 1 - λ·m_i (or 0 on bootstrap), d_i = λ·m_i·cand_i. Composition
     (c2, d2) ∘ (c1, d1) = (c2·c1, c2·d1 + d2) is associative.
+
+    Empty batches pass the state through untouched (see ``ema_scan``).
     """
     a_cand = a_cand.astype(jnp.float32)
+    if a_cand.shape[0] == 0:
+        return a_cand.reshape(0, 3), state
     mask = _update_mask(frame_ids, state, period)
     bootstrap = jnp.logical_and(jnp.logical_not(state.initialized),
                                 jnp.arange(frame_ids.shape[0]) == 0)

@@ -51,7 +51,7 @@ def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
     see ``algorithms.supports_fused``) the whole component chain runs as one
     single-pass launch; otherwise the per-stage chain below.
     """
-    cfg.validate()
+    cfg = cfg.validate()
     if cfg.kernel_mode == "fused" and alg.supports_fused(cfg):
         def fused_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
                        state: AtmoState) -> DehazeOutput:
@@ -112,61 +112,50 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
     del t_est  # estimators are inlined below (halo-aware masked forms)
     n_h = mesh.shape[height_axis] if height_axis else 1
     halo = cfg.patch_radius + (2 * cfg.gf_radius if cfg.refine else 0)
-    # The megakernel path needs the full frame height in VMEM; with height
-    # sharding (halos) we fall back to the masked per-stage chain (the
-    # fused halo step is a ROADMAP open item).
-    use_fused = (cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
-                 and not (height_axis and n_h > 1))
+    # With height sharding the fused path switches to the halo-aware
+    # megakernel: the exchanged (pre-map, guide) planes plus the
+    # row-validity mask feed the kernel directly and the min/box filters
+    # run masked in-VMEM (kernels.fused.fused_transmission_halo_pallas).
+    use_fused = cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
 
     fspec = P(batch_axes, height_axis) if height_axis else P(batch_axes)
     ispec = P(batch_axes)
 
+    def halo_premap_and_guide(frames, state):
+        """Halo-extended (pre-map, guide) planes + row validity, honoring
+        ``cfg.halo_packed``: either exchange the packed 2-channel stack
+        (what the stencils consume — 1/3 less wire than RGB) or exchange
+        RGB and compute the maps on the extended block. Both the staged
+        chain and the fused halo kernel consume this, so the two paths see
+        identical inputs (including bf16 halo rounding placement)."""
+        hdt = jnp.dtype(cfg.halo_dtype)
+        if cfg.halo_packed:
+            packed = jnp.stack([alg.premap(frames, state.A, cfg),
+                                alg.luminance(frames)], axis=-1)
+            p_ext, valid = spatial.halo_exchange_height(
+                packed.astype(hdt), halo, height_axis, n_h)
+            p_ext = p_ext.astype(frames.dtype)
+            return p_ext[..., 0], p_ext[..., 1], valid
+        x_ext, valid = spatial.halo_exchange_height(
+            frames.astype(hdt), halo, height_axis, n_h)
+        x_ext = x_ext.astype(frames.dtype)
+        return alg.premap(x_ext, state.A, cfg), alg.luminance(x_ext), valid
+
     def staged_t_and_candidates(frames, state):
         """Per-stage chain: masked filters over halo-extended blocks ->
         (refined t, per-frame (t_min, rgb) candidates)."""
-        hdt = jnp.dtype(cfg.halo_dtype)
-
-        # Per-pixel pre-maps (no neighborhood -> computable pre-exchange).
-        if cfg.algorithm == "dcp":
-            a0 = jnp.maximum(state.A, 1e-3)
-            pre = jnp.min(frames / a0[None, None, None, :], axis=-1)
-        else:  # cap
-            from repro.kernels import ref as kref
-            pre = kref.cap_depth(frames, cfg.cap_w0, cfg.cap_w1, cfg.cap_w2)
-
         if height_axis and n_h > 1:
-            if cfg.halo_packed:
-                # Exchange only what the stencils consume: the pre-map and
-                # the guided-filter guide — 2 channels instead of RGB.
-                packed = jnp.stack([pre, alg.luminance(frames)], axis=-1)
-                p_ext, valid = spatial.halo_exchange_height(
-                    packed.astype(hdt), halo, height_axis, n_h)
-                p_ext = p_ext.astype(frames.dtype)
-                pre_ext = p_ext[..., 0]
-                guide_ext = p_ext[..., 1]
-            else:
-                x_ext, valid = spatial.halo_exchange_height(
-                    frames.astype(hdt), halo, height_axis, n_h)
-                x_ext = x_ext.astype(frames.dtype)
-                if cfg.algorithm == "dcp":
-                    pre_ext = jnp.min(x_ext / a0[None, None, None, :], axis=-1)
-                else:
-                    from repro.kernels import ref as kref
-                    pre_ext = kref.cap_depth(x_ext, cfg.cap_w0, cfg.cap_w1,
-                                             cfg.cap_w2)
-                guide_ext = alg.luminance(x_ext)
+            pre_ext, guide_ext, valid = halo_premap_and_guide(frames, state)
         else:
             valid = jnp.ones((frames.shape[1],), bool)
-            pre_ext = pre
+            pre_ext = alg.premap(frames, state.A, cfg)
             guide_ext = alg.luminance(frames)
 
         # --- Component 1 on the halo-extended block (masked filters). ---
-        if cfg.algorithm == "dcp":
-            t_raw_ext = 1.0 - cfg.omega * spatial.masked_min_filter_2d(
-                pre_ext, valid, cfg.patch_radius)
-        else:
-            d = spatial.masked_min_filter_2d(pre_ext, valid, cfg.patch_radius)
-            t_raw_ext = jnp.exp(-cfg.beta * d)
+        from repro.kernels import ref as kref
+        t_raw_ext = kref.tmap_from_dark(
+            spatial.masked_min_filter_2d(pre_ext, valid, cfg.patch_radius),
+            cfg.algorithm, cfg.omega, cfg.beta)
         t_raw_ext = t_raw_ext.astype(frames.dtype)
 
         core = slice(halo, halo + frames.shape[1]) if (height_axis and n_h > 1) \
@@ -192,11 +181,25 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             t = t_raw
         return t, t_min, rgb
 
+    def fused_t_and_candidates(frames, state):
+        """Fused megakernel form of ``staged_t_and_candidates``: one launch
+        per block instead of the masked per-stage XLA chain."""
+        if height_axis and n_h > 1:
+            # Halo-aware fused kernel: the exchange output is the kernel
+            # input; masking happens in-VMEM.
+            pre_ext, guide_ext, valid = halo_premap_and_guide(frames, state)
+            t, t_min, rgb = alg.fused_transmission_halo(
+                frames, pre_ext, guide_ext, valid, cfg)
+            rgb = _gather_argmin_over_model(t_min, rgb, height_axis)
+        else:
+            t, t_min, rgb = alg.fused_transmission(frames, state.A, cfg)
+        return t, t_min, rgb
+
     def local_step(frames, frame_ids, state):
         b_loc = frames.shape[0]
         if use_fused:
             # Components 1 + 2 candidates + refinement in ONE launch.
-            t, t_min, rgb = alg.fused_transmission(frames, state.A, cfg)
+            t, t_min, rgb = fused_t_and_candidates(frames, state)
         else:
             t, t_min, rgb = staged_t_and_candidates(frames, state)
 

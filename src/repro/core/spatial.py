@@ -16,6 +16,19 @@ the exact global border semantics (clipped windows): min filters treat
 invalid rows as +inf, box filters exclude them from both sum and count, so
 the sharded pipeline is bit-comparable to the single-device one (verified
 in tests/test_distributed.py).
+
+In-kernel masking contract (the fused halo path): with
+``kernel_mode="fused"`` the masked filters below are *not* launched as a
+per-stage XLA chain — ``halo_exchange_height``'s outputs (the packed
+(pre-map, guide) planes plus ``valid``) feed
+``kernels.fused.fused_transmission_halo_pallas`` directly, and the kernel
+applies the identical masking rules in VMEM: rows where ``valid`` is False
+become +inf before the separable min passes, and the box-filter divisor is
+(windowed sum of the row mask) x (in-bounds column count), never counting
+masked rows. Any change to the masking semantics here must be mirrored
+there (and in ``kernels.ref.fused_transmission_halo``); parity across the
+three is asserted to 1e-5 in tests/test_fused.py and
+tests/test_distributed.py, including mesh-edge shards.
 """
 from __future__ import annotations
 

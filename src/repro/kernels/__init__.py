@@ -5,7 +5,8 @@ Modules:
   boxfilter     — running-sum separable box filter (guided-filter core)
   recover       — fused haze-free recovery epilogue (Eq. 8)
   atmolight     — argmin-t atmospheric light reduction (Eq. 6)
-  fused         — single-pass DCP megakernel (Eq. 3+6+9+8 in one launch)
+  fused         — single-pass DCP/CAP megakernels (Eq. 3/4+6+9+8 in one
+                  launch), incl. the halo-aware height-sharded variant
   tuning        — block-size/tiling registry + autotune sweep
   ops           — jitted dispatch wrappers (ref | pallas | interpret | fused)
   ref           — pure-jnp oracles for all of the above

@@ -55,27 +55,37 @@ def _boxfilter_kernel(x_ref, out_ref, *, radius: int):
     out_ref[0] = (s / _counts_2d(h, w, radius)).astype(out_ref.dtype)
 
 
+def _masked_box_mean(v: jnp.ndarray, valid_f: jnp.ndarray,
+                     radius: int) -> jnp.ndarray:
+    """(H, W) windowed mean over valid rows only, all in VMEM.
+
+    The per-pixel divisor decomposes as (windowed sum of the row mask along
+    H) x (in-bounds count along W) — one extra 1-D cumsum pass instead of a
+    full ones-image sweep. Semantics match
+    ``core.spatial.masked_box_filter_2d``: invalid rows are excluded from
+    both the sum and the count, so windows that straddle a mesh edge
+    renormalize exactly like a clipped image-border window. This is THE
+    array-level masked box mean — the standalone kernel below and the fused
+    halo megakernel (``kernels.fused``) both call it; change masking
+    semantics here and in ``core.spatial`` together.
+    """
+    h, w = v.shape
+    # `where`, not multiply: invalid rows may hold +/-inf from an upstream
+    # masked min filter and inf * 0 would poison the sums with NaN.
+    vm = jnp.where(valid_f[:, None] > 0.5, v, 0.0)
+    s = _box_pass(_box_pass(vm, radius, axis=0), radius, axis=1)
+    rowcnt = _box_pass(jnp.broadcast_to(valid_f[:, None], (h, 1)),
+                       radius, axis=0)                  # (H, 1)
+    i = jax.lax.broadcasted_iota(jnp.float32, (h, w), 1)
+    wcnt = (jnp.minimum(i + radius, float(w - 1))
+            - jnp.maximum(i - radius, 0.0) + 1.0)
+    return s / jnp.maximum(rowcnt * wcnt, 1.0)
+
+
 def _masked_boxfilter_kernel(x_ref, valid_ref, out_ref, *, radius: int):
-    """Windowed mean over valid rows only. The per-pixel count decomposes:
-    (windowed sum of the row mask along H) x (in-bounds count along W) —
-    one extra 1-D cumsum pass instead of a full ones-image sweep."""
     x = x_ref[0].astype(jnp.float32)
     valid = valid_ref[0]                               # (H,) float
-    h, w = x.shape
-    xm = jnp.where(valid[:, None] > 0.5, x, 0.0)
-    s = _box_pass(xm, radius, axis=0)
-    s = _box_pass(s, radius, axis=1)
-    rowcnt = _box_pass(jnp.broadcast_to(valid[:, None], (h, 1)),
-                       radius, axis=0)                  # (H, 1)
-
-    def w_counts():
-        i = jax.lax.broadcasted_iota(jnp.float32, (h, w), 1)
-        lo = jnp.maximum(i - radius, 0.0)
-        hi = jnp.minimum(i + radius, float(w - 1))
-        return hi - lo + 1.0
-
-    cnt = rowcnt * w_counts()
-    out_ref[0] = (s / jnp.maximum(cnt, 1.0)).astype(out_ref.dtype)
+    out_ref[0] = _masked_box_mean(x, valid, radius).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("radius", "interpret"))

@@ -1,15 +1,19 @@
-"""Pallas TPU megakernel: the whole DCP dehaze chain in one pass over VMEM.
+"""Pallas TPU megakernels: the whole dehaze chain in one pass over VMEM.
 
 The paper pipelines its three components (transmission estimator,
 atmospheric-light estimator, haze-free generator) across machines; on TPU
 the equivalent win is *fusing* them so a frame never leaves VMEM between
-stages. This module collapses the four per-frame kernel launches
-(``dark_channel`` -> ``atmolight`` -> ``boxfilter``x5 -> ``recover``) into a
-single ``pallas_call``:
+stages. This module collapses the per-frame kernel launches
+(``dark_channel``/``min_filter`` -> ``atmolight`` -> ``boxfilter``x5 ->
+``recover``) into a single ``pallas_call``, parametric in the transmission
+algorithm (paper §3.1: the estimator is a black box — DCP Eq. 3 and CAP
+Eq. 4 are the two shipped instantiations):
 
   per grid step (one or more frames, ``frames_per_block``):
-    1. pre-map        cmin = min_c I^c / A_saved^c            (Eq. 3 inner min)
-    2. transmission   t_raw = 1 - omega * minfilt(cmin)       (Eq. 3)
+    1. pre-map        DCP: cmin = min_c I^c / A_saved^c       (Eq. 3 inner min)
+                      CAP: d = w0 + w1*v + w2*s               (Eq. 4 depth)
+    2. transmission   DCP: t_raw = 1 - omega * minfilt(cmin)  (Eq. 3)
+                      CAP: t_raw = exp(-beta * minfilt(d))    (Eq. 4)
     3. A candidate    (t*, I(x*)) at x* = argmin t_raw        (Eq. 6)
     4. EMA update     A_m = lam*A_new + (1-lam)*A_k           (Eq. 9, §3.3)
     5. refine         guided filter on the luma guide          (He et al. [28])
@@ -28,6 +32,14 @@ after step 5 and returns per-frame candidates instead of recovering,
 because under batch sharding the EMA must see all shards' candidates
 (an all-gather) before recovery. Still one launch instead of seven.
 
+``fused_transmission_halo_pallas`` is the height-sharded variant: it takes
+the halo-*extended* (pre-map, guide) planes produced by
+``core.spatial.halo_exchange_height`` plus the row-validity mask, and runs
+the min/box filters masked in-VMEM (invalid rows are +inf for the min
+filter, excluded from both sum and count for the box filters), so mesh-edge
+shards keep the exact clipped-window border semantics of the single-device
+chain. The halo exchange feeds the kernel directly — no masked XLA chain.
+
 Semantics match ``make_dehaze_step``: the pre-map for *every* frame in the
 batch uses the batch-entry saved A (paper §3.3 — the T-estimator runs
 before the A refresh), while recovery uses the per-frame EMA output.
@@ -41,9 +53,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.boxfilter import _box_pass, _counts_2d
+from repro.kernels.boxfilter import _box_pass, _counts_2d, _masked_box_mean
 from repro.kernels.dark_channel import _min_pass
-from repro.kernels.ref import LUMA_WEIGHTS as _LUMA
+from repro.kernels.ref import (CAP_COEFFS, LUMA_WEIGHTS as _LUMA,
+                               premap as _premap,
+                               tmap_from_dark as _tmap_from_dark)
+
+ALGORITHMS = ("dcp", "cap")
+
+
+def _resolve_frames_per_block(batch: int, requested: int) -> int:
+    """Largest divisor of ``batch`` that is <= ``requested`` (>= 1).
+
+    An autotuned tile that does not divide the batch degrades *gracefully*
+    (e.g. requested 4 over a batch of 6 runs 3-frame blocks) instead of
+    silently collapsing to 1 frame per grid step.
+    """
+    fpb = max(1, min(requested, batch)) if requested > 0 else 1
+    while batch % fpb:
+        fpb -= 1
+    return fpb
 
 
 def _guided_refine(img: jnp.ndarray, t_raw: jnp.ndarray, radius: int,
@@ -67,12 +96,17 @@ def _guided_refine(img: jnp.ndarray, t_raw: jnp.ndarray, radius: int,
     return jnp.clip(bf(a) * g + bf(b), 0.0, 1.0)
 
 
-def _frame_tmap(img: jnp.ndarray, a0: jnp.ndarray, *, radius: int,
-                omega: float, refine: bool, gf_radius: int, gf_eps: float):
+def _frame_tmap(img: jnp.ndarray, a0: jnp.ndarray, *, algorithm: str,
+                radius: int, omega: float, beta: float,
+                cap_w: Tuple[float, float, float], refine: bool,
+                gf_radius: int, gf_eps: float):
     """Steps 1-3 (+5) for one (H, W, 3) f32 frame: t_raw, refined t, candidate."""
-    pre = jnp.min(img / a0, axis=-1)                    # (H, W) pre-map
+    # ref.premap is the canonical form (pure jnp, traces in-kernel too);
+    # the sharded step computes the identical map outside the kernel before
+    # the halo exchange, which is what keeps fused and staged paths equal.
+    pre = _premap(img, a0, algorithm, cap_w)                    # (H, W)
     dark = _min_pass(_min_pass(pre, radius, axis=0), radius, axis=1)
-    t_raw = 1.0 - omega * dark
+    t_raw = _tmap_from_dark(dark, algorithm=algorithm, omega=omega, beta=beta)
     flat_t = t_raw.reshape(-1)
     j = jnp.argmin(flat_t)
     cand_min = flat_t[j]
@@ -96,11 +130,13 @@ def _ema_step(cand: jnp.ndarray, fid: jnp.ndarray, A_prev: jnp.ndarray,
     return A, k
 
 
-def _fused_dcp_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
-                      out_ref, t_ref, aseq_ref, carry_f_ref, carry_i_ref, *,
-                      radius: int, omega: float, refine: bool, gf_radius: int,
-                      gf_eps: float, t0: float, gamma: float, period: int,
-                      lam: float, frames_per_block: int):
+def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
+                         out_ref, t_ref, aseq_ref, carry_f_ref, carry_i_ref, *,
+                         algorithm: str, radius: int, omega: float, beta: float,
+                         cap_w: Tuple[float, float, float], refine: bool,
+                         gf_radius: int, gf_eps: float, t0: float,
+                         gamma: float, period: int, lam: float,
+                         frames_per_block: int):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -113,14 +149,15 @@ def _fused_dcp_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
     inited = carry_i_ref[0, 1]
     # Pre-map divisor: the batch-entry *saved* A for every frame (§3.3);
     # state_f_ref is an input block, so it stays constant while the carry
-    # refs advance.
+    # refs advance. (CAP's pre-map is A-free and ignores it.)
     a0 = jnp.maximum(state_f_ref[0].astype(jnp.float32), 1e-3)
 
     for f in range(frames_per_block):
         img = img_ref[f].astype(jnp.float32)            # (H, W, 3)
         t, cand_min, cand_rgb = _frame_tmap(
-            img, a0, radius=radius, omega=omega, refine=refine,
-            gf_radius=gf_radius, gf_eps=gf_eps)
+            img, a0, algorithm=algorithm, radius=radius, omega=omega,
+            beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+            gf_eps=gf_eps)
         A, k = _ema_step(cand_rgb, ids_ref[f, 0], A, k, inited,
                          period=period, lam=lam)
         inited = jnp.int32(1)
@@ -138,16 +175,18 @@ def _fused_dcp_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "radius", "omega", "refine", "gf_radius", "gf_eps", "t0", "gamma",
-    "period", "lam", "frames_per_block", "interpret"))
-def fused_dehaze_dcp_pallas(
+    "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
+    "gf_eps", "t0", "gamma", "period", "lam", "frames_per_block", "interpret"))
+def fused_dehaze_pallas(
         img: jnp.ndarray, frame_ids: jnp.ndarray, A_saved: jnp.ndarray,
         last_update: jnp.ndarray, initialized: jnp.ndarray, *,
-        radius: int, omega: float, refine: bool, gf_radius: int,
-        gf_eps: float, t0: float, gamma: float, period: int, lam: float,
-        frames_per_block: int = 1, interpret: bool = False,
+        algorithm: str = "dcp", radius: int, omega: float = 0.95,
+        beta: float = 1.0, cap_w: Tuple[float, float, float] = CAP_COEFFS,
+        refine: bool, gf_radius: int, gf_eps: float, t0: float, gamma: float,
+        period: int, lam: float, frames_per_block: int = 1,
+        interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Single-launch DCP dehaze: (B,H,W,3) -> (J, t, a_seq, A_fin, k_fin).
+    """Single-launch dehaze: (B,H,W,3) -> (J, t, a_seq, A_fin, k_fin).
 
     ``A_saved``/``last_update``/``initialized`` are the ``AtmoState`` fields;
     the EMA state is carried across the sequential grid, so ``a_seq[b]`` is
@@ -155,17 +194,18 @@ def fused_dehaze_dcp_pallas(
     """
     b, h, w, c = img.shape
     assert c == 3 and frame_ids.shape == (b,)
-    fpb = frames_per_block if frames_per_block > 0 and b % frames_per_block == 0 \
-        else 1
+    assert algorithm in ALGORITHMS, algorithm
+    fpb = _resolve_frames_per_block(b, frames_per_block)
     ids = frame_ids.astype(jnp.int32).reshape(b, 1)
     state_f = A_saved.astype(jnp.float32).reshape(1, 3)
     state_i = jnp.stack([last_update.astype(jnp.int32),
                          initialized.astype(jnp.int32)]).reshape(1, 2)
 
     kernel = functools.partial(
-        _fused_dcp_kernel, radius=radius, omega=omega, refine=refine,
-        gf_radius=gf_radius, gf_eps=gf_eps, t0=t0, gamma=gamma,
-        period=period, lam=lam, frames_per_block=fpb)
+        _fused_dehaze_kernel, algorithm=algorithm, radius=radius, omega=omega,
+        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam,
+        frames_per_block=fpb)
     out, t, a_seq, carry_f, carry_i = pl.pallas_call(
         kernel,
         grid=(b // fpb,),
@@ -194,24 +234,32 @@ def fused_dehaze_dcp_pallas(
     return out, t, a_seq, carry_f[0], carry_i[0, 0]
 
 
-def _fused_tmap_kernel(img_ref, a0_ref, t_ref, cand_ref, *, radius: int,
-                       omega: float, refine: bool, gf_radius: int,
-                       gf_eps: float):
+# Back-compat alias (PR 1 shipped the DCP-only kernel under this name).
+fused_dehaze_dcp_pallas = fused_dehaze_pallas
+
+
+def _fused_tmap_kernel(img_ref, a0_ref, t_ref, cand_ref, *, algorithm: str,
+                       radius: int, omega: float, beta: float,
+                       cap_w: Tuple[float, float, float], refine: bool,
+                       gf_radius: int, gf_eps: float):
     img = img_ref[0].astype(jnp.float32)
     a0 = jnp.maximum(a0_ref[0].astype(jnp.float32), 1e-3)
     t, cand_min, cand_rgb = _frame_tmap(
-        img, a0, radius=radius, omega=omega, refine=refine,
-        gf_radius=gf_radius, gf_eps=gf_eps)
+        img, a0, algorithm=algorithm, radius=radius, omega=omega, beta=beta,
+        cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps)
     t_ref[0] = t.astype(t_ref.dtype)
     cand_ref[0, 0] = cand_min
     cand_ref[0, 1:4] = cand_rgb
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "radius", "omega", "refine", "gf_radius", "gf_eps", "interpret"))
+    "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
+    "gf_eps", "interpret"))
 def fused_transmission_pallas(
-        img: jnp.ndarray, A_saved: jnp.ndarray, *, radius: int, omega: float,
-        refine: bool, gf_radius: int, gf_eps: float, interpret: bool = False,
+        img: jnp.ndarray, A_saved: jnp.ndarray, *, algorithm: str = "dcp",
+        radius: int, omega: float = 0.95, beta: float = 1.0,
+        cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
+        gf_radius: int, gf_eps: float, interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Sharded-step variant: (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)).
 
@@ -221,10 +269,12 @@ def fused_transmission_pallas(
     """
     b, h, w, c = img.shape
     assert c == 3
+    assert algorithm in ALGORITHMS, algorithm
     a0 = A_saved.astype(jnp.float32).reshape(1, 3)
     kernel = functools.partial(
-        _fused_tmap_kernel, radius=radius, omega=omega, refine=refine,
-        gf_radius=gf_radius, gf_eps=gf_eps)
+        _fused_tmap_kernel, algorithm=algorithm, radius=radius, omega=omega,
+        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps)
     t, cand = pl.pallas_call(
         kernel,
         grid=(b,),
@@ -242,4 +292,112 @@ def fused_transmission_pallas(
         ],
         interpret=interpret,
     )(img, a0)
+    return t, cand[:, 0], cand[:, 1:4].astype(img.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Halo-aware fused transmission (height-sharded pipeline)
+# ---------------------------------------------------------------------------
+
+def _masked_guided_refine(guide: jnp.ndarray, t_raw: jnp.ndarray,
+                          valid_f: jnp.ndarray, radius: int,
+                          eps: float) -> jnp.ndarray:
+    """Guided filter with all five means over valid rows only (no clip —
+    the caller clips after slicing the core block, matching
+    ``core.spatial.masked_guided_filter`` + the staged chain)."""
+    bf = functools.partial(_masked_box_mean, valid_f=valid_f, radius=radius)
+    mean_g = bf(guide)
+    mean_p = bf(t_raw)
+    corr_gp = bf(guide * t_raw)
+    corr_gg = bf(guide * guide)
+    var_g = corr_gg - mean_g * mean_g
+    cov_gp = corr_gp - mean_g * mean_p
+    a = cov_gp / (var_g + eps)
+    b = mean_p - a * mean_g
+    return bf(a) * guide + bf(b)
+
+
+def _fused_tmap_halo_kernel(img_ref, pre_ref, guide_ref, valid_ref,
+                            t_ref, cand_ref, *, algorithm: str, radius: int,
+                            omega: float, beta: float, refine: bool,
+                            gf_radius: int, gf_eps: float, halo: int):
+    img = img_ref[0].astype(jnp.float32)          # (H_loc, W, 3) core block
+    pre = pre_ref[0].astype(jnp.float32)          # (H_ext, W) halo-extended
+    guide = guide_ref[0].astype(jnp.float32)      # (H_ext, W) halo-extended
+    valid_f = valid_ref[0]                        # (H_ext,) float row mask
+    h_loc = img.shape[0]
+
+    # Masked min filter: invalid (off-mesh) rows are +inf, so windows that
+    # straddle the mesh edge clip exactly like image-border windows.
+    pm = jnp.where(valid_f[:, None] > 0.5, pre, jnp.inf)
+    dark = _min_pass(_min_pass(pm, radius, axis=0), radius, axis=1)
+    t_raw_ext = _tmap_from_dark(dark, algorithm=algorithm, omega=omega,
+                                beta=beta)
+    t_raw = jax.lax.slice_in_dim(t_raw_ext, halo, halo + h_loc, axis=0)
+    if refine:
+        t_ext = _masked_guided_refine(guide, t_raw_ext, valid_f,
+                                      gf_radius, gf_eps)
+        t = jnp.clip(jax.lax.slice_in_dim(t_ext, halo, halo + h_loc, axis=0),
+                     0.0, 1.0)
+    else:
+        t = t_raw
+
+    flat_t = t_raw.reshape(-1)                    # candidates over the core
+    j = jnp.argmin(flat_t)
+    t_ref[0] = t.astype(t_ref.dtype)
+    cand_ref[0, 0] = flat_t[j]
+    cand_ref[0, 1:4] = img.reshape(-1, 3)[j]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "algorithm", "radius", "omega", "beta", "refine", "gf_radius", "gf_eps",
+    "interpret"))
+def fused_transmission_halo_pallas(
+        img: jnp.ndarray, pre_ext: jnp.ndarray, guide_ext: jnp.ndarray,
+        valid: jnp.ndarray, *, algorithm: str = "dcp", radius: int,
+        omega: float = 0.95, beta: float = 1.0, refine: bool, gf_radius: int,
+        gf_eps: float, interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Height-sharded fused transmission: one launch per local block.
+
+    img:       (B, H_loc, W, 3) — the shard's core rows (for candidates).
+    pre_ext:   (B, H_ext, W)    — halo-extended per-pixel pre-map.
+    guide_ext: (B, H_ext, W)    — halo-extended guided-filter guide (luma).
+    valid:     (H_ext,) bool    — row validity from the halo exchange.
+
+    Returns (t (B, H_loc, W), t_min (B,), cand_rgb (B, 3)); matches the
+    masked per-stage XLA chain on the same inputs to float tolerance. The
+    pre-map is computed *outside* (it is per-pixel, so it rides the halo
+    exchange), everything windowed runs masked in-VMEM here.
+    """
+    b, h_loc, w, c = img.shape
+    h_ext = pre_ext.shape[1]
+    assert c == 3 and guide_ext.shape == pre_ext.shape == (b, h_ext, w)
+    assert algorithm in ALGORITHMS, algorithm
+    halo = (h_ext - h_loc) // 2
+    assert h_ext == h_loc + 2 * halo, (h_ext, h_loc)
+    vmask = valid.astype(jnp.float32).reshape(1, h_ext)
+    kernel = functools.partial(
+        _fused_tmap_halo_kernel, algorithm=algorithm, radius=radius,
+        omega=omega, beta=beta, refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps, halo=halo)
+    t, cand = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h_loc, w, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h_ext, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h_ext, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h_ext), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h_loc, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h_loc, w), img.dtype),
+            jax.ShapeDtypeStruct((b, 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(img, pre_ext, guide_ext, vmask)
     return t, cand[:, 0], cand[:, 1:4].astype(img.dtype)

@@ -6,8 +6,8 @@ Every op has three execution paths selected by ``mode``:
   - ``"interpret"``: Pallas kernel body interpreted on CPU (tests)
 
 ``"fused"`` is a fourth, *pipeline-level* mode: instead of one launch per
-stage, the whole DCP chain runs as the single-pass megakernel in
-``kernels.fused`` (see ``fused_dehaze_dcp`` below). Its execution substrate
+stage, the whole DCP/CAP chain runs as the single-pass megakernel in
+``kernels.fused`` (see ``fused_dehaze`` below). Its execution substrate
 is still resolved to ref/pallas/interpret per backend/env, so the fused
 path also runs on the CPU CI container.
 
@@ -29,10 +29,15 @@ from repro.kernels.dark_channel import dark_channel_pallas, min_filter_2d_pallas
 from repro.kernels.boxfilter import box_filter_2d_pallas
 from repro.kernels.recover import recover_pallas
 from repro.kernels.atmolight import atmolight_pallas
-from repro.kernels.fused import (fused_dehaze_dcp_pallas,
+from repro.kernels.fused import (fused_dehaze_pallas,
+                                 fused_transmission_halo_pallas,
                                  fused_transmission_pallas)
+from repro.kernels.ref import CAP_COEFFS
 
 Mode = Literal["auto", "ref", "pallas", "interpret", "fused"]
+
+SUBSTRATES = ("ref", "pallas", "interpret")
+MODES = SUBSTRATES + ("fused", "auto")
 
 
 def resolve_mode(mode: Mode = "auto") -> str:
@@ -41,15 +46,28 @@ def resolve_mode(mode: Mode = "auto") -> str:
     ``"fused"`` is a pipeline-level mode (it selects *which* ops run, not
     *how*); here it resolves like "auto": env ``REPRO_KERNEL_MODE`` if it
     names a substrate, else Pallas on TPU and the XLA oracle elsewhere.
+
+    Unknown values — in the argument or in ``REPRO_KERNEL_MODE`` — raise
+    ``ValueError``. They used to fall straight through every dispatch
+    wrapper's ``m == "ref"`` check into the compiled-Pallas branch, so a
+    typo like ``REPRO_KERNEL_MODE=Pallas`` silently ran compiled kernels.
     """
+    if mode not in MODES:
+        raise ValueError(
+            f"unknown kernel mode {mode!r}; expected one of {sorted(MODES)}")
+    env = os.environ.get("REPRO_KERNEL_MODE", "")
+    if env and env not in MODES:
+        raise ValueError(
+            f"REPRO_KERNEL_MODE={env!r} is not a valid kernel mode; "
+            f"expected one of {sorted(MODES)}, or unset it")
+    default = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if env == "auto":                    # explicit "auto" == unset
+        env = ""
     m = mode
     if m == "auto":
-        m = os.environ.get("REPRO_KERNEL_MODE", "") or \
-            ("pallas" if jax.default_backend() == "tpu" else "ref")
+        m = env or default
     if m == "fused":
-        env = os.environ.get("REPRO_KERNEL_MODE", "")
-        m = env if env in ("ref", "pallas", "interpret") else \
-            ("pallas" if jax.default_backend() == "tpu" else "ref")
+        m = env if env in SUBSTRATES else default
     return m
 
 
@@ -174,8 +192,104 @@ def cap_depth(img: jnp.ndarray, w0: float, w1: float, w2: float) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Fused single-pass DCP megakernel (kernels.fused)
+# Fused single-pass megakernels (kernels.fused) — algorithm-parametric
 # ---------------------------------------------------------------------------
+
+def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
+                 A_saved: jnp.ndarray, last_update: jnp.ndarray,
+                 initialized: jnp.ndarray, *, algorithm: str = "dcp",
+                 radius: int, omega: float = 0.95, beta: float = 1.0,
+                 cap_w: Tuple[float, float, float] = CAP_COEFFS,
+                 refine: bool, gf_radius: int, gf_eps: float, t0: float,
+                 gamma: float, period: int, lam: float,
+                 frames_per_block: int = 0,
+                 mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Whole DCP/CAP chain in one launch: (..., H, W, 3) -> (J, t, a_seq, A, k).
+
+    ``frames_per_block <= 0`` resolves the tile from the tuning registry's
+    per-algorithm bucket (env ``REPRO_TUNE_FUSED_DCP`` /
+    ``REPRO_TUNE_FUSED_CAP`` > ``results/kernel_tuning.json`` > 1).
+    """
+    m = resolve_substrate(mode)
+    flat, lead = _batched(img, 3)
+    flat_ids = frame_ids.reshape(-1)
+    if m == "ref":
+        j, t, a_seq, a_fin, k_fin = _ref.fused_dehaze(
+            flat, flat_ids, A_saved, last_update, initialized,
+            algorithm=algorithm, radius=radius, omega=omega, beta=beta,
+            cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+            t0=t0, gamma=gamma, period=period, lam=lam)
+    else:
+        if frames_per_block <= 0:
+            frames_per_block = int(tuning.get_params(
+                f"fused_{algorithm}", flat.shape[:3]).get(
+                    "frames_per_block", 1))
+        j, t, a_seq, a_fin, k_fin = fused_dehaze_pallas(
+            flat, flat_ids, A_saved, last_update, initialized,
+            algorithm=algorithm, radius=radius, omega=omega, beta=beta,
+            cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
+            gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam,
+            frames_per_block=frames_per_block,
+            interpret=(m == "interpret"))
+    return (j.reshape(lead + j.shape[1:]), t.reshape(lead + t.shape[1:]),
+            a_seq.reshape(lead + (3,)), a_fin, k_fin)
+
+
+def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
+                       algorithm: str = "dcp", radius: int,
+                       omega: float = 0.95, beta: float = 1.0,
+                       cap_w: Tuple[float, float, float] = CAP_COEFFS,
+                       refine: bool, gf_radius: int, gf_eps: float,
+                       mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Fused t-map + argmin-t candidates (the sharded-step stage):
+    (..., H, W, 3) -> (t, t_min (...,), cand_rgb (..., 3))."""
+    m = resolve_substrate(mode)
+    flat, lead = _batched(img, 3)
+    if m == "ref":
+        t, t_min, cand = _ref.fused_transmission(
+            flat, A_saved, algorithm=algorithm, radius=radius, omega=omega,
+            beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+            gf_eps=gf_eps)
+    else:
+        t, t_min, cand = fused_transmission_pallas(
+            flat, A_saved, algorithm=algorithm, radius=radius, omega=omega,
+            beta=beta, cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
+            gf_eps=gf_eps, interpret=(m == "interpret"))
+    return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
+            cand.reshape(lead + (3,)))
+
+
+def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
+                            guide_ext: jnp.ndarray, valid: jnp.ndarray, *,
+                            algorithm: str = "dcp", radius: int,
+                            omega: float = 0.95, beta: float = 1.0,
+                            refine: bool, gf_radius: int, gf_eps: float,
+                            mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Halo-aware fused t-map stage for the height-sharded pipeline.
+
+    img: (..., H_loc, W, 3) core block; pre_ext/guide_ext: (..., H_ext, W)
+    halo-extended planes from ``core.spatial.halo_exchange_height``;
+    valid: (H_ext,) row-validity mask. -> (t, t_min, cand_rgb) as
+    ``fused_transmission``. The masked min/box filters run in-VMEM on the
+    Pallas substrates and through ``core.spatial`` on the XLA oracle.
+    """
+    m = resolve_substrate(mode)
+    flat, lead = _batched(img, 3)
+    flat_pre, _ = _batched(pre_ext, 2)
+    flat_guide, _ = _batched(guide_ext, 2)
+    if m == "ref":
+        t, t_min, cand = _ref.fused_transmission_halo(
+            flat, flat_pre, flat_guide, valid, algorithm=algorithm,
+            radius=radius, omega=omega, beta=beta, refine=refine,
+            gf_radius=gf_radius, gf_eps=gf_eps)
+    else:
+        t, t_min, cand = fused_transmission_halo_pallas(
+            flat, flat_pre, flat_guide, valid, algorithm=algorithm,
+            radius=radius, omega=omega, beta=beta, refine=refine,
+            gf_radius=gf_radius, gf_eps=gf_eps, interpret=(m == "interpret"))
+    return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
+            cand.reshape(lead + (3,)))
+
 
 def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
                      A_saved: jnp.ndarray, last_update: jnp.ndarray,
@@ -184,48 +298,19 @@ def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
                      gamma: float, period: int, lam: float,
                      frames_per_block: int = 0,
                      mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
-    """Whole DCP chain in one launch: (..., H, W, 3) -> (J, t, a_seq, A, k).
-
-    ``frames_per_block <= 0`` resolves the tile from the tuning registry
-    (env ``REPRO_TUNE_FUSED_DCP`` > ``results/kernel_tuning.json`` > 1).
-    """
-    m = resolve_substrate(mode)
-    flat, lead = _batched(img, 3)
-    flat_ids = frame_ids.reshape(-1)
-    if m == "ref":
-        j, t, a_seq, a_fin, k_fin = _ref.fused_dehaze_dcp(
-            flat, flat_ids, A_saved, last_update, initialized, radius=radius,
-            omega=omega, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
-            t0=t0, gamma=gamma, period=period, lam=lam)
-    else:
-        if frames_per_block <= 0:
-            frames_per_block = int(tuning.get_params(
-                "fused_dcp", flat.shape[:3]).get("frames_per_block", 1))
-        j, t, a_seq, a_fin, k_fin = fused_dehaze_dcp_pallas(
-            flat, flat_ids, A_saved, last_update, initialized, radius=radius,
-            omega=omega, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
-            t0=t0, gamma=gamma, period=period, lam=lam,
-            frames_per_block=frames_per_block,
-            interpret=(m == "interpret"))
-    return (j.reshape(lead + j.shape[1:]), t.reshape(lead + t.shape[1:]),
-            a_seq.reshape(lead + (3,)), a_fin, k_fin)
+    """Back-compat DCP-only entry point (PR 1 name) -> ``fused_dehaze``."""
+    return fused_dehaze(img, frame_ids, A_saved, last_update, initialized,
+                        algorithm="dcp", radius=radius, omega=omega,
+                        refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+                        t0=t0, gamma=gamma, period=period, lam=lam,
+                        frames_per_block=frames_per_block, mode=mode)
 
 
 def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                            radius: int, omega: float, refine: bool,
                            gf_radius: int, gf_eps: float,
                            mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
-    """Fused t-map + argmin-t candidates (the sharded-step stage):
-    (..., H, W, 3) -> (t, t_min (...,), cand_rgb (..., 3))."""
-    m = resolve_substrate(mode)
-    flat, lead = _batched(img, 3)
-    if m == "ref":
-        t, t_min, cand = _ref.fused_transmission_dcp(
-            flat, A_saved, radius=radius, omega=omega, refine=refine,
-            gf_radius=gf_radius, gf_eps=gf_eps)
-    else:
-        t, t_min, cand = fused_transmission_pallas(
-            flat, A_saved, radius=radius, omega=omega, refine=refine,
-            gf_radius=gf_radius, gf_eps=gf_eps, interpret=(m == "interpret"))
-    return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
-            cand.reshape(lead + (3,)))
+    """Back-compat DCP-only entry point (PR 1 name) -> ``fused_transmission``."""
+    return fused_transmission(img, A_saved, algorithm="dcp", radius=radius,
+                              omega=omega, refine=refine,
+                              gf_radius=gf_radius, gf_eps=gf_eps, mode=mode)

@@ -133,6 +133,11 @@ def recover(hazy: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
 # CAP depth map (Zhu et al. [23], paper Eq. 4)
 # ---------------------------------------------------------------------------
 
+# Published CAP linear-model coefficients (w0, w1, w2) — the single source
+# shared by the fused kernels; ``DehazeConfig`` defaults mirror these.
+CAP_COEFFS = (0.121779, 0.959710, -0.780245)
+
+
 def cap_depth(img: jnp.ndarray, w0: float, w1: float, w2: float) -> jnp.ndarray:
     """d(x) = w0 + w1 * value(x) + w2 * saturation(x) from RGB in [0,1]."""
     v = jnp.max(img, axis=-1)
@@ -142,7 +147,7 @@ def cap_depth(img: jnp.ndarray, w0: float, w1: float, w2: float) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Fused DCP megakernel oracle (paper Eq. 3 + 6 + 9 + 8 in one logical op)
+# Fused megakernel oracles (paper Eq. 3/4 + 6 + 9 + 8 in one logical op)
 # ---------------------------------------------------------------------------
 
 # Rec.601 luma — THE guided-filter guide definition. The fused kernel, the
@@ -157,19 +162,48 @@ def luminance(img: jnp.ndarray) -> jnp.ndarray:
     return img.astype(jnp.float32) @ w
 
 
-def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
-                           radius: int, omega: float, refine: bool,
-                           gf_radius: int, gf_eps: float):
+def premap(x: jnp.ndarray, a0: jnp.ndarray, algorithm: str,
+           cap_w=CAP_COEFFS) -> jnp.ndarray:
+    """Per-pixel stage-1 map: DCP min_c I/A (Eq. 3) or CAP depth (Eq. 4).
+
+    THE canonical pre-map: the fused kernels, the oracles, and the sharded
+    pipeline (which computes it before the halo exchange) all route here,
+    so the in-kernel and out-of-kernel forms stay bit-identical.
+    """
+    if algorithm == "dcp":
+        return jnp.min(x / a0, axis=-1)
+    return cap_depth(x, *cap_w)
+
+
+def tmap_from_dark(dark: jnp.ndarray, algorithm: str, omega: float,
+                   beta: float) -> jnp.ndarray:
+    """Min-filtered pre-map -> raw transmission: DCP ``1 - omega*dark``
+    (Eq. 3 outer map) or CAP ``exp(-beta*dark)`` (Eq. 4).
+
+    Like ``premap``, this is THE canonical form — the fused kernels, the
+    oracles, and the sharded staged chain all route here.
+    """
+    if algorithm == "dcp":
+        return 1.0 - omega * dark
+    return jnp.exp(-beta * dark)
+
+
+def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
+                       algorithm: str = "dcp", radius: int,
+                       omega: float = 0.95, beta: float = 1.0,
+                       cap_w=CAP_COEFFS, refine: bool, gf_radius: int,
+                       gf_eps: float):
     """Oracle for ``fused.fused_transmission_pallas``.
 
-    (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)): Eq. 3 transmission from the
-    saved A, guided-filter refinement, and the per-frame argmin-t candidate.
+    (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)): Eq. 3 (DCP) / Eq. 4 (CAP)
+    transmission, guided-filter refinement, per-frame argmin-t candidate.
     """
     b = img.shape[0]
     x = img.astype(jnp.float32)
     a0 = jnp.maximum(A_saved.astype(jnp.float32), 1e-3)
-    pre = jnp.min(x / a0, axis=-1)
-    t_raw = 1.0 - omega * min_filter_2d(pre, radius)
+    pre = premap(x, a0, algorithm, cap_w)
+    dark = min_filter_2d(pre, radius)
+    t_raw = tmap_from_dark(dark, algorithm, omega, beta)
     flat_t = t_raw.reshape(b, -1)
     j = jnp.argmin(flat_t, axis=-1)
     t_min = jnp.take_along_axis(flat_t, j[:, None], axis=-1)[:, 0]
@@ -182,20 +216,67 @@ def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
     return t.astype(img.dtype), t_min, cand.astype(img.dtype)
 
 
-def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
-                     A_saved: jnp.ndarray, last_update: jnp.ndarray,
-                     initialized: jnp.ndarray, *, radius: int, omega: float,
-                     refine: bool, gf_radius: int, gf_eps: float, t0: float,
-                     gamma: float, period: int, lam: float):
-    """Oracle for ``fused.fused_dehaze_dcp_pallas``: (J, t, a_seq, A_fin, k_fin).
+def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
+                           radius: int, omega: float, refine: bool,
+                           gf_radius: int, gf_eps: float):
+    """Back-compat DCP-only entry point (PR 1 name)."""
+    return fused_transmission(img, A_saved, algorithm="dcp", radius=radius,
+                              omega=omega, refine=refine, gf_radius=gf_radius,
+                              gf_eps=gf_eps)
+
+
+def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
+                            guide_ext: jnp.ndarray, valid: jnp.ndarray, *,
+                            algorithm: str = "dcp", radius: int,
+                            omega: float = 0.95, beta: float = 1.0,
+                            refine: bool, gf_radius: int, gf_eps: float):
+    """Oracle for ``fused.fused_transmission_halo_pallas``.
+
+    Composes the masked XLA filters from ``core.spatial`` on the
+    halo-extended (pre-map, guide) planes — exactly the per-stage chain the
+    height-sharded pipeline ran before the fused halo kernel existed.
+    """
+    from repro.core import spatial                 # lazy: spatial imports ref
+    b, h_loc = img.shape[0], img.shape[1]
+    halo = (pre_ext.shape[1] - h_loc) // 2
+    dark = spatial.masked_min_filter_2d(pre_ext.astype(jnp.float32), valid,
+                                        radius)
+    t_raw_ext = tmap_from_dark(dark, algorithm, omega, beta)
+    core = slice(halo, halo + h_loc)
+    t_raw = t_raw_ext[:, core]
+    if refine:
+        t_ext = spatial.masked_guided_filter(guide_ext.astype(jnp.float32),
+                                             t_raw_ext, valid, gf_radius,
+                                             gf_eps)
+        t = jnp.clip(t_ext[:, core], 0.0, 1.0)
+    else:
+        t = t_raw
+    flat_t = t_raw.reshape(b, -1)
+    j = jnp.argmin(flat_t, axis=-1)
+    t_min = jnp.take_along_axis(flat_t, j[:, None], axis=-1)[:, 0]
+    cand = jnp.take_along_axis(
+        img.astype(jnp.float32).reshape(b, -1, 3), j[:, None, None],
+        axis=1)[:, 0]
+    return t.astype(img.dtype), t_min, cand.astype(img.dtype)
+
+
+def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
+                 A_saved: jnp.ndarray, last_update: jnp.ndarray,
+                 initialized: jnp.ndarray, *, algorithm: str = "dcp",
+                 radius: int, omega: float = 0.95, beta: float = 1.0,
+                 cap_w=CAP_COEFFS, refine: bool, gf_radius: int,
+                 gf_eps: float, t0: float, gamma: float, period: int,
+                 lam: float):
+    """Oracle for ``fused.fused_dehaze_pallas``: (J, t, a_seq, A_fin, k_fin).
 
     Composes the per-stage oracles plus the Eq. 9 EMA recurrence (lax.scan)
     — the sequential scan the megakernel realizes via its grid carry.
     """
     x = img.astype(jnp.float32)
-    t, _, cand = fused_transmission_dcp(
-        x, A_saved, radius=radius, omega=omega, refine=refine,
-        gf_radius=gf_radius, gf_eps=gf_eps)
+    t, _, cand = fused_transmission(
+        x, A_saved, algorithm=algorithm, radius=radius, omega=omega,
+        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps)
 
     def step(carry, inp):
         A_prev, k, inited = carry
@@ -219,3 +300,15 @@ def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
         J = J ** gamma
     return (J.astype(img.dtype), t.astype(img.dtype), a_seq,
             A_fin, k_fin.astype(jnp.int32))
+
+
+def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,
+                     A_saved: jnp.ndarray, last_update: jnp.ndarray,
+                     initialized: jnp.ndarray, *, radius: int, omega: float,
+                     refine: bool, gf_radius: int, gf_eps: float, t0: float,
+                     gamma: float, period: int, lam: float):
+    """Back-compat DCP-only entry point (PR 1 name)."""
+    return fused_dehaze(img, frame_ids, A_saved, last_update, initialized,
+                        algorithm="dcp", radius=radius, omega=omega,
+                        refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+                        t0=t0, gamma=gamma, period=period, lam=lam)

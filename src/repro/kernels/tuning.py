@@ -27,7 +27,10 @@ from typing import Any, Callable, Dict, Iterable, Optional
 import jax
 
 DEFAULTS: Dict[str, Dict[str, Any]] = {
+    # Per-algorithm buckets: CAP's pre-map (HSV depth, no divide-by-A) has a
+    # different VMEM/FLOP profile, so its sweet spot is tuned separately.
     "fused_dcp": {"frames_per_block": 1},
+    "fused_cap": {"frames_per_block": 1},
     "atmolight": {"tile_h": 0},          # 0 = whole frame per grid step
 }
 
@@ -128,42 +131,47 @@ def autotune(op: str, shape: Iterable[int],
 
 
 def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
-                   candidates=(1, 2, 4), iters: int = 3,
-                   persist: bool = True) -> Dict[str, Any]:
-    """Sweep ``frames_per_block`` for the fused DCP megakernel.
+                   candidates=(1, 2, 4), iters: int = 3, persist: bool = True,
+                   algorithms=("dcp", "cap")) -> Dict[str, Any]:
+    """Sweep ``frames_per_block`` for the fused megakernels, per algorithm.
 
     Uses the dispatch layer, so it times whatever substrate the current
-    backend resolves to (Pallas on TPU, the XLA oracle on CPU).
+    backend resolves to (Pallas on TPU, the XLA oracle on CPU). Each
+    algorithm persists into its own ``fused_<algorithm>`` bucket.
     """
     import jax.numpy as jnp
     import numpy as np
 
     from repro.kernels import ops
 
-    table = {}
-    for b, h, w in shapes:
-        r = np.random.default_rng(0)
-        img = jnp.asarray(r.random((b, h, w, 3), np.float32))
-        ids = jnp.arange(b, dtype=jnp.int32)
-        A = jnp.ones((3,), jnp.float32)
-        k0 = jnp.asarray(-(2 ** 30), jnp.int32)
-        init = jnp.asarray(False)
+    table: Dict[str, Any] = {}
+    for algorithm in algorithms:
+        op = f"fused_{algorithm}"
+        table[op] = {}
+        for b, h, w in shapes:
+            r = np.random.default_rng(0)
+            img = jnp.asarray(r.random((b, h, w, 3), np.float32))
+            ids = jnp.arange(b, dtype=jnp.int32)
+            A = jnp.ones((3,), jnp.float32)
+            k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+            init = jnp.asarray(False)
 
-        def build(params):
-            def run():
-                return ops.fused_dehaze_dcp(
-                    img, ids, A, k0, init, radius=7, omega=0.95, refine=True,
-                    gf_radius=8, gf_eps=1e-3, t0=0.1, gamma=1.0, period=8,
-                    lam=0.05, frames_per_block=params["frames_per_block"])
-            return run
+            def build(params):
+                def run():
+                    return ops.fused_dehaze(
+                        img, ids, A, k0, init, algorithm=algorithm, radius=7,
+                        omega=0.95, refine=True, gf_radius=8, gf_eps=1e-3,
+                        t0=0.1, gamma=1.0, period=8, lam=0.05,
+                        frames_per_block=params["frames_per_block"])
+                return run
 
-        table[shape_bucket((b, h, w))] = autotune(
-            "fused_dcp", (b, h, w),
-            [{"frames_per_block": f} for f in candidates],
-            build, iters=iters, persist=persist)
+            table[op][shape_bucket((b, h, w))] = autotune(
+                op, (b, h, w),
+                [{"frames_per_block": f} for f in candidates],
+                build, iters=iters, persist=persist)
     return table
 
 
 if __name__ == "__main__":
     out = autotune_fused()
-    print(json.dumps({"fused_dcp": out, "path": str(table_path())}, indent=2))
+    print(json.dumps({**out, "path": str(table_path())}, indent=2))

@@ -114,6 +114,91 @@ def test_packed_halo_matches_rgb_halo():
     """)
 
 
+def test_sharded_fused_halo_matches_staged_chain():
+    """Height sharding (n_h > 1) keeps ``use_fused``: the halo-aware fused
+    kernel (fed by the packed (pre-map, guide) exchange + row-validity
+    masking) must match the single-device per-stage chain — including the
+    mesh-edge shards — on both the XLA oracle and the interpreted kernel
+    body. A spy asserts the fused halo op is actually what ran."""
+    run_child("""
+        import os
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
+        from repro.core import (DehazeConfig, make_dehaze_step,
+                                make_sharded_dehaze_step, init_atmo_state)
+        import repro.kernels.ops as kops
+
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(2)
+        I = jnp.asarray(rng.random((4, 64, 48, 3), np.float32))
+        ids = jnp.arange(4, dtype=jnp.int32)
+
+        calls = []
+        orig = kops.fused_transmission_halo
+        def spy(*a, **k):
+            calls.append(1)
+            return orig(*a, **k)
+        kops.fused_transmission_halo = spy
+
+        for algo in ("dcp", "cap"):
+            base = DehazeConfig(algorithm=algo, kernel_mode="ref",
+                                gf_radius=8, update_period=2)
+            want = jax.jit(make_dehaze_step(base))(I, ids, init_atmo_state())
+            for env, packed in (("", False), ("", True), ("interpret", False)):
+                if env:
+                    os.environ["REPRO_KERNEL_MODE"] = env
+                else:
+                    os.environ.pop("REPRO_KERNEL_MODE", None)
+                cfg = DehazeConfig(algorithm=algo, kernel_mode="fused",
+                                   gf_radius=8, update_period=2,
+                                   halo_packed=packed)
+                n0 = len(calls)
+                step, _, _ = make_sharded_dehaze_step(cfg, mesh)
+                with mesh:
+                    out = jax.jit(step)(I, ids, init_atmo_state())
+                assert len(calls) > n0, "fused halo path was not taken"
+                np.testing.assert_allclose(np.asarray(out.frames),
+                                           np.asarray(want.frames), atol=1e-5)
+                np.testing.assert_allclose(
+                    np.asarray(out.transmission),
+                    np.asarray(want.transmission), atol=1e-5)
+                np.testing.assert_allclose(np.asarray(out.atmo_light),
+                                           np.asarray(want.atmo_light),
+                                           atol=1e-5)
+                np.testing.assert_allclose(np.asarray(out.state.A),
+                                           np.asarray(want.state.A),
+                                           atol=1e-5)
+        print("ok")
+    """)
+
+
+def test_sharded_fused_halo_multihop():
+    """Fused halo path when the halo spans multiple shards (multi-hop
+    ppermute) — the extended block is mostly neighbor rows."""
+    run_child("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
+        from repro.core import (DehazeConfig, make_dehaze_step,
+                                make_sharded_dehaze_step, init_atmo_state)
+        mesh = compat.make_mesh((1, 8), ("data", "model"))
+        rng = np.random.default_rng(3)
+        I = jnp.asarray(rng.random((2, 64, 32, 3), np.float32))
+        ids = jnp.arange(2, dtype=jnp.int32)
+        # patch 7 + 2*gf 12 = halo 31 -> 4 hops over 8-row shards
+        base = DehazeConfig(algorithm="dcp", kernel_mode="ref",
+                            patch_radius=7, gf_radius=12)
+        want = jax.jit(make_dehaze_step(base))(I, ids, init_atmo_state())
+        cfg = DehazeConfig(algorithm="dcp", kernel_mode="fused",
+                           patch_radius=7, gf_radius=12)
+        step, _, _ = make_sharded_dehaze_step(cfg, mesh)
+        with mesh:
+            out = jax.jit(step)(I, ids, init_atmo_state())
+        np.testing.assert_allclose(np.asarray(out.frames),
+                                   np.asarray(want.frames), atol=1e-5)
+        print("ok")
+    """)
+
+
 def test_moe_ep_matches_single_device():
     """Expert-parallel all-to-all MoE == single-device execution."""
     run_child("""

@@ -1,5 +1,6 @@
-"""Fused DCP megakernel: interpret-mode parity vs the jnp oracle, tiling
-registry behavior, and pipeline-level equivalence with the per-stage chain.
+"""Fused megakernels (DCP + CAP): interpret-mode parity vs the jnp oracles,
+halo-aware masking semantics, tiling registry behavior, and pipeline-level
+equivalence with the per-stage chain.
 
 No hypothesis dependency here on purpose — this file is the minimal-install
 coverage for the fused hot path.
@@ -14,7 +15,9 @@ import pytest
 from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
 from repro.core.normalize import AtmoState
 from repro.kernels import ops, ref, tuning
-from repro.kernels.fused import fused_dehaze_dcp_pallas, fused_transmission_pallas
+from repro.kernels.fused import (fused_dehaze_dcp_pallas,
+                                 fused_transmission_halo_pallas,
+                                 fused_transmission_pallas)
 
 # Odd H/W (not divisible by any tile), plus an even multi-frame shape.
 SHAPES = [(1, 33, 17), (2, 24, 32), (4, 16, 16)]
@@ -41,8 +44,8 @@ def _state(warm=False):
 def _run(img, state, mode, **kw):
     b = img.shape[0]
     ids = jnp.arange(10, 10 + b, dtype=jnp.int32)
-    return ops.fused_dehaze_dcp(img, ids, state.A, state.last_update,
-                                state.initialized, mode=mode, **kw)
+    return ops.fused_dehaze(img, ids, state.A, state.last_update,
+                            state.initialized, mode=mode, **kw)
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -85,10 +88,54 @@ def test_fused_parity_bfloat16():
                                atol=2e-2)
 
 
+@pytest.mark.parametrize("algorithm", ["cap"])
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("warm", [False, True])
+def test_fused_parity_cap(shape, warm, algorithm):
+    """CAP megakernel (Eq. 4 depth pre-map + exp transmission): max abs err
+    <= 1e-5 vs the oracle, cold and warm state."""
+    kw = dict(FUSED_KW, algorithm=algorithm, beta=1.2)
+    img = _img(shape, seed=29)
+    state = _state(warm)
+    got = _run(img, state, "interpret", **kw)
+    want = _run(img, state, "ref", **kw)
+    for g, w in zip(got[:3], want[:3]):                  # J, t, a_seq
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+    np.testing.assert_allclose(np.asarray(got[3]), np.asarray(want[3]),
+                               atol=1e-5)                # final A
+    assert int(got[4]) == int(want[4])                   # final last_update
+
+
+def test_fused_parity_cap_with_guided_refine():
+    kw = dict(FUSED_KW, algorithm="cap", refine=True)
+    img = _img((2, 24, 32), seed=31)
+    got = _run(img, _state(), "interpret", **kw)
+    want = _run(img, _state(), "ref", **kw)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               atol=1e-4)
+
+
+def test_fused_transmission_cap_stage_parity():
+    img = _img((2, 24, 32), seed=37)
+    A = jnp.asarray([0.9, 0.92, 0.88], jnp.float32)
+    kw = dict(algorithm="cap", radius=3, beta=1.0, refine=True, gf_radius=4,
+              gf_eps=1e-3)
+    t_i, tmin_i, rgb_i = fused_transmission_pallas(img, A, interpret=True, **kw)
+    t_r, tmin_r, rgb_r = ref.fused_transmission(img, A, **kw)
+    np.testing.assert_allclose(np.asarray(t_i), np.asarray(t_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(tmin_i), np.asarray(tmin_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rgb_i), np.asarray(rgb_r), atol=1e-5)
+
+
 @pytest.mark.parametrize("fpb", [2, 4, 3])
 def test_fused_frames_per_block(fpb):
     """Multi-frame grid blocks keep the EMA carry exact; a non-dividing
-    block size falls back to 1 frame per step rather than failing."""
+    block size rounds down to the largest divisor (3 -> 2 over a batch of
+    4) rather than failing."""
     img = _img((4, 16, 16), seed=7)
     state = _state()
     ids = jnp.arange(4, dtype=jnp.int32)
@@ -146,18 +193,110 @@ def test_fused_transmission_stage_parity():
     np.testing.assert_allclose(np.asarray(rgb_i), np.asarray(rgb_r), atol=1e-5)
 
 
+# --- halo-aware fused transmission (height-sharded stage) --------------------
+
+HALO_KW = dict(radius=3, omega=0.95, beta=1.0, gf_radius=4, gf_eps=1e-3)
+
+
+def _halo_inputs(h_loc=16, w=20, halo=5, b=2, seed=41):
+    """Synthetic halo-extended shard inputs with *garbage* in the invalid
+    rows — masking must make them irrelevant."""
+    r = np.random.default_rng(seed)
+    img = jnp.asarray(r.random((b, h_loc, w, 3), np.float32))
+    pre_ext = jnp.asarray(r.random((b, h_loc + 2 * halo, w), np.float32))
+    guide_ext = jnp.asarray(r.random((b, h_loc + 2 * halo, w), np.float32))
+    return img, pre_ext, guide_ext, halo
+
+
+MASKS = {
+    "interior": lambda n, halo: jnp.ones((n,), bool),
+    "top-edge": lambda n, halo: jnp.arange(n) >= halo,
+    "bottom-edge": lambda n, halo: jnp.arange(n) < n - halo,
+}
+
+
+@pytest.mark.parametrize("mask", sorted(MASKS))
+@pytest.mark.parametrize("algorithm", ["dcp", "cap"])
+@pytest.mark.parametrize("refine", [False, True])
+def test_fused_halo_parity(mask, algorithm, refine):
+    """Halo kernel (interpret) vs the masked XLA chain oracle, including
+    mesh-edge shards where row-validity masking must reproduce the
+    clipped-window border semantics. Acceptance gate: <= 1e-5 max-abs."""
+    img, pre_ext, guide_ext, halo = _halo_inputs()
+    valid = MASKS[mask](pre_ext.shape[1], halo)
+    kw = dict(HALO_KW, algorithm=algorithm, refine=refine)
+    got = fused_transmission_halo_pallas(img, pre_ext, guide_ext, valid,
+                                         interpret=True, **kw)
+    want = ref.fused_transmission_halo(img, pre_ext, guide_ext, valid, **kw)
+    for g, w in zip(got, want):
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+
+
+@pytest.mark.parametrize("algorithm", ["dcp", "cap"])
+def test_fused_halo_stitches_to_full_frame(algorithm):
+    """Two hand-built shards (top edge + bottom edge) run through the halo
+    kernel stitch bit-comparably into the unsharded fused oracle — the
+    in-kernel masking preserves global clipped-window border semantics."""
+    r = np.random.default_rng(43)
+    b, h, w = 2, 32, 20
+    h_loc = h // 2
+    img = jnp.asarray(r.random((b, h, w, 3), np.float32))
+    A = jnp.asarray([0.9, 0.92, 0.88], jnp.float32)
+    kw = dict(HALO_KW, algorithm=algorithm, refine=True)
+    # Halo composition rule (core.spatial): patch_radius + 2 * gf_radius.
+    halo = kw["radius"] + 2 * kw["gf_radius"]
+
+    pre = ref.premap(img, jnp.maximum(A, 1e-3), algorithm)
+    guide = ref.luminance(img)
+    junk = jnp.asarray(r.random((b, halo, w), np.float32))
+
+    t_parts, tmins, rgbs = [], [], []
+    for s, rows in enumerate((slice(0, h_loc), slice(h_loc, h))):
+        lo, hi = rows.start - halo, rows.stop + halo
+        if s == 0:                      # top shard: rows above image invalid
+            pre_ext = jnp.concatenate([junk, pre[:, :hi]], axis=1)
+            guide_ext = jnp.concatenate([junk, guide[:, :hi]], axis=1)
+            valid = jnp.arange(h_loc + 2 * halo) >= halo
+        else:                           # bottom shard: rows below invalid
+            pre_ext = jnp.concatenate([pre[:, lo:], junk], axis=1)
+            guide_ext = jnp.concatenate([guide[:, lo:], junk], axis=1)
+            valid = jnp.arange(h_loc + 2 * halo) < h_loc + halo
+        t, t_min, rgb = fused_transmission_halo_pallas(
+            img[:, rows], pre_ext, guide_ext, valid, interpret=True, **kw)
+        t_parts.append(t)
+        tmins.append(t_min)
+        rgbs.append(rgb)
+
+    t_full, tmin_full, rgb_full = ref.fused_transmission(
+        img, A, algorithm=algorithm, radius=kw["radius"], omega=kw["omega"],
+        beta=kw["beta"], refine=True, gf_radius=kw["gf_radius"],
+        gf_eps=kw["gf_eps"])
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(t_parts, axis=1)),
+                               np.asarray(t_full), atol=1e-5)
+    # Global argmin-t candidate == the better of the two shard candidates.
+    j = np.argmin(np.stack(tmins), axis=0)
+    np.testing.assert_allclose(np.stack(tmins).min(axis=0),
+                               np.asarray(tmin_full), atol=1e-6)
+    picked = np.stack(rgbs)[j, np.arange(b)]
+    np.testing.assert_allclose(picked, np.asarray(rgb_full), atol=1e-6)
+
+
 # --- pipeline wiring ---------------------------------------------------------
 
-def _pipeline_pair(monkeypatch, substrate):
+def _pipeline_pair(monkeypatch, substrate, algorithm="dcp"):
     if substrate:
         monkeypatch.setenv("REPRO_KERNEL_MODE", substrate)
     J, _ = _scene()
     ids = jnp.arange(4, dtype=jnp.int32)
-    out_f = make_dehaze_step(DehazeConfig(kernel_mode="fused",
+    out_f = make_dehaze_step(DehazeConfig(algorithm=algorithm,
+                                          kernel_mode="fused",
                                           update_period=2))(
         J, ids, init_atmo_state())
     monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
-    out_r = make_dehaze_step(DehazeConfig(kernel_mode="ref",
+    out_r = make_dehaze_step(DehazeConfig(algorithm=algorithm,
+                                          kernel_mode="ref",
                                           update_period=2))(
         J, ids, init_atmo_state())
     return out_f, out_r
@@ -169,12 +308,14 @@ def _scene():
     return J, None
 
 
+@pytest.mark.parametrize("algorithm", ["dcp", "cap"])
 @pytest.mark.parametrize("substrate", ["", "interpret"])
-def test_pipeline_fused_matches_ref_chain(monkeypatch, substrate):
-    """make_dehaze_step(kernel_mode="fused") == the per-stage ref chain
-    (on CPU the fused substrate resolves to the oracle; with
-    REPRO_KERNEL_MODE=interpret it runs the actual kernel body)."""
-    out_f, out_r = _pipeline_pair(monkeypatch, substrate)
+def test_pipeline_fused_matches_ref_chain(monkeypatch, substrate, algorithm):
+    """make_dehaze_step(kernel_mode="fused") == the per-stage ref chain, for
+    both algorithm instantiations (on CPU the fused substrate resolves to
+    the oracle; with REPRO_KERNEL_MODE=interpret it runs the actual kernel
+    body)."""
+    out_f, out_r = _pipeline_pair(monkeypatch, substrate, algorithm)
     np.testing.assert_allclose(np.asarray(out_f.frames),
                                np.asarray(out_r.frames), atol=2e-4)
     np.testing.assert_allclose(np.asarray(out_f.transmission),
@@ -185,12 +326,22 @@ def test_pipeline_fused_matches_ref_chain(monkeypatch, substrate):
                                np.asarray(out_r.state.A), atol=1e-4)
 
 
-def test_pipeline_fused_falls_back_for_cap():
-    """CAP has no fused variant yet — kernel_mode="fused" must still work."""
+def test_supports_fused_coverage():
+    """CAP is fused-covered now; top-k and DCP recompute still fall back
+    (kernel_mode="fused" must keep working through the per-stage chain)."""
+    from repro.core import algorithms as alg
+    assert alg.supports_fused(DehazeConfig(algorithm="cap"))
+    assert alg.supports_fused(DehazeConfig(algorithm="dcp"))
+    assert not alg.supports_fused(DehazeConfig(topk=8))
+    assert not alg.supports_fused(
+        DehazeConfig(algorithm="dcp", recompute_t_with_final_a=True))
+    # CAP's transmission is A-free: the recompute flag is a chain no-op
+    # there and must not knock it off the fused path.
+    assert alg.supports_fused(
+        DehazeConfig(algorithm="cap", recompute_t_with_final_a=True))
     J, _ = _scene()
     ids = jnp.arange(4, dtype=jnp.int32)
-    out = make_dehaze_step(DehazeConfig(algorithm="cap",
-                                        kernel_mode="fused"))(
+    out = make_dehaze_step(DehazeConfig(topk=8, kernel_mode="fused"))(
         J, ids, init_atmo_state())
     assert not bool(jnp.isnan(out.frames).any())
 
@@ -269,5 +420,25 @@ def test_fused_dispatch_reads_registry(monkeypatch, tmp_path):
     img = _img((4, 16, 16), seed=19)
     got = _run(img, _state(), "auto", **FUSED_KW)
     want = _run(img, _state(), "ref", **FUSED_KW)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-5)
+
+
+def test_fused_cap_registry_bucket(monkeypatch, tmp_path):
+    """CAP resolves its tile from its own ``fused_cap`` bucket."""
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
+    assert tuning.get_params("fused_cap", (4, 16, 16)) == \
+        {"frames_per_block": 1}
+    monkeypatch.setenv("REPRO_TUNE_FUSED_CAP", '{"frames_per_block": 2}')
+    assert tuning.get_params("fused_cap", (4, 16, 16)) == \
+        {"frames_per_block": 2}
+    # ...and the dcp bucket is unaffected by the cap override.
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 1}
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    img = _img((4, 16, 16), seed=19)
+    kw = dict(FUSED_KW, algorithm="cap")
+    got = _run(img, _state(), "auto", **kw)
+    want = _run(img, _state(), "ref", **kw)
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
                                atol=1e-5)

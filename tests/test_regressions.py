@@ -1,0 +1,124 @@
+"""Regression tests for targeted bugfixes (no hypothesis dependency).
+
+Covers: empty-batch EMA state round-trips (spout tail / elastic drain),
+``resolve_mode`` rejecting unknown ``REPRO_KERNEL_MODE`` values instead of
+silently taking the compiled-Pallas branch, and the fused megakernel's
+``frames_per_block`` degrading to the largest dividing tile instead of 1.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ema_scan, ema_scan_associative, init_atmo_state
+from repro.core.normalize import AtmoState
+from repro.kernels import ops
+from repro.kernels.fused import _resolve_frames_per_block
+
+
+# --- empty-batch EMA state round-trip ----------------------------------------
+
+@pytest.mark.parametrize("scan", [ema_scan, ema_scan_associative],
+                         ids=["scan", "associative"])
+def test_empty_batch_preserves_uninitialized_state(scan):
+    """A zero-length batch must NOT flip ``initialized``: the next real
+    first frame has to *replace* the white-light bootstrap placeholder, not
+    EMA-blend with it."""
+    state = init_atmo_state()
+    empty = jnp.zeros((0, 3), jnp.float32)
+    ids = jnp.zeros((0,), jnp.int32)
+    a_seq, out = scan(empty, ids, state, period=4, lam=0.3)
+    assert a_seq.shape == (0, 3)
+    assert not bool(out.initialized)
+    np.testing.assert_array_equal(np.asarray(out.A), np.asarray(state.A))
+    assert int(out.last_update) == int(state.last_update)
+
+    # The frame after the drain still bootstraps: A == candidate exactly.
+    cand = jnp.asarray([[0.5, 0.6, 0.7]], jnp.float32)
+    a_seq, out2 = scan(cand, jnp.asarray([12], jnp.int32), out,
+                       period=4, lam=0.3)
+    np.testing.assert_array_equal(np.asarray(a_seq[0]), np.asarray(cand[0]))
+    assert bool(out2.initialized) and int(out2.last_update) == 12
+
+
+@pytest.mark.parametrize("scan", [ema_scan, ema_scan_associative],
+                         ids=["scan", "associative"])
+def test_empty_batch_preserves_warm_state(scan):
+    state = AtmoState(A=jnp.asarray([0.8, 0.85, 0.9], jnp.float32),
+                      last_update=jnp.asarray(7, jnp.int32),
+                      initialized=jnp.asarray(True))
+    a_seq, out = scan(jnp.zeros((0, 3), jnp.float32),
+                      jnp.zeros((0,), jnp.int32), state, period=4, lam=0.3)
+    assert a_seq.shape == (0, 3)
+    assert bool(out.initialized)
+    np.testing.assert_array_equal(np.asarray(out.A), np.asarray(state.A))
+    assert int(out.last_update) == 7
+
+
+# --- resolve_mode env validation ---------------------------------------------
+
+@pytest.mark.parametrize("bad", ["Pallas", "refs", "INTERPRET", "xla"])
+def test_resolve_mode_rejects_unknown_env(monkeypatch, bad):
+    """Unknown REPRO_KERNEL_MODE values used to fall through every dispatch
+    wrapper's ``m == "ref"`` check into the compiled-Pallas branch."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", bad)
+    with pytest.raises(ValueError, match="REPRO_KERNEL_MODE"):
+        ops.resolve_mode("auto")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_MODE"):
+        ops.dark_channel(jnp.zeros((1, 8, 8, 3)), 1)
+
+
+def test_resolve_mode_rejects_unknown_argument():
+    with pytest.raises(ValueError, match="unknown kernel mode"):
+        ops.resolve_mode("fastest")
+
+
+@pytest.mark.parametrize("env,expected", [
+    ("ref", "ref"), ("pallas", "pallas"), ("interpret", "interpret"),
+    ("fused", "ref"),       # pipeline-level mode -> default substrate (CPU)
+    ("auto", "ref"),        # explicit "auto" == unset
+])
+def test_resolve_mode_accepts_known_env(monkeypatch, env, expected):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", env)
+    assert ops.resolve_mode("auto") == expected
+    assert ops.resolve_mode("fused") in ("ref", "pallas", "interpret")
+
+
+def test_resolve_mode_explicit_arg_still_resolves(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+    assert ops.resolve_mode("ref") == "ref"
+    assert ops.resolve_mode("interpret") == "interpret"
+    assert ops.resolve_mode("fused") in ("ref", "pallas")
+
+
+# --- frames_per_block largest-divisor degradation ----------------------------
+
+@pytest.mark.parametrize("batch,requested,expected", [
+    (4, 3, 2),    # non-divisor rounds DOWN to the largest divisor, not to 1
+    (6, 4, 3),
+    (12, 5, 4),
+    (5, 4, 1),    # prime batch: only 1 divides
+    (4, 9, 4),    # over-request clamps to the batch
+    (4, 0, 1),    # unset/registry-default
+    (4, -1, 1),
+])
+def test_frames_per_block_largest_divisor(batch, requested, expected):
+    assert _resolve_frames_per_block(batch, requested) == expected
+
+
+def test_non_divisor_tile_stays_exact():
+    """Requested tile 3 over a batch of 8 runs 2-frame blocks; the EMA grid
+    carry must stay exact across the resulting block boundaries."""
+    r = np.random.default_rng(3)
+    img = jnp.asarray(r.random((8, 12, 16, 3), np.float32))
+    ids = jnp.arange(8, dtype=jnp.int32)
+    s = init_atmo_state()
+    kw = dict(radius=2, omega=0.95, refine=False, gf_radius=2, gf_eps=1e-3,
+              t0=0.1, gamma=1.0, period=3, lam=0.2)
+    got = ops.fused_dehaze(img, ids, s.A, s.last_update, s.initialized,
+                           frames_per_block=3, mode="interpret", **kw)
+    want = ops.fused_dehaze(img, ids, s.A, s.last_update, s.initialized,
+                            mode="ref", **kw)
+    for g, w in zip(got[:3], want[:3]):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), atol=1e-5)
+    assert int(got[4]) == int(want[4])
