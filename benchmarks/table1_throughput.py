@@ -9,9 +9,18 @@ roofline table in EXPERIMENTS.md).
 
 Rows: baseline (frame-by-frame, the paper's "DCP [13]"/"CAP [23]" rows)
 vs framework with 1/2/3 workers (paper's 1N/2N/3N rows).
+
+Multi-stream rows (beyond the paper — its §5 future work): aggregate fps
+of L concurrent videos served by the lane-batched scheduler
+(``ElasticServer.serve_many``) vs the same L videos served one after the
+other by the single-stream path. One ``(L, B, ...)`` program per tick
+amortizes the per-batch dispatch + host-loop cost the sequential path
+pays L times, which is exactly the serving-layer win deployment papers
+(e.g. Hazedefy) argue decides real-time dehazing value.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Tuple
 
@@ -25,6 +34,17 @@ from repro.stream import ElasticServer
 
 RESOLUTIONS = {"320x240": (240, 320), "640x480": (480, 640),
                "1024x576": (576, 1024)}
+
+# Multi-stream rows: small frames (many-camera grids run at modest
+# per-camera resolution; this is also what keeps the row CPU-feasible).
+MULTI_RESOLUTION = ("160x120", (120, 160))
+MULTI_LANES = (1, 4, 16)
+
+
+def _stream_videos(n: int, h: int, w: int, n_frames: int):
+    return [generate_haze_video(HazeVideoSpec(
+        height=h, width=w, n_frames=n_frames, seed=50 + i, a_noise=0.0))
+        for i in range(n)]
 
 
 def bench_baseline(algo: str, h: int, w: int, n_frames: int = 12) -> float:
@@ -57,6 +77,68 @@ def bench_framework(algo: str, h: int, w: int, workers: int,
     return rep.fps
 
 
+def bench_sequential_streams(algo: str, h: int, w: int, n_streams: int,
+                             n_frames: int = 24, batch: int = 8) -> float:
+    """L videos served back-to-back through the single-stream path:
+    the baseline the lane-batched scheduler must beat. Aggregate fps =
+    total frames / total wall (includes the per-stream session turnover —
+    device drain, monitor teardown/setup — the sequential path pays L
+    times and continuous batching hides)."""
+    vids = _stream_videos(n_streams, h, w, n_frames)
+    cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
+    srv = ElasticServer(cfg, n_workers=1, batch=batch, timeout_s=5.0)
+    srv.serve(iter(vids[0].hazy[:batch]), stream_id="warmup")  # compile
+    t0 = time.perf_counter()
+    total = 0
+    for i, vid in enumerate(vids):
+        rep = srv.serve(iter(vid.hazy), stream_id=f"seq{i}")
+        total += rep.frames
+    return total / (time.perf_counter() - t0)
+
+
+def bench_multi_stream(algo: str, h: int, w: int, n_streams: int,
+                       n_frames: int = 24, batch: int = 8) -> float:
+    """L videos multiplexed onto L lanes of one device batch per tick.
+
+    On this 2-core CPU container the vmapped (L, B, ...) program is still
+    compute-bound, so the measured gain is mostly dispatch/turnover
+    amortization (~1.2-1.4x at L=4); on an accelerator where one stream
+    cannot saturate the chip, lane batching is the difference between
+    1/L utilization and full utilization — that regime is what the row's
+    shape models."""
+    vids = _stream_videos(n_streams, h, w, n_frames)
+    cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
+    srv = ElasticServer(cfg, batch=batch, timeout_s=5.0)
+    srv.serve_many([(f"warm{i}", iter(v.hazy[:batch]))
+                    for i, v in enumerate(vids)])              # compile
+    rep = srv.serve_many([(f"cam{i}", iter(v.hazy))
+                          for i, v in enumerate(vids)])
+    return rep.aggregate_fps
+
+
+def multi_stream_rows(algo: str = "dcp") -> List[Tuple[str, float, str]]:
+    """Aggregate fps at L=1/4/16 concurrent streams vs L sequential serves.
+
+    The derived column reports ``<multi fps>(<multi/seq ratio>x)``."""
+    res_name, (h, w) = MULTI_RESOLUTION
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_frames = 16 if smoke else 24
+    out = []
+    for n_streams in MULTI_LANES:
+        if smoke and n_streams > 4:
+            continue
+        fps_seq = bench_sequential_streams(algo, h, w, n_streams,
+                                           n_frames=n_frames)
+        fps_multi = bench_multi_stream(algo, h, w, n_streams,
+                                       n_frames=n_frames)
+        out.append((f"table1/seq-L{n_streams}-{algo}/{res_name}",
+                    1e6 / fps_seq, f"{fps_seq:.2f}fps"))
+        out.append((f"table1/multi-L{n_streams}-{algo}/{res_name}",
+                    1e6 / fps_multi,
+                    f"{fps_multi:.2f}fps({fps_multi / fps_seq:.2f}x)"))
+    return out
+
+
 def rows() -> List[Tuple[str, float, str]]:
     out = []
     for algo in ("dcp", "cap"):
@@ -68,6 +150,7 @@ def rows() -> List[Tuple[str, float, str]]:
                 fps = bench_framework(algo, h, w, nw)
                 out.append((f"table1/{nw}N-{algo}/{res_name}",
                             1e6 / fps, f"{fps:.2f}fps"))
+    out.extend(multi_stream_rows())
     return out
 
 

@@ -145,7 +145,10 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
     """Run components 1-3 + the §3.3 EMA as one fused op.
 
     Returns (J, t, a_seq, new AtmoState); semantics match the per-stage
-    chain in ``pipeline.make_dehaze_step``.
+    chain in ``pipeline.make_dehaze_step``. ``initialized`` only flips
+    once a *valid* (non-padding, id >= 0) frame has been folded in, so an
+    all-padding batch — e.g. an unoccupied scheduler lane — passes the
+    state through untouched, matching ``normalize.ema_scan``.
     """
     from repro.core.normalize import AtmoState
     J, t, a_seq, a_fin, k_fin = ops.fused_dehaze(
@@ -155,8 +158,10 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
         t0=cfg.t0, gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
         mode=cfg.kernel_mode)
-    new_state = AtmoState(A=a_fin, last_update=k_fin,
-                          initialized=jnp.asarray(True))
+    new_state = AtmoState(
+        A=a_fin, last_update=k_fin,
+        initialized=jnp.logical_or(state.initialized,
+                                   jnp.any(frame_ids >= 0)))
     return J, t, a_seq, new_state
 
 

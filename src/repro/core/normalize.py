@@ -19,11 +19,25 @@ State is a tiny pytree so it checkpoints/replicates for free; in the
 sharded pipeline the per-frame candidates are all-gathered along the frame
 axis (a few dozen bytes) before the scan — that collective *is* the
 paper's broadcast, minus the race.
+
+**Padding frames.** A ``frame_id < 0`` marks padding (the spout's tail
+fill, or a whole padded lane in the multi-stream scheduler). Both scans
+mask such frames out of the recurrence: they never trigger an update,
+never flip ``initialized``, and their output slot carries the running A
+unchanged. A batch of *only* padding behaves exactly like the empty batch.
+
+**Lanes.** The multi-tenant serving runtime batches L independent streams
+along a leading lane axis. ``AtmoState`` itself is the lane container —
+stack every leaf with ``pack_atmo_states`` and the result is an AtmoState
+with ``A (L, 3) / last_update (L,) / initialized (L,)`` that vmaps over
+lane 0. Padded (unoccupied) lanes carry all-padding frame ids, so the
+per-frame mask above doubles as the lane-validity mask: a dead lane's
+state rides through every step bit-unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,13 +67,15 @@ def ema_scan(a_cand: jnp.ndarray, frame_ids: jnp.ndarray, state: AtmoState,
 
     Args:
       a_cand: (B, 3) per-frame A_new candidates (paper's per-estimator output).
-      frame_ids: (B,) int32 global frame ids.
+      frame_ids: (B,) int32 global frame ids; ids < 0 mark padding frames
+        that are masked out of the recurrence entirely.
     Returns: ((B, 3) per-frame normalized A, updated state).
 
     A zero-length batch (empty spout tail, elastic drain) is a no-op: the
     state — *including* ``initialized`` — passes through unchanged, so the
     next real first frame still bootstraps (replaces the white-light
-    placeholder) instead of being EMA-blended with it.
+    placeholder) instead of being EMA-blended with it. A batch of only
+    padding ids behaves the same way.
     """
     a_cand = a_cand.astype(jnp.float32)
     if a_cand.shape[0] == 0:
@@ -68,34 +84,39 @@ def ema_scan(a_cand: jnp.ndarray, frame_ids: jnp.ndarray, state: AtmoState,
     def step(carry, x):
         A_prev, k, inited = carry
         cand, fid = x
-        bootstrap = jnp.logical_not(inited)
-        do_update = jnp.logical_or(bootstrap, (fid - k) >= period)
+        valid = fid >= 0
+        bootstrap = jnp.logical_and(valid, jnp.logical_not(inited))
+        do_update = jnp.logical_and(valid, jnp.logical_or(
+            bootstrap, (fid - k) >= period))
         target = jnp.where(bootstrap, cand, lam * cand + (1.0 - lam) * A_prev)
         A_next = jnp.where(do_update, target, A_prev)
         k_next = jnp.where(do_update, fid, k)
-        return (A_next, k_next, jnp.asarray(True)), A_next
+        return (A_next, k_next, jnp.logical_or(inited, valid)), A_next
 
-    (A_fin, k_fin, _), a_seq = jax.lax.scan(
+    (A_fin, k_fin, inited_fin), a_seq = jax.lax.scan(
         step, (state.A, state.last_update, state.initialized),
         (a_cand, frame_ids))
     new_state = AtmoState(A=A_fin, last_update=k_fin,
-                          initialized=jnp.asarray(True))
+                          initialized=inited_fin)
     return a_seq, new_state
 
 
 def _update_mask(frame_ids: jnp.ndarray, state: AtmoState,
                  period: int) -> jnp.ndarray:
-    """Closed-form update positions for *consecutive* frame ids.
+    """Closed-form update positions for *consecutive valid* frame ids.
 
     With consecutive ids the data-dependent trigger ``fid - k >= period``
     collapses to a fixed comb: first update at u0 = max(fid0, k0 + period)
-    (or fid0 when uninitialized), then every ``period`` frames.
+    (or fid0 when uninitialized), then every ``period`` frames. Padding
+    ids (< 0) are masked out — they used to alias the *future real* ids
+    the spout later hands to real frames, double-advancing the EMA.
     """
-    fid0 = frame_ids[0]
+    valid = frame_ids >= 0
+    fid0 = frame_ids[jnp.argmax(valid)]          # first valid id (if any)
     u0 = jnp.where(state.initialized,
                    jnp.maximum(fid0, state.last_update + period), fid0)
     d = frame_ids - u0
-    return jnp.logical_and(d >= 0, d % period == 0)
+    return jnp.logical_and(valid, jnp.logical_and(d >= 0, d % period == 0))
 
 
 def ema_scan_associative(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,
@@ -107,14 +128,18 @@ def ema_scan_associative(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,
     c_i = 1 - λ·m_i (or 0 on bootstrap), d_i = λ·m_i·cand_i. Composition
     (c2, d2) ∘ (c1, d1) = (c2·c1, c2·d1 + d2) is associative.
 
-    Empty batches pass the state through untouched (see ``ema_scan``).
+    Empty batches pass the state through untouched (see ``ema_scan``),
+    as do padding frames (ids < 0): their c_i = 1, d_i = 0 identity slot
+    carries the running A through unchanged.
     """
     a_cand = a_cand.astype(jnp.float32)
     if a_cand.shape[0] == 0:
         return a_cand.reshape(0, 3), state
+    valid = frame_ids >= 0
     mask = _update_mask(frame_ids, state, period)
-    bootstrap = jnp.logical_and(jnp.logical_not(state.initialized),
-                                jnp.arange(frame_ids.shape[0]) == 0)
+    bootstrap = jnp.logical_and(
+        jnp.logical_and(jnp.logical_not(state.initialized), valid),
+        jnp.arange(frame_ids.shape[0]) == jnp.argmax(valid))
     m = mask.astype(jnp.float32)[:, None]
     c = jnp.where(bootstrap[:, None], 0.0, 1.0 - lam * m)
     d = jnp.where(bootstrap[:, None], a_cand, lam * m * a_cand)
@@ -133,6 +158,51 @@ def ema_scan_associative(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,
     new_state = AtmoState(
         A=a_seq[-1],
         last_update=jnp.where(any_upd, frame_ids[idx_last], state.last_update),
-        initialized=jnp.logical_or(state.initialized, jnp.asarray(True)),
+        initialized=jnp.logical_or(state.initialized, jnp.any(valid)),
     )
     return a_seq, new_state
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched state (multi-tenant serving: L streams in one device batch)
+# ---------------------------------------------------------------------------
+
+def init_atmo_state_lanes(n_lanes: int) -> AtmoState:
+    """Lane-batched bootstrap: ``n_lanes`` independent white-light states
+    stacked on a leading lane axis (A (L, 3), last_update (L,),
+    initialized (L,))."""
+    return pack_atmo_states([init_atmo_state() for _ in range(n_lanes)])
+
+
+def pack_atmo_states(states: Sequence[AtmoState]) -> AtmoState:
+    """Stack per-stream states into one lane-batched AtmoState (lane 0 axis)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unpack_atmo_states(state: AtmoState) -> List[AtmoState]:
+    """Inverse of ``pack_atmo_states``: lane-batched -> per-lane states."""
+    n = state.A.shape[0]
+    return [get_lane_state(state, i) for i in range(n)]
+
+
+def get_lane_state(state: AtmoState, lane: int) -> AtmoState:
+    """Extract one lane's (3,)/()/() state from a lane-batched AtmoState."""
+    return jax.tree_util.tree_map(lambda x: x[lane], state)
+
+
+def set_lane_state(packed: AtmoState, lane: int, state: AtmoState) -> AtmoState:
+    """Functionally replace one lane of a lane-batched AtmoState (admission:
+    a new stream takes over a free/evicted lane)."""
+    return jax.tree_util.tree_map(
+        lambda p, s: p.at[lane].set(jnp.asarray(s, p.dtype)), packed, state)
+
+
+def ema_scan_lanes(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,
+                   state: AtmoState, period: int, lam: float,
+                   associative: bool = True) -> Tuple[jnp.ndarray, AtmoState]:
+    """Lane-batched scan: (L, B, 3) candidates, (L, B) ids, lane-batched
+    state -> ((L, B, 3), lane-batched state). Each lane scans its own
+    causal chain; padded lanes (all ids < 0) pass through untouched."""
+    scan = ema_scan_associative if associative else ema_scan
+    return jax.vmap(lambda a, f, s: scan(a, f, s, period, lam))(
+        a_cand, frame_ids, state)

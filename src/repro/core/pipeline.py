@@ -28,7 +28,8 @@ from repro.core import compat
 from repro.core import spatial
 from repro.core.config import DehazeConfig
 from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
-                                  init_atmo_state)
+                                  init_atmo_state, init_atmo_state_lanes,
+                                  pack_atmo_states, unpack_atmo_states)
 
 
 @jax.tree_util.register_dataclass
@@ -80,6 +81,34 @@ def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
         return DehazeOutput(out, t, a_seq, new_state)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream (lane-batched) step — N videos in one compiled program
+# ---------------------------------------------------------------------------
+
+def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True):
+    """Returns step(frames (L, B, H, W, 3), frame_ids (L, B), state) ->
+    DehazeOutput with a leading lane axis on every field.
+
+    The paper's §5 future work — coordinating atmospheric light "across
+    multiple videos" — realized as *continuous batching*: L independent
+    streams ride one fixed-shape device batch, each lane carrying its own
+    causal A trajectory (the state is a lane-batched ``AtmoState``, see
+    ``normalize.pack_atmo_states``). The single-stream component chain is
+    vmapped over the lane axis, so the staged path *and* the fused
+    megakernel path (gated by ``algorithms.supports_fused``, exactly as in
+    ``make_dehaze_step``) both compile to one program for all lanes.
+
+    Lane semantics: per-lane outputs are bit-identical to running
+    ``make_dehaze_step`` on that lane's frames alone — vmap adds a batch
+    axis, it does not reorder any within-frame reduction. Unoccupied
+    (padding) lanes carry ``frame_ids == -1`` everywhere; the masked EMA
+    scans pass their state through untouched and their frame outputs are
+    discarded by the scheduler.
+    """
+    step = make_dehaze_step(cfg, associative=associative)
+    return jax.vmap(step)
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +258,7 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
     return step, fspec, ispec
 
 
-__all__ = ["DehazeOutput", "make_dehaze_step", "make_sharded_dehaze_step",
-           "init_atmo_state", "AtmoState", "ema_scan", "ema_scan_associative",
-           "DehazeConfig"]
+__all__ = ["DehazeOutput", "make_dehaze_step", "make_multi_stream_step",
+           "make_sharded_dehaze_step", "init_atmo_state",
+           "init_atmo_state_lanes", "pack_atmo_states", "unpack_atmo_states",
+           "AtmoState", "ema_scan", "ema_scan_associative", "DehazeConfig"]

@@ -121,13 +121,18 @@ def _ema_step(cand: jnp.ndarray, fid: jnp.ndarray, A_prev: jnp.ndarray,
     """One step of the paper's Eq. 9 update strategy.
 
     ``fid``/``k_prev`` stay int32 end-to-end — frame ids exceed f32's 2^24
-    integer range within days of continuous streaming."""
-    bootstrap = inited == 0
-    do = jnp.logical_or(bootstrap, (fid - k_prev) >= period)
+    integer range within days of continuous streaming. A padding frame
+    (``fid < 0``, the spout's tail fill) is masked out entirely: no update,
+    no ``initialized`` flip."""
+    valid = fid >= 0
+    bootstrap = jnp.logical_and(valid, inited == 0)
+    do = jnp.logical_and(valid, jnp.logical_or(
+        bootstrap, (fid - k_prev) >= period))
     target = jnp.where(bootstrap, cand, lam * cand + (1.0 - lam) * A_prev)
     A = jnp.where(do, target, A_prev)
     k = jnp.where(do, fid, k_prev)
-    return A, k
+    inited_next = jnp.maximum(inited, valid.astype(inited.dtype))
+    return A, k, inited_next
 
 
 def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
@@ -158,9 +163,8 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
             img, a0, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
             gf_eps=gf_eps)
-        A, k = _ema_step(cand_rgb, ids_ref[f, 0], A, k, inited,
-                         period=period, lam=lam)
-        inited = jnp.int32(1)
+        A, k, inited = _ema_step(cand_rgb, ids_ref[f, 0], A, k, inited,
+                                 period=period, lam=lam)
         aseq_ref[f] = A
         tt = jnp.maximum(t, t0)[..., None]
         J = jnp.clip((img - A) / tt + A, 0.0, 1.0)

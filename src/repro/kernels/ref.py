@@ -281,12 +281,14 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
     def step(carry, inp):
         A_prev, k, inited = carry
         c, fid = inp
-        bootstrap = jnp.logical_not(inited)
-        do = jnp.logical_or(bootstrap, (fid - k) >= period)
+        valid = fid >= 0                  # ids < 0 are padding: no update
+        bootstrap = jnp.logical_and(valid, jnp.logical_not(inited))
+        do = jnp.logical_and(valid, jnp.logical_or(
+            bootstrap, (fid - k) >= period))
         target = jnp.where(bootstrap, c, lam * c + (1.0 - lam) * A_prev)
         A = jnp.where(do, target, A_prev)
         k_next = jnp.where(do, fid, k)
-        return (A, k_next, jnp.asarray(True)), A
+        return (A, k_next, jnp.logical_or(inited, valid)), A
 
     (A_fin, k_fin, _), a_seq = lax.scan(
         step,

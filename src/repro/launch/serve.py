@@ -1,16 +1,21 @@
-"""Serving driver: the paper's full pipeline over a synthetic hazy stream.
+"""Serving driver: the paper's full pipeline over synthetic hazy streams.
 
 Spout -> dehaze workers (jitted component chain) -> monitor (reorder +
 timeout skip) -> sink, with per-stream EMA state, elastic resize and
 stream-state checkpointing.
 
-Usage:
+Single stream:
   PYTHONPATH=src python -m repro.launch.serve --algorithm dcp \
       --resolution 480p --frames 96 --workers 3 --batch 8
+
+Multi-tenant (N videos continuously batched over L device lanes):
+  PYTHONPATH=src python -m repro.launch.serve --streams 4 --lanes 4 \
+      --resolution 120p --frames 32
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -19,33 +24,26 @@ from repro.core import DehazeConfig
 from repro.data import HazeVideoSpec, generate_haze_video
 from repro.stream import ElasticServer
 
-RESOLUTIONS = {"240p": (240, 320), "480p": (480, 640), "576p": (576, 1024)}
+RESOLUTIONS = {"120p": (120, 160), "240p": (240, 320), "480p": (480, 640),
+               "576p": (576, 1024)}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--algorithm", default="dcp", choices=["dcp", "cap"])
-    ap.add_argument("--resolution", default="240p",
-                    choices=sorted(RESOLUTIONS))
-    ap.add_argument("--frames", type=int, default=64)
-    ap.add_argument("--workers", type=int, default=3)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--timeout-ms", type=float, default=20.0,
-                    help="monitor reader timeout (paper: 20 ms)")
-    ap.add_argument("--update-period", type=int, default=8)
-    ap.add_argument("--lam", type=float, default=0.05)
-    ap.add_argument("--kernel-mode", default="auto")
-    args = ap.parse_args()
+def _make_videos(n: int, h: int, w: int, frames: int):
+    """N synthetic videos with distinct scenes + base atmospheric lights,
+    so each lane exercises its own coherence trajectory."""
+    vids = []
+    for i in range(n):
+        base = 0.75 + 0.05 * (i % 4)
+        vids.append(generate_haze_video(HazeVideoSpec(
+            height=h, width=w, n_frames=frames, seed=100 + i, a_noise=0.0,
+            a_base=(base, base, min(1.0, base + 0.02)))))
+    return vids
 
-    h, w = RESOLUTIONS[args.resolution]
-    vid = generate_haze_video(HazeVideoSpec(
-        height=h, width=w, n_frames=args.frames, a_noise=0.0))
-    cfg = DehazeConfig(algorithm=args.algorithm,
-                       update_period=args.update_period, lam=args.lam,
-                       kernel_mode=args.kernel_mode)
+
+def _serve_single(args, cfg, h: int, w: int) -> int:
+    vid = _make_videos(1, h, w, args.frames)[0]
     srv = ElasticServer(cfg, n_workers=args.workers, batch=args.batch,
                         timeout_s=args.timeout_ms / 1e3)
-
     outs = {}
     t0 = time.perf_counter()
     rep = srv.serve(iter(vid.hazy), sink=lambda fid, f: outs.setdefault(fid, f))
@@ -61,6 +59,74 @@ def main() -> None:
     print(f"L1 vs ground truth: hazy={err_hazy:.4f} dehazed={err_out:.4f}")
     a = srv.store.get("default").A
     print(f"final shared A = {np.asarray(a)}")
+    return rep.skipped
+
+
+def _serve_many(args, cfg, h: int, w: int) -> int:
+    vids = _make_videos(args.streams, h, w, args.frames)
+    lanes = args.lanes if args.lanes > 0 else args.streams
+    srv = ElasticServer(cfg, batch=args.batch,
+                        timeout_s=args.timeout_ms / 1e3)
+    counts: dict = {}
+
+    def sink(sid: str, fid: int, _f) -> None:
+        counts[sid] = counts.get(sid, 0) + 1
+
+    rep = srv.serve_many(
+        [(f"cam{i}", iter(v.hazy)) for i, v in enumerate(vids)],
+        n_lanes=lanes, sink=sink)
+    print(f"algorithm={args.algorithm} resolution={args.resolution} "
+          f"streams={args.streams} lanes={rep.n_lanes} batch={args.batch}")
+    print(f"frames={rep.frames} skipped={rep.skipped} ticks={rep.ticks} "
+          f"aggregate_fps={rep.aggregate_fps:.2f} wall={rep.wall_s:.2f}s")
+    for sid in sorted(rep.per_stream):
+        r = rep.per_stream[sid]
+        a = np.asarray(srv.store.get(sid).A).round(3)
+        print(f"  {sid}: frames={r.frames} emitted={counts.get(sid, 0)} "
+              f"skipped={r.skipped} fps={r.fps:.2f} A={a}")
+    return rep.skipped
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algorithm", default="dcp", choices=["dcp", "cap"])
+    ap.add_argument("--resolution", default="240p",
+                    choices=sorted(RESOLUTIONS))
+    ap.add_argument("--frames", type=int, default=64,
+                    help="frames per stream")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="number of concurrent videos (>1 uses the "
+                         "lane-batched multi-tenant scheduler)")
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="device lanes for --streams > 1 "
+                         "(default 0 = one lane per stream)")
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--timeout-ms", type=float, default=20.0,
+                    help="monitor reader timeout (paper: 20 ms)")
+    ap.add_argument("--update-period", type=int, default=8)
+    ap.add_argument("--lam", type=float, default=0.05)
+    ap.add_argument("--kernel-mode", default="auto")
+    ap.add_argument("--fail-on-skipped", action="store_true",
+                    help="exit nonzero if any frame was timeout-skipped "
+                         "(CI smoke gating)")
+    args = ap.parse_args()
+
+    h, w = RESOLUTIONS[args.resolution]
+    cfg = DehazeConfig(algorithm=args.algorithm,
+                       update_period=args.update_period, lam=args.lam,
+                       kernel_mode=args.kernel_mode)
+    if args.streams > 1:
+        if args.workers != ap.get_default("workers"):
+            print("note: --workers applies to single-stream serving only; "
+                  "the multi-stream scheduler parallelizes over --lanes "
+                  "instead", file=sys.stderr)
+        skipped = _serve_many(args, cfg, h, w)
+    else:
+        skipped = _serve_single(args, cfg, h, w)
+    if args.fail_on_skipped and skipped > 0:
+        print(f"FAIL: {skipped} frame(s) timeout-skipped", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,14 @@
-"""Host-side streaming runtime (paper §3.2): spout → workers → monitor."""
+"""Host-side streaming runtime (paper §3.2): spout → workers → monitor,
+plus the multi-tenant lane scheduler (continuous batching across videos)."""
 from repro.stream.dispatcher import DispatchStats, StreamDispatcher
 from repro.stream.elastic import ElasticServer, ServeReport
 from repro.stream.monitor import Monitor, MonitorStats
+from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
+                                    StreamReport)
 from repro.stream.spout import FrameBatch, Spout
 from repro.stream.state import StreamStateStore
 
 __all__ = ["Monitor", "MonitorStats", "Spout", "FrameBatch",
            "StreamDispatcher", "DispatchStats", "ElasticServer",
-           "ServeReport", "StreamStateStore"]
+           "ServeReport", "StreamStateStore", "MultiStreamScheduler",
+           "MultiServeReport", "StreamReport"]

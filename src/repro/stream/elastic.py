@@ -21,17 +21,23 @@ those executables compile for every mesh we claim to support.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
+import threading
 import time
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, Iterable, List, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.core import (DehazeConfig, init_atmo_state, make_dehaze_step,
+                        make_multi_stream_step)
 from repro.core.normalize import AtmoState
 from repro.stream.dispatcher import StreamDispatcher
 from repro.stream.monitor import Monitor
+from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
+                                    StreamEntry)
 from repro.stream.spout import FrameBatch, Spout
 from repro.stream.state import StreamStateStore
 
@@ -45,15 +51,54 @@ class ServeReport:
     n_workers: int
 
 
-_STEP_CACHE: dict = {}
+class _LRUStepCache:
+    """Bounded jitted-step cache. The old module-global dict grew without
+    bound across config sweeps (every ``DehazeConfig`` variant pins its
+    executable forever); this keeps the ``maxsize`` most recently used.
+    Shared by the single-stream and the multi-stream (lane-vmapped) step
+    builders — the kind of step is part of the key."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key, build: Callable):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                return self._d[key]
+        step = build()                       # build outside the lock (slow)
+        with self._lock:
+            self._d[key] = step
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+        return step
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+_STEP_CACHE = _LRUStepCache(
+    maxsize=int(os.environ.get("REPRO_STEP_CACHE_SIZE", "8")))
 
 
 def _cached_step(cfg: DehazeConfig):
     """One jitted executable per config — servers with the same config
     (e.g. benchmark sweeps over worker counts) share compilations."""
-    if cfg not in _STEP_CACHE:
-        _STEP_CACHE[cfg] = jax.jit(make_dehaze_step(cfg))
-    return _STEP_CACHE[cfg]
+    return _STEP_CACHE.get(("single", cfg),
+                           lambda: jax.jit(make_dehaze_step(cfg)))
+
+
+def _cached_multi_step(cfg: DehazeConfig):
+    """Lane-vmapped step, same bounded cache. One cache entry per config;
+    ``jax.jit`` still specializes per input shape underneath, so each
+    distinct ``(n_lanes, batch, H, W)`` traces/compiles once — changing
+    the lane count mid-fleet costs a recompile (see the ROADMAP lane-
+    autoscaling follow-on)."""
+    return _STEP_CACHE.get(("multi", cfg),
+                           lambda: jax.jit(make_multi_stream_step(cfg)))
 
 
 class ElasticServer:
@@ -112,3 +157,37 @@ class ElasticServer:
             frames=dispatcher.stats.frames,
             skipped=monitor.stats.skipped,
             wall_s=wall, n_workers=self.n_workers)
+
+    def serve_many(self, streams: Sequence[StreamEntry],
+                   n_lanes: Optional[int] = None,
+                   sink: Optional[Callable[[str, int, np.ndarray], None]]
+                   = None) -> MultiServeReport:
+        """Serve N videos concurrently via lane-batched continuous batching.
+
+        ``streams`` is a sequence of ``(stream_id, frames)`` pairs; all
+        streams must share the same (H, W) resolution (the lane batch has
+        one fixed device shape). ``n_lanes`` defaults to one lane per
+        stream; with fewer lanes than streams the scheduler queues the
+        surplus and admits them as lanes free up (eviction + reuse).
+
+        Per-stream semantics match N sequential :meth:`serve` calls to
+        float32 round-off (exactly, on the fused path; the vmapped staged
+        XLA program may fuse FMAs differently, <= ~2 ULP) — same EMA
+        trajectories (each lane scans its own causal chain), same monitor
+        ordering + timeout-skip rules, same restart-safe cursors in
+        ``self.store``. Stream ids must be unique per call (resume a
+        stream with a follow-up call). The device sees ONE
+        ``(L, B, H, W, 3)`` program per tick instead of N serialized
+        streams, which is where the aggregate-fps win comes from.
+        """
+        streams = list(streams)
+        if not streams:
+            return MultiServeReport(per_stream={}, frames=0, skipped=0,
+                                    wall_s=0.0, n_lanes=0, ticks=0,
+                                    admissions=0)
+        lanes = n_lanes if n_lanes is not None else len(streams)
+        scheduler = MultiStreamScheduler(
+            _cached_multi_step(self.cfg), self.store, n_lanes=lanes,
+            batch=self.batch, timeout_s=self.timeout_s,
+            max_in_flight=self.max_in_flight)
+        return scheduler.run(streams, sink=sink)

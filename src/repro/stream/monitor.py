@@ -18,9 +18,12 @@ from typing import Any, Callable, List, Optional
 @dataclass
 class MonitorStats:
     emitted: int = 0
-    skipped: int = 0
+    skipped: int = 0                 # running count (never truncated)
     out_of_order_arrivals: int = 0
     max_queue_depth: int = 0
+    # Only the most recent ``Monitor.max_skipped_ids`` ids are kept — a
+    # lossy long-running stream skips unboundedly, the full history is the
+    # count above, the tail is what an operator actually pages through.
     skipped_ids: List[int] = field(default_factory=list)
 
 
@@ -34,7 +37,8 @@ class Monitor:
 
     def __init__(self, write_fn: Callable[[int, Any], None],
                  timeout_s: float = 0.020, start_frame: int = 0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 max_skipped_ids: int = 64):
         self._write = write_fn
         self._timeout = timeout_s
         self._next = start_frame
@@ -43,7 +47,15 @@ class Monitor:
         self._lock = threading.Condition()
         self._deadline: Optional[float] = None
         self._closed = False
+        self.max_skipped_ids = max_skipped_ids
         self.stats = MonitorStats()
+
+    def _record_skip_locked(self, frame_id: int) -> None:
+        self.stats.skipped += 1
+        ids = self.stats.skipped_ids
+        ids.append(frame_id)
+        if len(ids) > self.max_skipped_ids:
+            del ids[:len(ids) - self.max_skipped_ids]
 
     def put(self, frame_id: int, payload: Any) -> None:
         with self._lock:
@@ -87,14 +99,18 @@ class Monitor:
                     self._deadline = now + self._timeout
                 elif now >= self._deadline:
                     # Paper's reader rule: skip the absent frame, move on.
-                    self.stats.skipped += 1
-                    self.stats.skipped_ids.append(self._next)
+                    self._record_skip_locked(self._next)
                     self._next += 1
                     self._deadline = None
                     self._emit_ready_locked()
             return not (self._closed and not self._heap)
 
-    def run(self, idle_sleep: float = 0.001) -> None:
+    def run(self, idle_sleep: float = 0.05) -> None:
+        """Consumer loop. ``idle_sleep`` is only a safety-net timeout: every
+        state change (``put``, ``close``) notifies the condition, so the
+        loop wakes immediately when there is work. The old 1 ms default
+        made every idle monitor a 1 kHz GIL-contending poll storm — with
+        one monitor per stream the multi-tenant scheduler paid it L-fold."""
         while self.poll():
             with self._lock:
                 if not self._heap and not self._closed:
@@ -108,8 +124,7 @@ class Monitor:
         with self._lock:
             while self._heap:
                 if self._heap[0][0] != self._next:
-                    self.stats.skipped += 1
-                    self.stats.skipped_ids.append(self._next)
+                    self._record_skip_locked(self._next)
                     self._next += 1
                 else:
                     self._emit_ready_locked()

@@ -1,0 +1,309 @@
+"""Multi-tenant lane scheduler: continuous batching across video streams.
+
+The paper's five-layer network (§3.2, Fig. 2) serves ONE video: spout →
+transmission estimator → atmospheric-light estimator → haze-free generator
+→ monitor. Its §5 future work — "coordinating atmospheric light across
+multiple videos" and a cluster that "scales with the actual workload" —
+is this module: N live videos multiplexed onto L *lanes* of one
+fixed-shape ``(L, B, H, W, 3)`` device batch, stepped by the vmapped
+component chain (``core.pipeline.make_multi_stream_step``), so the fleet
+scales with users instead of serializing them.
+
+Layer mapping, per lane:
+
+  layer 1 (spout)        — one ``Spout`` per admitted stream assigns ids
+                           from that stream's restart-safe cursor;
+  layers 2-4 (components)— all lanes share ONE compiled program per tick;
+                           each lane's §3.3 EMA state is one row of the
+                           lane-batched ``AtmoState`` (its own coherent A
+                           trajectory, bit-identical to a solo serve);
+  layer 5 (monitor)      — one ``Monitor`` per stream restores that
+                           stream's order and applies the paper's 20 ms
+                           reader-skip rule independently of its peers.
+
+Scheduling is *continuous batching* in the serving-system sense: a stream
+is admitted into the first free lane the moment one is available, an
+exhausted stream is evicted at the tick it ends (state + cursor written
+back to the ``StreamStateStore``), and the freed lane is reused by the
+next pending stream in the same tick. Unoccupied lanes are padded with
+``frame_id = -1`` batches, which the masked EMA scans treat as identity —
+a dead lane's state rides through every step unchanged and emits nothing.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.normalize import (AtmoState, get_lane_state,
+                                  init_atmo_state_lanes, set_lane_state)
+from repro.stream.monitor import Monitor
+from repro.stream.spout import FrameBatch, Spout
+from repro.stream.state import StreamStateStore
+
+# A stream to serve: (stream_id, iterable of (H, W, 3) frames).
+StreamEntry = Tuple[str, Iterable[np.ndarray]]
+# sink(stream_id, frame_id, frame) — called in per-stream ascending order.
+MultiSink = Callable[[str, int, np.ndarray], None]
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Per-stream serving outcome (mirrors ``elastic.ServeReport``)."""
+    stream_id: str
+    frames: int
+    skipped: int
+    wall_s: float
+
+    @property
+    def fps(self) -> float:
+        return self.frames / self.wall_s if self.wall_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class MultiServeReport:
+    per_stream: Dict[str, StreamReport]
+    frames: int          # total real frames stepped, all streams
+    skipped: int         # total monitor skips, all streams
+    wall_s: float
+    n_lanes: int
+    ticks: int           # device steps issued
+    admissions: int      # streams admitted (== streams completed)
+
+    @property
+    def aggregate_fps(self) -> float:
+        """Fleet throughput: total frames across streams per wall second."""
+        return self.frames / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class _Lane:
+    """Host-side bookkeeping for one occupied lane."""
+    __slots__ = ("stream_id", "it", "monitor", "mon_thread", "start",
+                 "frames_done", "admitted_at")
+
+    def __init__(self, stream_id: str, it, monitor: Monitor,
+                 mon_thread: threading.Thread, start: int,
+                 admitted_at: float):
+        self.stream_id = stream_id
+        self.it = it
+        self.monitor = monitor
+        self.mon_thread = mon_thread
+        self.start = start
+        self.frames_done = 0
+        self.admitted_at = admitted_at
+
+
+class MultiStreamScheduler:
+    """Drives ``step(frames (L,B,H,W,3), ids (L,B), state) -> DehazeOutput``
+    over many live streams with lane admission/eviction/reuse.
+
+    ``step`` is typically ``jax.jit(make_multi_stream_step(cfg))``; the
+    scheduler itself is model-agnostic — it only assumes the lane axis and
+    the padding-id contract (``frame_id < 0`` slots touch nothing).
+    """
+
+    def __init__(self, step: Callable, store: StreamStateStore,
+                 n_lanes: int, batch: int = 8, timeout_s: float = 0.020,
+                 max_in_flight: int = 4, max_skipped_ids: int = 64):
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        self._step = step
+        self.store = store
+        self.n_lanes = n_lanes
+        self.batch = batch
+        self.timeout_s = timeout_s
+        self.max_skipped_ids = max_skipped_ids
+        self._sem = threading.Semaphore(max_in_flight)
+
+    # -- lane lifecycle ----------------------------------------------------
+
+    def _admit(self, lane_idx: int, sid: str, frames: Iterable[np.ndarray],
+               packed: AtmoState, sink: Optional[MultiSink]) -> AtmoState:
+        start = self.store.cursor(sid)
+
+        def write(fid: int, payload: np.ndarray) -> None:
+            if sink is not None:
+                sink(sid, fid, payload)
+
+        monitor = Monitor(write, timeout_s=self.timeout_s, start_frame=start,
+                          max_skipped_ids=self.max_skipped_ids)
+        mon_thread = threading.Thread(target=monitor.run, daemon=True)
+        mon_thread.start()
+        spout = Spout(frames, batch=self.batch, start_frame=start,
+                      stream_id=sid)
+        self._lanes[lane_idx] = _Lane(sid, iter(spout), monitor, mon_thread,
+                                      start, time.perf_counter())
+        self._admissions += 1
+        return set_lane_state(packed, lane_idx, self.store.get(sid))
+
+    def _evict(self, lane_idx: int, packed: AtmoState) -> None:
+        """Stream ended: free the lane NOW, finalize in the background.
+
+        The lane's final EMA state is a functional snapshot of the packed
+        state (safe to read later even after the lane is reassigned), so
+        the expensive parts — waiting for in-flight completions that may
+        still hold frames for this stream's monitor, draining it, and the
+        blocking ``device_get`` — run in a finalizer thread while the main
+        loop keeps ticking with the lane already reused. This is what
+        keeps high-churn workloads (many short clips) pipelined instead of
+        stalling every tick on an eviction barrier."""
+        lane = self._lanes[lane_idx]
+        self._lanes[lane_idx] = None
+        final_state = get_lane_state(packed, lane_idx)
+        waits = list(self._inflight)
+        # Stamp the stream's wall NOW: the finalizer below also waits on
+        # other lanes' in-flight ticks, which is scheduler bookkeeping, not
+        # this stream's service time.
+        wall_s = time.perf_counter() - lane.admitted_at
+
+        def finalize() -> None:
+            for th in waits:
+                th.join()
+            lane.monitor.close()
+            lane.mon_thread.join(timeout=5.0)
+            lane.monitor.drain()
+            self.store.update(lane.stream_id, jax.device_get(final_state),
+                              lane.start + lane.frames_done)
+            with self._report_lock:
+                self._reports[lane.stream_id] = StreamReport(
+                    stream_id=lane.stream_id, frames=lane.frames_done,
+                    skipped=lane.monitor.stats.skipped, wall_s=wall_s)
+
+        th = threading.Thread(target=finalize, daemon=True)
+        th.start()
+        self._finalizers.append(th)
+
+    def _fill_lane(self, lane_idx: int, packed: AtmoState,
+                   sink: Optional[MultiSink]
+                   ) -> Tuple[Optional[FrameBatch], AtmoState]:
+        """Next batch for a lane, chaining evictions and admissions: an
+        exhausted stream is evicted and the lane immediately reused by the
+        next pending stream (continuous batching)."""
+        while True:
+            if self._lanes[lane_idx] is None:
+                if not self._pending:
+                    return None, packed
+                sid, frames = self._pending.popleft()
+                packed = self._admit(lane_idx, sid, frames, packed, sink)
+                # Keep the shared view current immediately: if the new
+                # stream's iterator raises below, the error-path eviction
+                # in run() must see THIS stream's state in the lane, not
+                # the previous tenant's.
+                self._packed = packed
+            fb = next(self._lanes[lane_idx].it, None)
+            if fb is not None:
+                return fb, packed
+            self._evict(lane_idx, packed)
+
+    # -- the serve loop ----------------------------------------------------
+
+    def run(self, streams: Iterable[StreamEntry],
+            sink: Optional[MultiSink] = None) -> MultiServeReport:
+        streams = list(streams)
+        sids = [sid for sid, _ in streams]
+        if len(set(sids)) != len(sids):
+            # A duplicate id would race its predecessor's background
+            # finalizer for the store cursor and the report slot. Resume a
+            # stream with a second serve_many call instead — run() joins
+            # all finalizers before returning, so the cursor is settled.
+            dupes = sorted({s for s in sids if sids.count(s) > 1})
+            raise ValueError(f"duplicate stream ids in one serve_many call: "
+                             f"{dupes}")
+        self._pending = collections.deque(streams)
+        self._lanes: List[Optional[_Lane]] = [None] * self.n_lanes
+        self._inflight: List[threading.Thread] = []
+        self._finalizers: List[threading.Thread] = []
+        self._reports: Dict[str, StreamReport] = {}
+        self._report_lock = threading.Lock()
+        self._admissions = 0
+
+        packed = init_atmo_state_lanes(self.n_lanes)
+        pad_frames: Optional[np.ndarray] = None       # (B, H, W, 3) zeros
+        pad_ids = np.full((self.batch,), -1, np.int32)
+        ticks = 0
+        t0 = time.perf_counter()
+
+        try:
+            ticks = self._tick_loop(packed, pad_frames, pad_ids, sink)
+        finally:
+            # Normal exit or mid-serve error (e.g. a mismatched-resolution
+            # stream): evict every live lane so already-served streams
+            # flush their monitors and persist state + cursor, then wait
+            # out all completion/finalizer threads.
+            for i in range(self.n_lanes):
+                if self._lanes[i] is not None:
+                    self._evict(i, self._packed)
+            for th in self._inflight:
+                th.join()
+            for th in self._finalizers:
+                th.join()
+        wall = time.perf_counter() - t0
+        reports = self._reports
+        return MultiServeReport(
+            per_stream=reports,
+            frames=sum(r.frames for r in reports.values()),
+            skipped=sum(r.skipped for r in reports.values()),
+            wall_s=wall, n_lanes=self.n_lanes, ticks=ticks,
+            admissions=self._admissions)
+
+    def _tick_loop(self, packed: AtmoState, pad_frames: Optional[np.ndarray],
+                   pad_ids: np.ndarray, sink: Optional[MultiSink]) -> int:
+        ticks = 0
+        self._packed = packed
+
+        while True:
+            fbs: List[Optional[FrameBatch]] = []
+            for i in range(self.n_lanes):
+                fb, packed = self._fill_lane(i, packed, sink)
+                self._packed = packed
+                fbs.append(fb)
+            live = [fb for fb in fbs if fb is not None]
+            if not live:
+                break
+
+            if pad_frames is None:
+                pad_frames = np.zeros_like(live[0].frames)
+            for fb in live:
+                if fb.frames.shape != pad_frames.shape:
+                    raise ValueError(
+                        f"stream {fb.stream_id!r} batch shape "
+                        f"{fb.frames.shape} != lane shape {pad_frames.shape};"
+                        " all multiplexed streams must share (H, W) and the"
+                        " scheduler's frame batch")
+
+            frames = np.stack([fb.frames if fb is not None else pad_frames
+                               for fb in fbs])
+            ids = np.stack([fb.frame_ids if fb is not None else pad_ids
+                            for fb in fbs])
+            metas = [(i, self._lanes[i].monitor, fb.frame_ids, fb.n_valid)
+                     for i, fb in enumerate(fbs) if fb is not None]
+            for i, fb in enumerate(fbs):
+                if fb is not None:
+                    self._lanes[i].frames_done += fb.n_valid
+
+            self._sem.acquire()
+            out = self._step(frames, ids, packed)
+            packed = out.state          # device-resident, possibly in flight
+            self._packed = packed
+            th = threading.Thread(target=self._complete,
+                                  args=(metas, out), daemon=True)
+            th.start()
+            self._inflight.append(th)
+            self._inflight = [t for t in self._inflight if t.is_alive()]
+            ticks += 1
+
+        return ticks
+
+    def _complete(self, metas, out) -> None:
+        try:
+            frames = np.asarray(out.frames)    # blocks until device done
+            for lane_idx, monitor, frame_ids, n_valid in metas:
+                for b in range(n_valid):
+                    monitor.put(int(frame_ids[b]), frames[lane_idx, b])
+        finally:
+            self._sem.release()

@@ -10,7 +10,7 @@ import numpy as np
 @dataclasses.dataclass
 class FrameBatch:
     frames: np.ndarray      # (B, H, W, 3) float32 in [0, 1]
-    frame_ids: np.ndarray   # (B,) int32 global ids (consecutive)
+    frame_ids: np.ndarray   # (B,) int32: consecutive ids, then -1 padding
     n_valid: int            # trailing frames may be padding on the last batch
     stream_id: str = "default"
 
@@ -20,7 +20,10 @@ class Spout:
 
     The final partial batch is padded by repeating the last frame so the
     jitted step always sees a static shape; ``n_valid`` tells the sink how
-    many outputs are real.
+    many outputs are real. Padding slots carry ``frame_id = -1`` so the
+    EMA scans mask them out — they must NOT get the future real ids the
+    spout will later assign to real frames (that double-advanced the
+    coherence state on duplicate frames).
     """
 
     def __init__(self, frames: Iterator[np.ndarray], batch: int,
@@ -44,8 +47,9 @@ class Spout:
         n_valid = len(buf)
         while len(buf) < self._batch:
             buf.append(buf[-1])
-        ids = np.arange(self._next_id, self._next_id + self._batch,
-                        dtype=np.int32)
+        ids = np.full((self._batch,), -1, np.int32)
+        ids[:n_valid] = np.arange(self._next_id, self._next_id + n_valid,
+                                  dtype=np.int32)
         self._next_id += n_valid
         return FrameBatch(frames=np.stack(buf), frame_ids=ids,
                           n_valid=n_valid, stream_id=self._stream_id)

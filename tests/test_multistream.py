@@ -1,0 +1,215 @@
+"""Multi-tenant serving: lane-batched steps + continuous batching scheduler.
+
+Per-stream outputs of ``serve_many`` must match sequential single-stream
+serves to float32 round-off (the vmapped program may fuse FMA differently,
+so "bit-identical" holds up to <= 2 ULP on the staged XLA path and exactly
+on the fused path), with the same skipped-frame semantics; lanes must
+evict + be reused mid-serve; a lane-packed ``StreamStateStore`` must
+checkpoint/restart through ``to_pytree``/``from_pytree``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (DehazeConfig, get_lane_state, init_atmo_state,
+                        init_atmo_state_lanes, make_dehaze_step,
+                        make_multi_stream_step, pack_atmo_states,
+                        set_lane_state, unpack_atmo_states)
+from repro.core.normalize import AtmoState
+from repro.stream import ElasticServer, Monitor, StreamStateStore
+
+ATOL = 3e-7          # float32 round-off between vmapped and plain programs
+
+
+def _streams(n, lengths, h=16, w=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[rng.random((h, w, 3)).astype(np.float32) for _ in range(k)]
+            for k in lengths[:n]]
+
+
+# --- lane-batched state helpers ----------------------------------------------
+
+def test_pack_unpack_roundtrip():
+    states = [AtmoState(A=jnp.asarray([0.1 * i, 0.2, 0.3], jnp.float32),
+                        last_update=jnp.asarray(i, jnp.int32),
+                        initialized=jnp.asarray(i % 2 == 0))
+              for i in range(3)]
+    packed = pack_atmo_states(states)
+    assert packed.A.shape == (3, 3) and packed.last_update.shape == (3,)
+    back = unpack_atmo_states(packed)
+    for s, b in zip(states, back):
+        np.testing.assert_array_equal(np.asarray(s.A), np.asarray(b.A))
+        assert int(s.last_update) == int(b.last_update)
+        assert bool(s.initialized) == bool(b.initialized)
+
+
+def test_set_lane_state_replaces_one_lane():
+    packed = init_atmo_state_lanes(3)
+    s = AtmoState(A=jnp.asarray([0.5, 0.6, 0.7], jnp.float32),
+                  last_update=jnp.asarray(9, jnp.int32),
+                  initialized=jnp.asarray(True))
+    packed = set_lane_state(packed, 1, s)
+    lane1 = get_lane_state(packed, 1)
+    np.testing.assert_array_equal(np.asarray(lane1.A),
+                                  np.asarray([0.5, 0.6, 0.7], np.float32))
+    assert int(lane1.last_update) == 9 and bool(lane1.initialized)
+    for i in (0, 2):
+        assert not bool(get_lane_state(packed, i).initialized)
+
+
+# --- lane-vmapped step vs single-stream step ---------------------------------
+
+@pytest.mark.parametrize("mode", ["ref", "fused"])
+def test_multi_stream_step_matches_single(mode):
+    cfg = DehazeConfig(kernel_mode=mode, gf_radius=2, update_period=2)
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(rng.random((3, 4, 16, 20, 3)), jnp.float32)
+    ids = jnp.stack([jnp.arange(4, dtype=jnp.int32)] * 3)
+    ids = ids.at[2].set(jnp.full((4,), -1, jnp.int32))   # lane 2 unoccupied
+    multi = make_multi_stream_step(cfg)
+    single = make_dehaze_step(cfg)
+    packed = init_atmo_state_lanes(3)
+    out = multi(frames, ids, packed)
+    for lane in range(2):
+        ref = single(frames[lane], ids[lane], init_atmo_state())
+        np.testing.assert_allclose(np.asarray(out.frames[lane]),
+                                   np.asarray(ref.frames), atol=ATOL, rtol=0)
+        np.testing.assert_allclose(np.asarray(out.state.A[lane]),
+                                   np.asarray(ref.state.A), atol=ATOL, rtol=0)
+        assert int(out.state.last_update[lane]) == int(ref.state.last_update)
+    # The padding lane's state rides through bit-unchanged.
+    assert not bool(out.state.initialized[2])
+    np.testing.assert_array_equal(np.asarray(out.state.A[2]),
+                                  np.asarray(packed.A[2]))
+
+
+# --- serve_many vs sequential serves -----------------------------------------
+
+@pytest.mark.parametrize("mode", ["ref", "fused"])
+def test_serve_many_matches_sequential(mode):
+    """Interleaved lanes (incl. fewer lanes than streams -> eviction +
+    reuse, and uneven lengths -> padded tails) produce per-stream outputs
+    equal to sequential single-stream serves, same skip semantics."""
+    cfg = DehazeConfig(kernel_mode=mode, gf_radius=2, update_period=2)
+    vids = _streams(4, [10, 7, 13, 5])
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    outs = {}
+    rep = srv.serve_many(
+        [(f"s{i}", iter(v)) for i, v in enumerate(vids)], n_lanes=2,
+        sink=lambda sid, fid, f: outs.setdefault((sid, fid), f))
+    assert rep.frames == 35 and rep.skipped == 0
+    assert rep.admissions == 4 and rep.n_lanes == 2
+
+    for i, v in enumerate(vids):
+        ref_srv = ElasticServer(cfg, n_workers=1, batch=4, timeout_s=5.0)
+        ref_outs = {}
+        ref_rep = ref_srv.serve(iter(v), stream_id=f"s{i}",
+                                sink=lambda fid, f: ref_outs.setdefault(fid, f))
+        assert ref_rep.skipped == 0
+        assert rep.per_stream[f"s{i}"].frames == ref_rep.frames
+        for fid, f in ref_outs.items():
+            np.testing.assert_allclose(outs[(f"s{i}", fid)], f,
+                                       atol=ATOL, rtol=0)
+        # Same final EMA state + restart-safe cursor in the store.
+        np.testing.assert_allclose(
+            np.asarray(srv.store.get(f"s{i}").A),
+            np.asarray(ref_srv.store.get(f"s{i}").A), atol=ATOL, rtol=0)
+        assert srv.store.cursor(f"s{i}") == len(v)
+
+
+def test_serve_many_lane_eviction_and_reuse():
+    """More streams than lanes: every stream completes in order through
+    lane turnover, and per-stream monitors keep streams isolated."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    vids = _streams(5, [6, 3, 9, 4, 5], seed=2)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    emitted = {}
+    rep = srv.serve_many(
+        [(f"cam{i}", iter(v)) for i, v in enumerate(vids)], n_lanes=2,
+        sink=lambda sid, fid, f: emitted.setdefault(sid, []).append(fid))
+    assert rep.admissions == 5
+    assert rep.frames == sum(len(v) for v in vids) and rep.skipped == 0
+    for i, v in enumerate(vids):
+        assert emitted[f"cam{i}"] == list(range(len(v)))
+
+
+def test_serve_many_checkpoint_restart():
+    """Kill the fleet mid-way, restore the lane-packed store from its
+    checkpoint pytree, serve the remainder: same A trajectories and
+    cursors as one uninterrupted serve_many."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2, update_period=2)
+    vids = _streams(3, [12, 8, 10], seed=3)
+
+    ref_srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    ref_srv.serve_many([(f"s{i}", iter(v)) for i, v in enumerate(vids)])
+
+    srv1 = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    srv1.serve_many([(f"s{i}", iter(v[:len(v) // 2]))
+                     for i, v in enumerate(vids)])
+    snapshot = srv1.store.to_pytree()
+    del srv1                                             # "crash"
+
+    srv2 = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    srv2.store = StreamStateStore.from_pytree(snapshot)
+    for i, v in enumerate(vids):
+        assert srv2.store.cursor(f"s{i}") == len(v) // 2
+    srv2.serve_many([(f"s{i}", iter(v[len(v) // 2:]))
+                     for i, v in enumerate(vids)])
+    for i, v in enumerate(vids):
+        np.testing.assert_allclose(
+            np.asarray(srv2.store.get(f"s{i}").A),
+            np.asarray(ref_srv.store.get(f"s{i}").A), atol=1e-6)
+        assert srv2.store.cursor(f"s{i}") == len(v)
+
+
+def test_serve_many_rejects_mismatched_resolutions():
+    """A mismatched stream raises, but the server shuts down cleanly:
+    live lanes are evicted (state + cursor persisted, monitors drained)
+    and the server stays usable."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    a = _streams(1, [8], h=16, w=20)[0]
+    b = _streams(1, [4], h=12, w=20, seed=4)[0]
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    with pytest.raises(ValueError, match="must share"):
+        srv.serve_many([("a", iter(a)), ("b", iter(b))])
+    # The failed call flushed its lanes; a fresh serve_many still works.
+    rep = srv.serve_many([("c", iter(_streams(1, [6], seed=5)[0]))])
+    assert rep.frames == 6 and rep.skipped == 0
+
+
+def test_serve_many_rejects_duplicate_stream_ids():
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    v = _streams(2, [4, 4], seed=6)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    with pytest.raises(ValueError, match="duplicate stream ids"):
+        srv.serve_many([("cam", iter(v[0])), ("cam", iter(v[1]))])
+
+
+# --- satellite: bounded monitor skip history ---------------------------------
+
+def test_monitor_skipped_ids_bounded():
+    mon = Monitor(lambda fid, payload: None, timeout_s=60.0,
+                  max_skipped_ids=4)
+    mon.put(100, None)           # frames 0..99 are gaps
+    mon.close()
+    mon.drain()
+    assert mon.stats.skipped == 100              # running count intact
+    assert mon.stats.skipped_ids == [96, 97, 98, 99]   # last K only
+    assert mon.stats.emitted == 1
+
+
+# --- satellite: bounded LRU step cache ---------------------------------------
+
+def test_step_cache_lru_bounded():
+    from repro.stream.elastic import _LRUStepCache
+    cache = _LRUStepCache(maxsize=3)
+    for i in range(10):
+        cache.get(("single", i), lambda i=i: f"step{i}")
+    assert len(cache) == 3
+    # Most recent survive; LRU entries were dropped and rebuild on demand.
+    builds = []
+    cache.get(("single", 9), lambda: builds.append(1) or "rebuilt")
+    assert builds == []                          # hit
+    cache.get(("single", 0), lambda: builds.append(1) or "rebuilt")
+    assert builds == [1]                         # miss -> rebuilt

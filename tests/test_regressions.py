@@ -2,8 +2,11 @@
 
 Covers: empty-batch EMA state round-trips (spout tail / elastic drain),
 ``resolve_mode`` rejecting unknown ``REPRO_KERNEL_MODE`` values instead of
-silently taking the compiled-Pallas branch, and the fused megakernel's
-``frames_per_block`` degrading to the largest dividing tile instead of 1.
+silently taking the compiled-Pallas branch, the fused megakernel's
+``frames_per_block`` degrading to the largest dividing tile instead of 1,
+and spout tail padding being tagged ``frame_id = -1`` and masked out of
+the EMA recurrence (it used to carry *future real* ids, double-advancing
+the coherence state when the real frames with those ids arrived).
 """
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +16,7 @@ from repro.core import ema_scan, ema_scan_associative, init_atmo_state
 from repro.core.normalize import AtmoState
 from repro.kernels import ops
 from repro.kernels.fused import _resolve_frames_per_block
+from repro.stream import Spout
 
 
 # --- empty-batch EMA state round-trip ----------------------------------------
@@ -88,6 +92,99 @@ def test_resolve_mode_explicit_arg_still_resolves(monkeypatch):
     assert ops.resolve_mode("ref") == "ref"
     assert ops.resolve_mode("interpret") == "interpret"
     assert ops.resolve_mode("fused") in ("ref", "pallas")
+
+
+# --- spout padding must not advance coherence state --------------------------
+
+def test_spout_padding_tagged_minus_one():
+    frames = [np.full((4, 4, 3), i, np.float32) for i in range(6)]
+    batches = list(Spout(iter(frames), batch=4))
+    np.testing.assert_array_equal(batches[0].frame_ids, [0, 1, 2, 3])
+    # Tail padding: ids are -1, NOT the future real ids 2..5.
+    np.testing.assert_array_equal(batches[1].frame_ids, [4, 5, -1, -1])
+    assert batches[1].n_valid == 2
+
+
+@pytest.mark.parametrize("scan", [ema_scan, ema_scan_associative],
+                         ids=["scan", "associative"])
+def test_padding_ids_do_not_advance_ema(scan):
+    """State after a padded batch [k, -1, -1, -1] must equal the state
+    after just [k]; previously the padded tail got ids k+1..k+3 and the
+    EMA advanced on duplicate frames whose ids were later reused."""
+    rng = np.random.default_rng(0)
+    cand = jnp.asarray(rng.random((4, 3)), jnp.float32)
+    state = init_atmo_state()
+    a_pad, s_pad = scan(cand, jnp.asarray([4, -1, -1, -1], jnp.int32),
+                        state, period=2, lam=0.3)
+    a_one, s_one = scan(cand[:1], jnp.asarray([4], jnp.int32),
+                        state, period=2, lam=0.3)
+    np.testing.assert_array_equal(np.asarray(s_pad.A), np.asarray(s_one.A))
+    assert int(s_pad.last_update) == 4 and bool(s_pad.initialized)
+    # Padding output slots carry the running A through unchanged.
+    np.testing.assert_array_equal(np.asarray(a_pad[1:]),
+                                  np.broadcast_to(np.asarray(a_one[0]), (3, 3)))
+
+
+@pytest.mark.parametrize("scan", [ema_scan, ema_scan_associative],
+                         ids=["scan", "associative"])
+def test_all_padding_batch_is_identity(scan):
+    """A batch of only padding (an unoccupied scheduler lane) behaves like
+    the empty batch: no update, no ``initialized`` flip."""
+    state = init_atmo_state()
+    cand = jnp.ones((4, 3), jnp.float32) * 0.5
+    ids = jnp.full((4,), -1, jnp.int32)
+    _, out = scan(cand, ids, state, period=4, lam=0.3)
+    assert not bool(out.initialized)
+    np.testing.assert_array_equal(np.asarray(out.A), np.asarray(state.A))
+    assert int(out.last_update) == int(state.last_update)
+
+    warm = AtmoState(A=jnp.asarray([0.8, 0.85, 0.9], jnp.float32),
+                     last_update=jnp.asarray(7, jnp.int32),
+                     initialized=jnp.asarray(True))
+    _, out = scan(cand, ids, warm, period=4, lam=0.3)
+    assert bool(out.initialized) and int(out.last_update) == 7
+    np.testing.assert_array_equal(np.asarray(out.A), np.asarray(warm.A))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_fused_dehaze_masks_padding_ids(mode):
+    """The megakernel's in-grid EMA carry must honor the same padding
+    contract as the host-side scans."""
+    r = np.random.default_rng(5)
+    img = jnp.asarray(r.random((4, 12, 16, 3), np.float32))
+    ids = jnp.asarray([8, 9, -1, -1], jnp.int32)
+    s = init_atmo_state()
+    kw = dict(radius=2, omega=0.95, refine=False, gf_radius=2, gf_eps=1e-3,
+              t0=0.1, gamma=1.0, period=3, lam=0.2)
+    got = ops.fused_dehaze(img, ids, s.A, s.last_update, s.initialized,
+                           mode=mode, **kw)
+    want = ops.fused_dehaze(img[:2], ids[:2], s.A, s.last_update,
+                            s.initialized, mode=mode, **kw)
+    np.testing.assert_allclose(np.asarray(got[3]), np.asarray(want[3]),
+                               atol=1e-6)                  # A_fin
+    assert int(got[4]) == int(want[4]) == 8                # k_fin: bootstrap@8
+
+
+def test_serve_chunked_with_padded_tails_matches_unchunked():
+    """End-to-end: serving a stream in two chunks whose tails are padded
+    must leave the same EMA state as one uninterrupted serve — the
+    original bug EMA-advanced on padded duplicates of frames 4..5, then
+    again on the real frames 4..5 of chunk 2."""
+    from repro.core import DehazeConfig
+    from repro.stream import ElasticServer
+    rng = np.random.default_rng(6)
+    frames = [rng.random((16, 20, 3)).astype(np.float32) for _ in range(12)]
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2, update_period=2)
+
+    srv_ref = ElasticServer(cfg, n_workers=1, batch=4, timeout_s=5.0)
+    srv_ref.serve(iter(frames))
+    srv = ElasticServer(cfg, n_workers=1, batch=4, timeout_s=5.0)
+    srv.serve(iter(frames[:6]))      # tail batch: [4, 5, pad, pad]
+    srv.serve(iter(frames[6:]))      # resumes at cursor 6
+    np.testing.assert_allclose(
+        np.asarray(srv.store.get("default").A),
+        np.asarray(srv_ref.store.get("default").A), atol=1e-6)
+    assert srv.store.cursor("default") == 12
 
 
 # --- frames_per_block largest-divisor degradation ----------------------------
