@@ -115,15 +115,18 @@ def generate_haze_free(frames: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def supports_fused(cfg: DehazeConfig) -> bool:
-    """The single-pass megakernel covers DCP *and* CAP with the Eq. 6 (k=1)
-    estimator, with or without height sharding (the halo-aware variant).
+    """The single-pass megakernel covers DCP *and* CAP, the Eq. 6 (k=1)
+    *and* robust top-k (k > 1, in-VMEM running selection) atmospheric-light
+    estimators, with or without spatial sharding (the halo-aware variant
+    masks rows and columns, so height- and width-sharded meshes both stay
+    fused) — every production serving config.
 
-    The robust top-k and the DCP recompute-with-final-A variants fall back
-    to the per-stage chain (ROADMAP tracks in-kernel top-k). CAP ignores
-    ``recompute_t_with_final_a`` — its transmission is A-free — so the flag
-    does not gate it, matching the per-stage chain.
+    The only remaining fallback is DCP with ``recompute_t_with_final_a``
+    (an extra-accuracy second transmission pass that is inherently
+    two-stage). CAP ignores that flag — its transmission is A-free — so it
+    does not gate CAP, matching the per-stage chain.
     """
-    return (cfg.algorithm in ("dcp", "cap") and cfg.topk == 1
+    return (cfg.algorithm in ("dcp", "cap")
             and not (cfg.algorithm == "dcp" and cfg.recompute_t_with_final_a))
 
 
@@ -157,7 +160,7 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
         beta=cfg.beta, cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2),
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
         t0=cfg.t0, gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
-        mode=cfg.kernel_mode)
+        topk=cfg.topk, mode=cfg.kernel_mode)
     new_state = AtmoState(
         A=a_fin, last_update=k_fin,
         initialized=jnp.logical_or(state.initialized,
@@ -167,25 +170,28 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
 
 def fused_transmission(frames: jnp.ndarray, a_saved: jnp.ndarray,
                        cfg: DehazeConfig):
-    """Fused t-map + argmin-t candidate stage for the sharded step."""
+    """Fused t-map + A-candidate stage for the batch-sharded step."""
     return ops.fused_transmission(
         frames, a_saved, algorithm=cfg.algorithm, radius=cfg.patch_radius,
         omega=cfg.omega, beta=cfg.beta,
         cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2), refine=cfg.refine,
-        gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, mode=cfg.kernel_mode)
+        gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, topk=cfg.topk,
+        mode=cfg.kernel_mode)
 
 
 def fused_transmission_halo(frames: jnp.ndarray, pre_ext: jnp.ndarray,
                             guide_ext: jnp.ndarray, valid: jnp.ndarray,
-                            cfg: DehazeConfig):
-    """Halo-aware fused t-map stage for the height-sharded step.
+                            valid_w, cfg: DehazeConfig):
+    """Halo-aware fused t-map stage for the spatially-sharded step.
 
     ``pre_ext``/``guide_ext`` are the halo-extended (pre-map, luma-guide)
-    planes from the exchange; ``valid`` is the row-validity mask. The
-    masked min/box filters run inside the kernel.
+    planes from the exchange; ``valid``/``valid_w`` are the row/column
+    validity masks (``valid_w=None`` = no width sharding). The masked
+    min/box filters run inside the kernel. Returns the shard-local top-k
+    candidate lists (see ``ops.fused_transmission_halo``).
     """
     return ops.fused_transmission_halo(
-        frames, pre_ext, guide_ext, valid, algorithm=cfg.algorithm,
+        frames, pre_ext, guide_ext, valid, valid_w, algorithm=cfg.algorithm,
         radius=cfg.patch_radius, omega=cfg.omega, beta=cfg.beta,
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
-        mode=cfg.kernel_mode)
+        topk=cfg.topk, mode=cfg.kernel_mode)

@@ -38,9 +38,11 @@ class DehazeConfig:
     # Dataflow options.
     recompute_t_with_final_a: bool = False # extra accuracy pass (beyond paper)
     kernel_mode: str = "auto"              # ref | pallas | interpret | fused | auto
-    #   "fused": single-pass megakernel path (DCP and CAP, k=1, incl. the
-    #   halo-aware height-sharded variant; top-k / recompute configs fall
-    #   back to the per-stage chain — see core.algorithms.supports_fused).
+    #   "fused": single-pass megakernel path — DCP and CAP, any topk (k=1
+    #   argmin or the robust in-VMEM top-k), including the halo-aware
+    #   variant for height- and/or width-sharded meshes. The only fallback
+    #   to the per-stage chain is DCP + recompute_t_with_final_a — see
+    #   core.algorithms.supports_fused.
     dtype: str = "float32"
 
     # Perf levers for the sharded pipeline (EXPERIMENTS.md §Perf):

@@ -115,122 +115,190 @@ def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True):
 # Sharded step (production mesh)
 # ---------------------------------------------------------------------------
 
-def _gather_argmin_over_model(t_min: jnp.ndarray, rgb: jnp.ndarray,
-                              axis_name: str) -> jnp.ndarray:
-    """Combine per-shard (min_t, rgb) candidates into the global argmin-t rgb.
+def _local_topk_candidates(t_raw: jnp.ndarray, frames: jnp.ndarray,
+                           k: int):
+    """Per-frame shard-local top-k smallest-t candidates over the core
+    block: ``(tk_t (B, k), tk_rgb (B, k, 3), tk_idx (B, k) int32)`` in
+    ascending (t, local flat index) order — the identical selection (and
+    tie-breaking) to ``kernels.ref.atmospheric_light``."""
+    b_loc = frames.shape[0]
+    flat_t = t_raw.reshape(b_loc, -1).astype(jnp.float32)
+    _, idx = lax.top_k(-flat_t, k)                 # k smallest, ties by idx
+    tk_t = jnp.take_along_axis(flat_t, idx, axis=-1)
+    tk_rgb = jnp.take_along_axis(
+        frames.astype(jnp.float32).reshape(b_loc, -1, 3), idx[..., None],
+        axis=1)
+    return tk_t, tk_rgb, idx.astype(jnp.int32)
 
-    t_min: (B,), rgb: (B, 3) per shard -> (B, 3) replicated over the axis.
-    """
-    all_t = lax.all_gather(t_min, axis_name, axis=0)      # (M, B)
-    all_rgb = lax.all_gather(rgb, axis_name, axis=0)      # (M, B, 3)
-    j = jnp.argmin(all_t, axis=0)                         # (B,)
-    return jnp.take_along_axis(all_rgb, j[None, :, None], axis=0)[0]
+
+def _merge_topk_over_spatial(tk_t: jnp.ndarray, tk_rgb: jnp.ndarray,
+                             tk_gidx: jnp.ndarray, axis_names, k: int):
+    """Merge per-shard top-k candidate lists into the per-frame global A
+    candidate (B, 3): all-gather the (t, rgb, global flat index) lists over
+    the spatial mesh axes, lexicographically sort by (t, index), mean the k
+    best rgb rows. The explicit global-index sort key reproduces
+    ``lax.top_k``'s lowest-flat-index tie-breaking even when a t plateau
+    spans shard boundaries — common, since the min-filter output is
+    piecewise constant — so the sharded candidate equals the single-device
+    one bit-for-bit, not just in value."""
+    tk_rgb = tk_rgb.astype(jnp.float32)
+    for ax in axis_names:
+        tk_t = lax.all_gather(tk_t, ax, axis=1, tiled=True)
+        tk_rgb = lax.all_gather(tk_rgb, ax, axis=1, tiled=True)
+        tk_gidx = lax.all_gather(tk_gidx, ax, axis=1, tiled=True)
+    _, _, r_s, g_s, b_s = lax.sort(
+        (tk_t, tk_gidx, tk_rgb[..., 0], tk_rgb[..., 1], tk_rgb[..., 2]),
+        dimension=1, num_keys=2)
+    top = jnp.stack([r_s[:, :k], g_s[:, :k], b_s[:, :k]], axis=-1)
+    return top.mean(axis=1)
 
 
 def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
                              batch_axes: Tuple[str, ...] = ("data",),
-                             height_axis: Optional[str] = "model"):
+                             height_axis: Optional[str] = "model",
+                             width_axis: Optional[str] = None):
     """Build a shard_map dehaze step for ``mesh``.
 
-    Sharding: frames (B, H, W, 3) with B over ``batch_axes`` and H over
-    ``height_axis`` (None disables spatial parallelism). frame_ids (B,)
-    over ``batch_axes``. The AtmoState is replicated.
+    Sharding: frames (B, H, W, 3) with B over ``batch_axes``, H over
+    ``height_axis`` and W over ``width_axis`` (None disables that spatial
+    axis). frame_ids (B,) over ``batch_axes``. The AtmoState is replicated.
+    With both spatial axes a 2-D (n_h x n_w) tile of shards covers each
+    frame; the halo exchange runs height-then-width (corner halos ride the
+    W hop for free) and every windowed filter is masked by the separable
+    row x column validity mask.
     """
     cfg = cfg.validate()
-    t_est = alg.get_transmission_estimator(cfg.algorithm)
-    del t_est  # estimators are inlined below (halo-aware masked forms)
     n_h = mesh.shape[height_axis] if height_axis else 1
+    n_w = mesh.shape[width_axis] if width_axis else 1
+    shard_h = height_axis is not None and n_h > 1
+    shard_w = width_axis is not None and n_w > 1
+    # Mesh axes that actually split a spatial dimension — the candidate
+    # merge and the halo machinery only engage for these.
+    spatial_axes = tuple(ax for ax, on in ((height_axis, shard_h),
+                                           (width_axis, shard_w)) if on)
     halo = cfg.patch_radius + (2 * cfg.gf_radius if cfg.refine else 0)
-    # With height sharding the fused path switches to the halo-aware
+    # With spatial sharding the fused path switches to the halo-aware
     # megakernel: the exchanged (pre-map, guide) planes plus the
-    # row-validity mask feed the kernel directly and the min/box filters
-    # run masked in-VMEM (kernels.fused.fused_transmission_halo_pallas).
+    # row/column-validity masks feed the kernel directly and the min/box
+    # filters run masked in-VMEM (kernels.fused.fused_transmission_halo_pallas).
     use_fused = cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
 
-    fspec = P(batch_axes, height_axis) if height_axis else P(batch_axes)
+    fspec = P(batch_axes, height_axis, width_axis)
     ispec = P(batch_axes)
 
     def halo_premap_and_guide(frames, state):
-        """Halo-extended (pre-map, guide) planes + row validity, honoring
-        ``cfg.halo_packed``: either exchange the packed 2-channel stack
-        (what the stencils consume — 1/3 less wire than RGB) or exchange
-        RGB and compute the maps on the extended block. Both the staged
-        chain and the fused halo kernel consume this, so the two paths see
-        identical inputs (including bf16 halo rounding placement)."""
+        """Halo-extended (pre-map, guide) planes + row/column validity,
+        honoring ``cfg.halo_packed``: either exchange the packed 2-channel
+        stack (what the stencils consume — 1/3 less wire than RGB) or
+        exchange RGB and compute the maps on the extended block. Both the
+        staged chain and the fused halo kernel consume this, so the two
+        paths see identical inputs (including bf16 halo rounding
+        placement)."""
         hdt = jnp.dtype(cfg.halo_dtype)
+
+        def exchange(p):
+            p = p.astype(hdt)
+            valid_w = None
+            if shard_h:
+                p, valid_h = spatial.halo_exchange_height(
+                    p, halo, height_axis, n_h)
+            else:
+                valid_h = jnp.ones((p.shape[1],), bool)
+            if shard_w:
+                p, valid_w = spatial.halo_exchange_width(
+                    p, halo, width_axis, n_w)
+            return p.astype(frames.dtype), valid_h, valid_w
+
         if cfg.halo_packed:
             packed = jnp.stack([alg.premap(frames, state.A, cfg),
                                 alg.luminance(frames)], axis=-1)
-            p_ext, valid = spatial.halo_exchange_height(
-                packed.astype(hdt), halo, height_axis, n_h)
-            p_ext = p_ext.astype(frames.dtype)
-            return p_ext[..., 0], p_ext[..., 1], valid
-        x_ext, valid = spatial.halo_exchange_height(
-            frames.astype(hdt), halo, height_axis, n_h)
-        x_ext = x_ext.astype(frames.dtype)
-        return alg.premap(x_ext, state.A, cfg), alg.luminance(x_ext), valid
+            p_ext, valid_h, valid_w = exchange(packed)
+            return p_ext[..., 0], p_ext[..., 1], valid_h, valid_w
+        x_ext, valid_h, valid_w = exchange(frames)
+        return (alg.premap(x_ext, state.A, cfg), alg.luminance(x_ext),
+                valid_h, valid_w)
+
+    def global_flat_idx(lidx, h_loc, w_loc):
+        """Shard-local flat core index -> global flat (row-major) index —
+        the cross-shard tie-break key of the candidate merge."""
+        row = lidx // w_loc
+        col = lidx % w_loc
+        if shard_h:
+            row = row + lax.axis_index(height_axis) * h_loc
+        if shard_w:
+            col = col + lax.axis_index(width_axis) * w_loc
+        return row * (w_loc * n_w) + col
+
+    def candidates_from_local_topk(tk_t, tk_rgb, tk_idx, frames):
+        """Per-frame A candidate (B, 3) from shard-local top-k lists."""
+        if spatial_axes:
+            gidx = global_flat_idx(tk_idx, frames.shape[1], frames.shape[2])
+            return _merge_topk_over_spatial(tk_t, tk_rgb, gidx,
+                                            spatial_axes, cfg.topk)
+        return tk_rgb.astype(jnp.float32).mean(axis=1)
 
     def staged_t_and_candidates(frames, state):
         """Per-stage chain: masked filters over halo-extended blocks ->
-        (refined t, per-frame (t_min, rgb) candidates)."""
-        if height_axis and n_h > 1:
-            pre_ext, guide_ext, valid = halo_premap_and_guide(frames, state)
+        (refined t, per-frame A candidates)."""
+        if spatial_axes:
+            pre_ext, guide_ext, valid_h, valid_w = halo_premap_and_guide(
+                frames, state)
         else:
-            valid = jnp.ones((frames.shape[1],), bool)
+            valid_h = jnp.ones((frames.shape[1],), bool)
+            valid_w = None
             pre_ext = alg.premap(frames, state.A, cfg)
             guide_ext = alg.luminance(frames)
 
         # --- Component 1 on the halo-extended block (masked filters). ---
         from repro.kernels import ref as kref
         t_raw_ext = kref.tmap_from_dark(
-            spatial.masked_min_filter_2d(pre_ext, valid, cfg.patch_radius),
+            spatial.masked_min_filter_2d(pre_ext, valid_h, cfg.patch_radius,
+                                         valid_w),
             cfg.algorithm, cfg.omega, cfg.beta)
         t_raw_ext = t_raw_ext.astype(frames.dtype)
 
-        core = slice(halo, halo + frames.shape[1]) if (height_axis and n_h > 1) \
+        core_h = slice(halo, halo + frames.shape[1]) if shard_h \
             else slice(None)
-        t_raw = t_raw_ext[:, core]
+        core_w = slice(halo, halo + frames.shape[2]) if shard_w \
+            else slice(None)
+        t_raw = t_raw_ext[:, core_h, core_w]
 
-        # --- Component 2: per-frame candidates (paper Eq. 6). ---
-        b_loc = frames.shape[0]
-        flat_t = t_raw.reshape(b_loc, -1)
-        jmin = jnp.argmin(flat_t, axis=-1)
-        t_min = jnp.take_along_axis(flat_t, jmin[:, None], axis=-1)[:, 0]
-        rgb = jnp.take_along_axis(frames.reshape(b_loc, -1, 3),
-                                  jmin[:, None, None], axis=1)[:, 0]
-        if height_axis and n_h > 1:
-            rgb = _gather_argmin_over_model(t_min, rgb, height_axis)
+        # --- Component 2: per-frame candidates (paper Eq. 5/6). ---
+        tk_t, tk_rgb, tk_idx = _local_topk_candidates(t_raw, frames, cfg.topk)
+        rgb = candidates_from_local_topk(tk_t, tk_rgb, tk_idx, frames)
 
         # --- Refinement on the halo-extended block. ---
         if cfg.refine:
             t_ext = spatial.masked_guided_filter(
-                guide_ext, t_raw_ext, valid, cfg.gf_radius, cfg.gf_eps)
-            t = jnp.clip(t_ext[:, core], 0.0, 1.0)
+                guide_ext, t_raw_ext, valid_h, cfg.gf_radius, cfg.gf_eps,
+                valid_w)
+            t = jnp.clip(t_ext[:, core_h, core_w], 0.0, 1.0)
         else:
             t = t_raw
-        return t, t_min, rgb
+        return t, rgb
 
     def fused_t_and_candidates(frames, state):
         """Fused megakernel form of ``staged_t_and_candidates``: one launch
         per block instead of the masked per-stage XLA chain."""
-        if height_axis and n_h > 1:
+        if spatial_axes:
             # Halo-aware fused kernel: the exchange output is the kernel
             # input; masking happens in-VMEM.
-            pre_ext, guide_ext, valid = halo_premap_and_guide(frames, state)
-            t, t_min, rgb = alg.fused_transmission_halo(
-                frames, pre_ext, guide_ext, valid, cfg)
-            rgb = _gather_argmin_over_model(t_min, rgb, height_axis)
+            pre_ext, guide_ext, valid_h, valid_w = halo_premap_and_guide(
+                frames, state)
+            t, tk_t, tk_rgb, tk_idx = alg.fused_transmission_halo(
+                frames, pre_ext, guide_ext, valid_h, valid_w, cfg)
+            rgb = candidates_from_local_topk(tk_t, tk_rgb, tk_idx, frames)
         else:
-            t, t_min, rgb = alg.fused_transmission(frames, state.A, cfg)
-        return t, t_min, rgb
+            t, _t_min, rgb = alg.fused_transmission(frames, state.A, cfg)
+        return t, rgb
 
     def local_step(frames, frame_ids, state):
         b_loc = frames.shape[0]
         if use_fused:
             # Components 1 + 2 candidates + refinement in ONE launch.
-            t, t_min, rgb = fused_t_and_candidates(frames, state)
+            t, rgb = fused_t_and_candidates(frames, state)
         else:
-            t, t_min, rgb = staged_t_and_candidates(frames, state)
+            t, rgb = staged_t_and_candidates(frames, state)
 
         # State sync: all-gather candidates over the frame axes, scan,
         # slice the local part (the paper's A broadcast, minus the race).

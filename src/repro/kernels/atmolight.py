@@ -1,19 +1,67 @@
-"""Pallas TPU kernel: atmospheric-light argmin-t reduction (paper Eq. 6).
+"""Pallas TPU kernels: atmospheric-light argmin-t reduction (paper Eq. 6)
+and its robust top-k generalization (mean of I over the k smallest-t pixels).
 
 A = I(x*) where x* = argmin_x t(x). Implemented as a fused single-pass
 reduction: each grid step reduces one frame's row-tile in VMEM to a
 (min_t, R, G, B) quadruple and folds it into the running output — the
-sequential TPU grid makes the cross-tile fold race-free. The robust top-k
-variant (k > 1) stays in XLA (``kernels.ref.atmospheric_light``): top-k is
-sort-shaped and tiny (three scalars per frame), so a kernel buys nothing.
+sequential TPU grid makes the cross-tile fold race-free.
+
+``atmolight_topk_pallas`` extends the same fold to k rows: each tile's
+local top-k (selected in-VMEM by ``topk_select``, a k-step lexicographic
+(t, index) running selection) is merged with the k rows carried in the
+output ref, so the cross-tile state is 4k floats + k indices regardless of
+frame size. Tie-breaking is by global flat pixel index, matching
+``lax.top_k`` (and therefore ``kernels.ref.atmospheric_light``) exactly —
+the fused megakernel (``kernels.fused``) reuses ``topk_select`` for its
+in-kernel candidates so all three paths pick identical pixels.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+_INT32_MAX = 2 ** 31 - 1
+
+
+def flat_iota_2d(h: int, w: int) -> jnp.ndarray:
+    """Row-major flat pixel index as a 2-D int32 map (TPU needs >= 2-D
+    iota) — the tie-break key shared by every top-k selection site."""
+    return (jax.lax.broadcasted_iota(jnp.int32, (h, w), 0) * w
+            + jax.lax.broadcasted_iota(jnp.int32, (h, w), 1))
+
+
+def topk_select(t: jnp.ndarray, idx: jnp.ndarray, rgb: jnp.ndarray,
+                k: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """k-step running selection of the lexicographically smallest (t, idx).
+
+    ``t``/``idx`` share any shape; ``rgb`` adds a trailing channel axis.
+    Returns ``(t_k (k,), idx_k (k,), rgb_k (k, C))`` in ascending (t, idx)
+    order — the same set, order and tie-breaking as
+    ``lax.top_k(-t.ravel(), k)`` when ``idx`` is the flat pixel index.
+
+    Pallas-safe by construction: each step is two reductions plus a masked
+    sum (no sort, no gather), so it traces inside a TPU kernel body where
+    ``lax.top_k``/``lax.sort`` do not. Requires k <= t.size; duplicated
+    (t, idx) pairs would be picked once per duplicate.
+    """
+    lead_axes = tuple(range(t.ndim))
+    t_work = t
+    t_out, i_out, rgb_out = [], [], []
+    for _ in range(k):
+        t_min = jnp.min(t_work)
+        at_min = t_work == t_min
+        i_min = jnp.min(jnp.where(at_min, idx, _INT32_MAX))
+        pick = jnp.logical_and(at_min, idx == i_min)
+        t_out.append(t_min)
+        i_out.append(i_min)
+        rgb_out.append(jnp.sum(jnp.where(pick[..., None], rgb, 0.0),
+                               axis=lead_axes))
+        t_work = jnp.where(pick, jnp.inf, t_work)
+    return jnp.stack(t_out), jnp.stack(i_out), jnp.stack(rgb_out)
 
 
 def _atmolight_kernel(img_ref, t_ref, out_ref):
@@ -61,3 +109,71 @@ def atmolight_pallas(img: jnp.ndarray, t_raw: jnp.ndarray,
         interpret=interpret,
     )(img, t_raw)
     return out[:, 1:4].astype(img.dtype)
+
+
+def _atmolight_topk_kernel(img_ref, t_ref, out_f_ref, out_i_ref, *,
+                           k: int, tile_h: int):
+    h_idx = pl.program_id(1)
+    img = img_ref[0].astype(jnp.float32)           # (TH, W, 3)
+    t = t_ref[0].astype(jnp.float32)               # (TH, W)
+    th, w = t.shape
+
+    # Tile-local top-k with *global* flat pixel indices (row-major tiles are
+    # flat-contiguous, so global = tile offset + local).
+    gidx = flat_iota_2d(th, w) + h_idx * tile_h * w
+    tk_t, tk_i, tk_rgb = topk_select(t, gidx, img, k)
+
+    @pl.when(h_idx == 0)
+    def _init():
+        out_f_ref[0, :, 0] = tk_t
+        out_f_ref[0, :, 1:4] = tk_rgb
+        out_i_ref[0] = tk_i
+
+    @pl.when(h_idx != 0)
+    def _fold():
+        # Merge the carried k rows with the tile's k rows: a top-k over the
+        # 2k-entry union, same lexicographic (t, idx) rule.
+        all_t = jnp.concatenate([out_f_ref[0, :, 0], tk_t])
+        all_i = jnp.concatenate([out_i_ref[0], tk_i])
+        all_rgb = jnp.concatenate([out_f_ref[0, :, 1:4], tk_rgb])
+        m_t, m_i, m_rgb = topk_select(all_t, all_i, all_rgb, k)
+        out_f_ref[0, :, 0] = m_t
+        out_f_ref[0, :, 1:4] = m_rgb
+        out_i_ref[0] = m_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_h", "interpret"))
+def atmolight_topk_pallas(img: jnp.ndarray, t_raw: jnp.ndarray, k: int,
+                          tile_h: int = 0,
+                          interpret: bool = False) -> jnp.ndarray:
+    """(B,H,W,3), (B,H,W) -> (B,3): mean of I over the k smallest-t pixels.
+
+    k=1 is numerically identical to ``atmolight_pallas`` (argmin with
+    first-index tie-break); any k matches ``kernels.ref.atmospheric_light``
+    because both break ties by flat pixel index.
+    """
+    b, h, w, c = img.shape
+    assert c == 3 and t_raw.shape == (b, h, w)
+    assert 1 <= k <= h * w, (k, h, w)
+    if tile_h <= 0 or h % tile_h != 0 or tile_h * w < k:
+        tile_h = h
+    n_tiles = h // tile_h
+    kernel = functools.partial(_atmolight_topk_kernel, k=k, tile_h=tile_h)
+    out_f, _ = pl.pallas_call(
+        kernel,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_h, w, 3), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, tile_h, w), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, 4), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k, 4), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(img, t_raw)
+    return out_f[:, :, 1:4].mean(axis=1).astype(img.dtype)

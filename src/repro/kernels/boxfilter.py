@@ -55,56 +55,78 @@ def _boxfilter_kernel(x_ref, out_ref, *, radius: int):
     out_ref[0] = (s / _counts_2d(h, w, radius)).astype(out_ref.dtype)
 
 
-def _masked_box_mean(v: jnp.ndarray, valid_f: jnp.ndarray,
-                     radius: int) -> jnp.ndarray:
-    """(H, W) windowed mean over valid rows only, all in VMEM.
+def _masked_box_mean(v: jnp.ndarray, valid_f: jnp.ndarray, radius: int,
+                     valid_w_f: jnp.ndarray = None) -> jnp.ndarray:
+    """(H, W) windowed mean over valid rows (and columns), all in VMEM.
 
     The per-pixel divisor decomposes as (windowed sum of the row mask along
-    H) x (in-bounds count along W) — one extra 1-D cumsum pass instead of a
-    full ones-image sweep. Semantics match
-    ``core.spatial.masked_box_filter_2d``: invalid rows are excluded from
-    both the sum and the count, so windows that straddle a mesh edge
-    renormalize exactly like a clipped image-border window. This is THE
+    H) x (windowed count along W) — one extra 1-D cumsum pass per axis
+    instead of a full ones-image sweep. With no column mask the W count is
+    the closed-form in-bounds count; with ``valid_w_f`` (the W-sharded halo
+    path) it is the windowed sum of the column mask, so windows that
+    straddle a *vertical* mesh edge renormalize exactly like a clipped
+    image-border window too. Semantics match
+    ``core.spatial.masked_box_filter_2d`` (whose divisor is the windowed
+    sum of the full 2-D mask — equal to this separable product because the
+    halo masks are outer products of per-axis validity). This is THE
     array-level masked box mean — the standalone kernel below and the fused
     halo megakernel (``kernels.fused``) both call it; change masking
     semantics here and in ``core.spatial`` together.
     """
     h, w = v.shape
-    # `where`, not multiply: invalid rows may hold +/-inf from an upstream
-    # masked min filter and inf * 0 would poison the sums with NaN.
-    vm = jnp.where(valid_f[:, None] > 0.5, v, 0.0)
+    mask = valid_f[:, None] > 0.5
+    if valid_w_f is not None:
+        mask = jnp.logical_and(mask, valid_w_f[None, :] > 0.5)
+    # `where`, not multiply: invalid rows/cols may hold +/-inf from an
+    # upstream masked min filter and inf * 0 would poison the sums with NaN.
+    vm = jnp.where(mask, v, 0.0)
     s = _box_pass(_box_pass(vm, radius, axis=0), radius, axis=1)
     rowcnt = _box_pass(jnp.broadcast_to(valid_f[:, None], (h, 1)),
                        radius, axis=0)                  # (H, 1)
-    i = jax.lax.broadcasted_iota(jnp.float32, (h, w), 1)
-    wcnt = (jnp.minimum(i + radius, float(w - 1))
-            - jnp.maximum(i - radius, 0.0) + 1.0)
+    if valid_w_f is None:
+        i = jax.lax.broadcasted_iota(jnp.float32, (h, w), 1)
+        wcnt = (jnp.minimum(i + radius, float(w - 1))
+                - jnp.maximum(i - radius, 0.0) + 1.0)
+    else:
+        wcnt = _box_pass(jnp.broadcast_to(valid_w_f[None, :], (1, w)),
+                         radius, axis=1)                # (1, W)
     return s / jnp.maximum(rowcnt * wcnt, 1.0)
 
 
-def _masked_boxfilter_kernel(x_ref, valid_ref, out_ref, *, radius: int):
+def _masked_boxfilter_kernel(x_ref, valid_ref, valid_w_ref, out_ref, *,
+                             radius: int):
     x = x_ref[0].astype(jnp.float32)
     valid = valid_ref[0]                               # (H,) float
-    out_ref[0] = _masked_box_mean(x, valid, radius).astype(out_ref.dtype)
+    valid_w = valid_w_ref[0]                           # (W,) float
+    out_ref[0] = _masked_box_mean(x, valid, radius,
+                                  valid_w_f=valid_w).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("radius", "interpret"))
 def masked_box_filter_2d_pallas(x: jnp.ndarray, valid: jnp.ndarray,
-                                radius: int,
+                                radius: int, valid_w: jnp.ndarray = None,
                                 interpret: bool = False) -> jnp.ndarray:
-    """(B, H, W), (H,) bool -> (B, H, W) masked windowed mean."""
+    """(B, H, W), (H,) [, (W,)] bool -> (B, H, W) masked windowed mean.
+
+    ``valid_w`` (column validity, the W-sharded halo path) defaults to
+    all-valid, reproducing the row-masked behavior exactly.
+    """
     b, h, w = x.shape
     vmask = valid.astype(jnp.float32).reshape(1, h)
+    if valid_w is None:
+        valid_w = jnp.ones((w,), jnp.float32)
+    wmask = valid_w.astype(jnp.float32).reshape(1, w)
     kernel = functools.partial(_masked_boxfilter_kernel, radius=radius)
     return pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
-                  pl.BlockSpec((1, h), lambda i: (0, 0))],
+                  pl.BlockSpec((1, h), lambda i: (0, 0)),
+                  pl.BlockSpec((1, w), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, w), x.dtype),
         interpret=interpret,
-    )(x, vmask)
+    )(x, vmask, wmask)
 
 
 @functools.partial(jax.jit, static_argnames=("radius", "interpret"))

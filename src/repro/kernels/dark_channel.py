@@ -65,15 +65,19 @@ def _min_filter_kernel(x_ref, out_ref, *, radius: int):
     out_ref[0] = m.astype(out_ref.dtype)
 
 
-def _masked_min_filter_kernel(x_ref, valid_ref, out_ref, *, radius: int):
-    """Min filter ignoring invalid rows (halo-exchange border semantics).
+def _masked_min_filter_kernel(x_ref, valid_ref, valid_w_ref, out_ref, *,
+                              radius: int):
+    """Min filter ignoring invalid rows/columns (halo border semantics).
 
-    valid: (1, H) float row-validity mask held in VMEM alongside the tile;
-    invalid rows become +inf before the separable passes, exactly matching
-    ``core.spatial.masked_min_filter_2d``."""
+    valid: (1, H) / valid_w: (1, W) float validity masks held in VMEM
+    alongside the tile; invalid rows and columns become +inf before the
+    separable passes, exactly matching ``core.spatial.masked_min_filter_2d``
+    with a 2-D (H x W) shard mask."""
     x = x_ref[0].astype(jnp.float32)
     valid = valid_ref[0] > 0.5                   # (H,)
-    x = jnp.where(valid[:, None], x, jnp.inf)
+    valid_w = valid_w_ref[0] > 0.5               # (W,)
+    x = jnp.where(jnp.logical_and(valid[:, None], valid_w[None, :]),
+                  x, jnp.inf)
     m = _min_pass(x, radius, axis=0)
     m = _min_pass(m, radius, axis=1)
     out_ref[0] = m.astype(out_ref.dtype)
@@ -81,21 +85,25 @@ def _masked_min_filter_kernel(x_ref, valid_ref, out_ref, *, radius: int):
 
 @functools.partial(jax.jit, static_argnames=("radius", "interpret"))
 def masked_min_filter_2d_pallas(x: jnp.ndarray, valid: jnp.ndarray,
-                                radius: int,
+                                radius: int, valid_w: jnp.ndarray = None,
                                 interpret: bool = False) -> jnp.ndarray:
-    """(B, H, W), (H,) bool -> (B, H, W) masked windowed min."""
+    """(B, H, W), (H,) [, (W,)] bool -> (B, H, W) masked windowed min."""
     b, h, w = x.shape
     vmask = valid.astype(jnp.float32).reshape(1, h)
+    if valid_w is None:
+        valid_w = jnp.ones((w,), jnp.float32)
+    wmask = valid_w.astype(jnp.float32).reshape(1, w)
     kernel = functools.partial(_masked_min_filter_kernel, radius=radius)
     return pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
-                  pl.BlockSpec((1, h), lambda i: (0, 0))],
+                  pl.BlockSpec((1, h), lambda i: (0, 0)),
+                  pl.BlockSpec((1, w), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, w), x.dtype),
         interpret=interpret,
-    )(x, vmask)
+    )(x, vmask, wmask)
 
 
 @functools.partial(jax.jit, static_argnames=("radius", "interpret"))

@@ -14,7 +14,10 @@ Eq. 4 are the two shipped instantiations):
                       CAP: d = w0 + w1*v + w2*s               (Eq. 4 depth)
     2. transmission   DCP: t_raw = 1 - omega * minfilt(cmin)  (Eq. 3)
                       CAP: t_raw = exp(-beta * minfilt(d))    (Eq. 4)
-    3. A candidate    (t*, I(x*)) at x* = argmin t_raw        (Eq. 6)
+    3. A candidate    (t*, I(x*)) at x* = argmin t_raw        (Eq. 6), or the
+                      mean of I over the ``topk`` smallest-t pixels (the
+                      robust Eq. 5/6 generalization) via an in-VMEM k-step
+                      running selection (``atmolight.topk_select``)
     4. EMA update     A_m = lam*A_new + (1-lam)*A_k           (Eq. 9, §3.3)
     5. refine         guided filter on the luma guide          (He et al. [28])
     6. recovery       J = clip((I - A)/max(t, t0) + A, 0, 1)  (Eq. 8) + gamma
@@ -32,13 +35,18 @@ after step 5 and returns per-frame candidates instead of recovering,
 because under batch sharding the EMA must see all shards' candidates
 (an all-gather) before recovery. Still one launch instead of seven.
 
-``fused_transmission_halo_pallas`` is the height-sharded variant: it takes
-the halo-*extended* (pre-map, guide) planes produced by
-``core.spatial.halo_exchange_height`` plus the row-validity mask, and runs
-the min/box filters masked in-VMEM (invalid rows are +inf for the min
-filter, excluded from both sum and count for the box filters), so mesh-edge
-shards keep the exact clipped-window border semantics of the single-device
-chain. The halo exchange feeds the kernel directly — no masked XLA chain.
+``fused_transmission_halo_pallas`` is the spatially-sharded variant: it
+takes the halo-*extended* (pre-map, guide) planes produced by the
+``core.spatial`` halo exchanges (height, and width when ``n_w > 1``) plus
+the row- and column-validity vectors, and runs the min/box filters masked
+in-VMEM (invalid rows/columns are +inf for the min filter, excluded from
+both sum and count for the box filters), so mesh-edge shards — including
+corner shards of a 2-D (H x W) mesh — keep the exact clipped-window border
+semantics of the single-device chain. The halo exchange feeds the kernel
+directly — no masked XLA chain. Its candidates are the shard-local top-k
+(t, rgb, flat-index) lists, ascending in (t, index), which the pipeline
+merges across shards with a lexicographic sort so tie-breaking matches the
+unsharded ``lax.top_k`` bit-for-bit.
 
 Semantics match ``make_dehaze_step``: the pre-map for *every* frame in the
 batch uses the batch-entry saved A (paper §3.3 — the T-estimator runs
@@ -53,6 +61,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.atmolight import (flat_iota_2d as _flat_iota_2d,
+                                     topk_select as _topk_select)
 from repro.kernels.boxfilter import _box_pass, _counts_2d, _masked_box_mean
 from repro.kernels.dark_channel import _min_pass
 from repro.kernels.ref import (CAP_COEFFS, LUMA_WEIGHTS as _LUMA,
@@ -99,18 +109,32 @@ def _guided_refine(img: jnp.ndarray, t_raw: jnp.ndarray, radius: int,
 def _frame_tmap(img: jnp.ndarray, a0: jnp.ndarray, *, algorithm: str,
                 radius: int, omega: float, beta: float,
                 cap_w: Tuple[float, float, float], refine: bool,
-                gf_radius: int, gf_eps: float):
-    """Steps 1-3 (+5) for one (H, W, 3) f32 frame: t_raw, refined t, candidate."""
+                gf_radius: int, gf_eps: float, topk: int = 1):
+    """Steps 1-3 (+5) for one (H, W, 3) f32 frame: t_raw, refined t, candidate.
+
+    The A candidate is the argmin-t pixel (Eq. 6) for ``topk == 1`` and the
+    mean of the ``topk`` smallest-t pixels otherwise — selected entirely in
+    VMEM by ``atmolight.topk_select``, with the same (t, flat index)
+    tie-breaking as ``lax.top_k``, so it matches the staged
+    ``kernels.atmolight`` / ``kernels.ref.atmospheric_light`` estimators
+    for both DCP and CAP.
+    """
     # ref.premap is the canonical form (pure jnp, traces in-kernel too);
     # the sharded step computes the identical map outside the kernel before
     # the halo exchange, which is what keeps fused and staged paths equal.
     pre = _premap(img, a0, algorithm, cap_w)                    # (H, W)
     dark = _min_pass(_min_pass(pre, radius, axis=0), radius, axis=1)
     t_raw = _tmap_from_dark(dark, algorithm=algorithm, omega=omega, beta=beta)
-    flat_t = t_raw.reshape(-1)
-    j = jnp.argmin(flat_t)
-    cand_min = flat_t[j]
-    cand_rgb = img.reshape(-1, 3)[j]
+    if topk == 1:
+        flat_t = t_raw.reshape(-1)
+        j = jnp.argmin(flat_t)
+        cand_min = flat_t[j]
+        cand_rgb = img.reshape(-1, 3)[j]
+    else:
+        h, w = t_raw.shape
+        tk_t, _, tk_rgb = _topk_select(t_raw, _flat_iota_2d(h, w), img, topk)
+        cand_min = tk_t[0]
+        cand_rgb = tk_rgb.mean(axis=0)
     t = _guided_refine(img, t_raw, gf_radius, gf_eps) if refine else t_raw
     return t, cand_min, cand_rgb
 
@@ -140,7 +164,7 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
                          algorithm: str, radius: int, omega: float, beta: float,
                          cap_w: Tuple[float, float, float], refine: bool,
                          gf_radius: int, gf_eps: float, t0: float,
-                         gamma: float, period: int, lam: float,
+                         gamma: float, period: int, lam: float, topk: int,
                          frames_per_block: int):
     step = pl.program_id(0)
 
@@ -162,7 +186,7 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
         t, cand_min, cand_rgb = _frame_tmap(
             img, a0, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-            gf_eps=gf_eps)
+            gf_eps=gf_eps, topk=topk)
         A, k, inited = _ema_step(cand_rgb, ids_ref[f, 0], A, k, inited,
                                  period=period, lam=lam)
         aseq_ref[f] = A
@@ -180,14 +204,15 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
-    "gf_eps", "t0", "gamma", "period", "lam", "frames_per_block", "interpret"))
+    "gf_eps", "t0", "gamma", "period", "lam", "topk", "frames_per_block",
+    "interpret"))
 def fused_dehaze_pallas(
         img: jnp.ndarray, frame_ids: jnp.ndarray, A_saved: jnp.ndarray,
         last_update: jnp.ndarray, initialized: jnp.ndarray, *,
         algorithm: str = "dcp", radius: int, omega: float = 0.95,
         beta: float = 1.0, cap_w: Tuple[float, float, float] = CAP_COEFFS,
         refine: bool, gf_radius: int, gf_eps: float, t0: float, gamma: float,
-        period: int, lam: float, frames_per_block: int = 1,
+        period: int, lam: float, topk: int = 1, frames_per_block: int = 1,
         interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Single-launch dehaze: (B,H,W,3) -> (J, t, a_seq, A_fin, k_fin).
@@ -208,7 +233,7 @@ def fused_dehaze_pallas(
     kernel = functools.partial(
         _fused_dehaze_kernel, algorithm=algorithm, radius=radius, omega=omega,
         beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam,
+        gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
         frames_per_block=fpb)
     out, t, a_seq, carry_f, carry_i = pl.pallas_call(
         kernel,
@@ -245,12 +270,13 @@ fused_dehaze_dcp_pallas = fused_dehaze_pallas
 def _fused_tmap_kernel(img_ref, a0_ref, t_ref, cand_ref, *, algorithm: str,
                        radius: int, omega: float, beta: float,
                        cap_w: Tuple[float, float, float], refine: bool,
-                       gf_radius: int, gf_eps: float):
+                       gf_radius: int, gf_eps: float, topk: int):
     img = img_ref[0].astype(jnp.float32)
     a0 = jnp.maximum(a0_ref[0].astype(jnp.float32), 1e-3)
     t, cand_min, cand_rgb = _frame_tmap(
         img, a0, algorithm=algorithm, radius=radius, omega=omega, beta=beta,
-        cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps)
+        cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+        topk=topk)
     t_ref[0] = t.astype(t_ref.dtype)
     cand_ref[0, 0] = cand_min
     cand_ref[0, 1:4] = cand_rgb
@@ -258,18 +284,20 @@ def _fused_tmap_kernel(img_ref, a0_ref, t_ref, cand_ref, *, algorithm: str,
 
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
-    "gf_eps", "interpret"))
+    "gf_eps", "topk", "interpret"))
 def fused_transmission_pallas(
         img: jnp.ndarray, A_saved: jnp.ndarray, *, algorithm: str = "dcp",
         radius: int, omega: float = 0.95, beta: float = 1.0,
         cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
-        gf_radius: int, gf_eps: float, interpret: bool = False,
+        gf_radius: int, gf_eps: float, topk: int = 1,
+        interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Sharded-step variant: (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)).
 
-    Fuses pre-map + min filter + guided refine + per-frame argmin candidate
-    in one launch; the EMA and the recovery stay outside because the
-    candidates must cross shards (all-gather) first.
+    Fuses pre-map + min filter + guided refine + per-frame candidate
+    (argmin for ``topk == 1``, in-VMEM mean-of-top-k otherwise) in one
+    launch; the EMA and the recovery stay outside because the candidates
+    must cross shards (all-gather) first.
     """
     b, h, w, c = img.shape
     assert c == 3
@@ -278,7 +306,7 @@ def fused_transmission_pallas(
     kernel = functools.partial(
         _fused_tmap_kernel, algorithm=algorithm, radius=radius, omega=omega,
         beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps)
+        gf_eps=gf_eps, topk=topk)
     t, cand = pl.pallas_call(
         kernel,
         grid=(b,),
@@ -300,16 +328,17 @@ def fused_transmission_pallas(
 
 
 # ---------------------------------------------------------------------------
-# Halo-aware fused transmission (height-sharded pipeline)
+# Halo-aware fused transmission (spatially-sharded pipeline, H and/or W)
 # ---------------------------------------------------------------------------
 
 def _masked_guided_refine(guide: jnp.ndarray, t_raw: jnp.ndarray,
-                          valid_f: jnp.ndarray, radius: int,
-                          eps: float) -> jnp.ndarray:
-    """Guided filter with all five means over valid rows only (no clip —
-    the caller clips after slicing the core block, matching
+                          valid_f: jnp.ndarray, valid_w_f: jnp.ndarray,
+                          radius: int, eps: float) -> jnp.ndarray:
+    """Guided filter with all five means over valid rows/columns only (no
+    clip — the caller clips after slicing the core block, matching
     ``core.spatial.masked_guided_filter`` + the staged chain)."""
-    bf = functools.partial(_masked_box_mean, valid_f=valid_f, radius=radius)
+    bf = functools.partial(_masked_box_mean, valid_f=valid_f, radius=radius,
+                           valid_w_f=valid_w_f)
     mean_g = bf(guide)
     mean_p = bf(t_raw)
     corr_gp = bf(guide * t_raw)
@@ -322,86 +351,120 @@ def _masked_guided_refine(guide: jnp.ndarray, t_raw: jnp.ndarray,
 
 
 def _fused_tmap_halo_kernel(img_ref, pre_ref, guide_ref, valid_ref,
-                            t_ref, cand_ref, *, algorithm: str, radius: int,
-                            omega: float, beta: float, refine: bool,
-                            gf_radius: int, gf_eps: float, halo: int):
-    img = img_ref[0].astype(jnp.float32)          # (H_loc, W, 3) core block
-    pre = pre_ref[0].astype(jnp.float32)          # (H_ext, W) halo-extended
-    guide = guide_ref[0].astype(jnp.float32)      # (H_ext, W) halo-extended
+                            valid_w_ref, t_ref, cand_ref, idx_ref, *,
+                            algorithm: str, radius: int, omega: float,
+                            beta: float, refine: bool, gf_radius: int,
+                            gf_eps: float, halo_h: int, halo_w: int,
+                            topk: int, frames_per_block: int):
     valid_f = valid_ref[0]                        # (H_ext,) float row mask
-    h_loc = img.shape[0]
+    valid_w_f = valid_w_ref[0]                    # (W_ext,) float col mask
+    mask2d = jnp.logical_and(valid_f[:, None] > 0.5, valid_w_f[None, :] > 0.5)
 
-    # Masked min filter: invalid (off-mesh) rows are +inf, so windows that
-    # straddle the mesh edge clip exactly like image-border windows.
-    pm = jnp.where(valid_f[:, None] > 0.5, pre, jnp.inf)
-    dark = _min_pass(_min_pass(pm, radius, axis=0), radius, axis=1)
-    t_raw_ext = _tmap_from_dark(dark, algorithm=algorithm, omega=omega,
-                                beta=beta)
-    t_raw = jax.lax.slice_in_dim(t_raw_ext, halo, halo + h_loc, axis=0)
-    if refine:
-        t_ext = _masked_guided_refine(guide, t_raw_ext, valid_f,
-                                      gf_radius, gf_eps)
-        t = jnp.clip(jax.lax.slice_in_dim(t_ext, halo, halo + h_loc, axis=0),
-                     0.0, 1.0)
-    else:
-        t = t_raw
+    for f in range(frames_per_block):
+        img = img_ref[f].astype(jnp.float32)      # (H_loc, W_loc, 3) core
+        pre = pre_ref[f].astype(jnp.float32)      # (H_ext, W_ext) extended
+        guide = guide_ref[f].astype(jnp.float32)  # (H_ext, W_ext) extended
+        h_loc, w_loc = img.shape[0], img.shape[1]
 
-    flat_t = t_raw.reshape(-1)                    # candidates over the core
-    j = jnp.argmin(flat_t)
-    t_ref[0] = t.astype(t_ref.dtype)
-    cand_ref[0, 0] = flat_t[j]
-    cand_ref[0, 1:4] = img.reshape(-1, 3)[j]
+        # Masked min filter: invalid (off-mesh) rows/cols are +inf, so
+        # windows that straddle a mesh edge clip exactly like image-border
+        # windows.
+        pm = jnp.where(mask2d, pre, jnp.inf)
+        dark = _min_pass(_min_pass(pm, radius, axis=0), radius, axis=1)
+        t_raw_ext = _tmap_from_dark(dark, algorithm=algorithm, omega=omega,
+                                    beta=beta)
+        t_raw = jax.lax.slice_in_dim(
+            jax.lax.slice_in_dim(t_raw_ext, halo_h, halo_h + h_loc, axis=0),
+            halo_w, halo_w + w_loc, axis=1)
+        if refine:
+            t_ext = _masked_guided_refine(guide, t_raw_ext, valid_f,
+                                          valid_w_f, gf_radius, gf_eps)
+            t = jnp.clip(jax.lax.slice_in_dim(
+                jax.lax.slice_in_dim(t_ext, halo_h, halo_h + h_loc, axis=0),
+                halo_w, halo_w + w_loc, axis=1), 0.0, 1.0)
+        else:
+            t = t_raw
+
+        # Shard-local top-k candidates over the core block, ascending in
+        # (t, local flat index) — the same running selection as the
+        # unsharded megakernel, so the pipeline's cross-shard lexicographic
+        # merge reproduces the global ``lax.top_k`` tie-breaking exactly.
+        tk_t, tk_i, tk_rgb = _topk_select(
+            t_raw, _flat_iota_2d(h_loc, w_loc), img, topk)
+        t_ref[f] = t.astype(t_ref.dtype)
+        cand_ref[f, :, 0] = tk_t
+        cand_ref[f, :, 1:4] = tk_rgb
+        idx_ref[f] = tk_i
 
 
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "refine", "gf_radius", "gf_eps",
-    "interpret"))
+    "topk", "frames_per_block", "interpret"))
 def fused_transmission_halo_pallas(
         img: jnp.ndarray, pre_ext: jnp.ndarray, guide_ext: jnp.ndarray,
-        valid: jnp.ndarray, *, algorithm: str = "dcp", radius: int,
-        omega: float = 0.95, beta: float = 1.0, refine: bool, gf_radius: int,
-        gf_eps: float, interpret: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Height-sharded fused transmission: one launch per local block.
+        valid: jnp.ndarray, valid_w: jnp.ndarray = None, *,
+        algorithm: str = "dcp", radius: int, omega: float = 0.95,
+        beta: float = 1.0, refine: bool, gf_radius: int, gf_eps: float,
+        topk: int = 1, frames_per_block: int = 1, interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Spatially-sharded fused transmission: one launch per local block.
 
-    img:       (B, H_loc, W, 3) — the shard's core rows (for candidates).
-    pre_ext:   (B, H_ext, W)    — halo-extended per-pixel pre-map.
-    guide_ext: (B, H_ext, W)    — halo-extended guided-filter guide (luma).
-    valid:     (H_ext,) bool    — row validity from the halo exchange.
+    img:       (B, H_loc, W_loc, 3) — the shard's core pixels (candidates).
+    pre_ext:   (B, H_ext, W_ext)    — halo-extended per-pixel pre-map.
+    guide_ext: (B, H_ext, W_ext)    — halo-extended guide (luma).
+    valid:     (H_ext,) bool        — row validity from the H halo exchange.
+    valid_w:   (W_ext,) bool | None — column validity from the W halo
+               exchange; None (no W sharding) means all columns valid.
 
-    Returns (t (B, H_loc, W), t_min (B,), cand_rgb (B, 3)); matches the
-    masked per-stage XLA chain on the same inputs to float tolerance. The
-    pre-map is computed *outside* (it is per-pixel, so it rides the halo
-    exchange), everything windowed runs masked in-VMEM here.
+    Returns ``(t (B, H_loc, W_loc), tk_t (B, k), tk_rgb (B, k, 3),
+    tk_idx (B, k) int32)`` — the shard-local top-k smallest-t candidates in
+    ascending (t, local flat index) order; matches
+    ``kernels.ref.fused_transmission_halo`` (the masked per-stage XLA
+    chain) on the same inputs to float tolerance. The pre-map is computed
+    *outside* (it is per-pixel, so it rides the halo exchange), everything
+    windowed runs masked in-VMEM here. ``frames_per_block`` frames share
+    one grid step (no cross-frame state — pure tiling, resolved by the
+    ``fused_halo_2d`` tuning bucket).
     """
-    b, h_loc, w, c = img.shape
-    h_ext = pre_ext.shape[1]
-    assert c == 3 and guide_ext.shape == pre_ext.shape == (b, h_ext, w)
+    b, h_loc, w_loc, c = img.shape
+    h_ext, w_ext = pre_ext.shape[1], pre_ext.shape[2]
+    assert c == 3 and guide_ext.shape == pre_ext.shape == (b, h_ext, w_ext)
     assert algorithm in ALGORITHMS, algorithm
-    halo = (h_ext - h_loc) // 2
-    assert h_ext == h_loc + 2 * halo, (h_ext, h_loc)
+    halo_h = (h_ext - h_loc) // 2
+    halo_w = (w_ext - w_loc) // 2
+    assert h_ext == h_loc + 2 * halo_h, (h_ext, h_loc)
+    assert w_ext == w_loc + 2 * halo_w, (w_ext, w_loc)
+    assert 1 <= topk <= h_loc * w_loc, (topk, h_loc, w_loc)
+    fpb = _resolve_frames_per_block(b, frames_per_block)
     vmask = valid.astype(jnp.float32).reshape(1, h_ext)
+    if valid_w is None:
+        valid_w = jnp.ones((w_ext,), jnp.float32)
+    wmask = valid_w.astype(jnp.float32).reshape(1, w_ext)
     kernel = functools.partial(
         _fused_tmap_halo_kernel, algorithm=algorithm, radius=radius,
         omega=omega, beta=beta, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps, halo=halo)
-    t, cand = pl.pallas_call(
+        gf_eps=gf_eps, halo_h=halo_h, halo_w=halo_w, topk=topk,
+        frames_per_block=fpb)
+    t, cand, idx = pl.pallas_call(
         kernel,
-        grid=(b,),
+        grid=(b // fpb,),
         in_specs=[
-            pl.BlockSpec((1, h_loc, w, 3), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, h_ext, w), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, h_ext, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((fpb, h_loc, w_loc, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((fpb, h_ext, w_ext), lambda i: (i, 0, 0)),
+            pl.BlockSpec((fpb, h_ext, w_ext), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, h_ext), lambda i: (0, 0)),
+            pl.BlockSpec((1, w_ext), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, h_loc, w), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            pl.BlockSpec((fpb, h_loc, w_loc), lambda i: (i, 0, 0)),
+            pl.BlockSpec((fpb, topk, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((fpb, topk), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, h_loc, w), img.dtype),
-            jax.ShapeDtypeStruct((b, 4), jnp.float32),
+            jax.ShapeDtypeStruct((b, h_loc, w_loc), img.dtype),
+            jax.ShapeDtypeStruct((b, topk, 4), jnp.float32),
+            jax.ShapeDtypeStruct((b, topk), jnp.int32),
         ],
         interpret=interpret,
-    )(img, pre_ext, guide_ext, vmask)
-    return t, cand[:, 0], cand[:, 1:4].astype(img.dtype)
+    )(img, pre_ext, guide_ext, vmask, wmask)
+    return t, cand[:, :, 0], cand[:, :, 1:4].astype(img.dtype), idx

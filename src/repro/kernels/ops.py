@@ -28,7 +28,7 @@ from repro.kernels import tuning
 from repro.kernels.dark_channel import dark_channel_pallas, min_filter_2d_pallas
 from repro.kernels.boxfilter import box_filter_2d_pallas
 from repro.kernels.recover import recover_pallas
-from repro.kernels.atmolight import atmolight_pallas
+from repro.kernels.atmolight import atmolight_pallas, atmolight_topk_pallas
 from repro.kernels.fused import (fused_dehaze_pallas,
                                  fused_transmission_halo_pallas,
                                  fused_transmission_pallas)
@@ -113,28 +113,31 @@ def box_filter_2d(x: jnp.ndarray, radius: int, mode: Mode = "auto") -> jnp.ndarr
 
 
 def masked_min_filter_2d(x: jnp.ndarray, valid: jnp.ndarray, radius: int,
+                         valid_w: jnp.ndarray = None,
                          mode: Mode = "auto") -> jnp.ndarray:
-    """(..., H, W) with (H,) row-validity — the halo-exchange filter."""
+    """(..., H, W) with (H,) row-validity (and optional (W,) column
+    validity, the W-sharded halo path) — the halo-exchange filter."""
     m = resolve_mode(mode)
     if m == "ref":
         from repro.core import spatial
-        return spatial.masked_min_filter_2d(x, valid, radius)
+        return spatial.masked_min_filter_2d(x, valid, radius, valid_w)
     from repro.kernels.dark_channel import masked_min_filter_2d_pallas
     flat, lead = _batched(x, 2)
-    out = masked_min_filter_2d_pallas(flat, valid, radius,
+    out = masked_min_filter_2d_pallas(flat, valid, radius, valid_w,
                                       interpret=(m == "interpret"))
     return out.reshape(lead + out.shape[1:])
 
 
 def masked_box_filter_2d(x: jnp.ndarray, valid: jnp.ndarray, radius: int,
+                         valid_w: jnp.ndarray = None,
                          mode: Mode = "auto") -> jnp.ndarray:
     m = resolve_mode(mode)
     if m == "ref":
         from repro.core import spatial
-        return spatial.masked_box_filter_2d(x, valid, radius)
+        return spatial.masked_box_filter_2d(x, valid, radius, valid_w)
     from repro.kernels.boxfilter import masked_box_filter_2d_pallas
     flat, lead = _batched(x, 2)
-    out = masked_box_filter_2d_pallas(flat, valid, radius,
+    out = masked_box_filter_2d_pallas(flat, valid, radius, valid_w,
                                       interpret=(m == "interpret"))
     return out.reshape(lead + out.shape[1:])
 
@@ -161,13 +164,27 @@ def guided_filter(guide: jnp.ndarray, src: jnp.ndarray, radius: int, eps: float,
 
 def atmospheric_light(img: jnp.ndarray, t_raw: jnp.ndarray, k: int = 1,
                       mode: Mode = "auto") -> jnp.ndarray:
-    """(..., H, W, 3), (..., H, W) -> (..., 3)."""
+    """(..., H, W, 3), (..., H, W) -> (..., 3).
+
+    k=1 is the Eq. 6 argmin-t reduction; k>1 the robust mean-of-top-k
+    (``atmolight_topk_pallas``, an in-VMEM k-row running selection). Both
+    match ``kernels.ref.atmospheric_light`` including tie-breaking.
+    """
     m = resolve_mode(mode)
-    if m == "ref" or k > 1:          # top-k (k>1) stays in XLA by design
+    if m == "ref":
         return _ref.atmospheric_light(img, t_raw, k)
     flat_i, lead = _batched(img, 3)
     flat_t, _ = _batched(t_raw, 2)
-    out = atmolight_pallas(flat_i, flat_t, interpret=(m == "interpret"))
+    if k > 1:
+        tile_h = int(tuning.get_params(
+            "atmolight_topk", flat_t.shape).get("tile_h", 0))
+        out = atmolight_topk_pallas(flat_i, flat_t, k, tile_h=tile_h,
+                                    interpret=(m == "interpret"))
+    else:
+        tile_h = int(tuning.get_params(
+            "atmolight", flat_t.shape).get("tile_h", 0))
+        out = atmolight_pallas(flat_i, flat_t, tile_h=tile_h,
+                               interpret=(m == "interpret"))
     return out.reshape(lead + (3,))
 
 
@@ -201,14 +218,18 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
                  radius: int, omega: float = 0.95, beta: float = 1.0,
                  cap_w: Tuple[float, float, float] = CAP_COEFFS,
                  refine: bool, gf_radius: int, gf_eps: float, t0: float,
-                 gamma: float, period: int, lam: float,
+                 gamma: float, period: int, lam: float, topk: int = 1,
                  frames_per_block: int = 0,
                  mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
     """Whole DCP/CAP chain in one launch: (..., H, W, 3) -> (J, t, a_seq, A, k).
 
+    ``topk`` selects the atmospheric-light candidate estimator: 1 is the
+    Eq. 6 argmin-t pixel, >1 the robust in-VMEM mean-of-top-k.
     ``frames_per_block <= 0`` resolves the tile from the tuning registry's
     per-algorithm bucket (env ``REPRO_TUNE_FUSED_DCP`` /
-    ``REPRO_TUNE_FUSED_CAP`` > ``results/kernel_tuning.json`` > 1).
+    ``REPRO_TUNE_FUSED_CAP`` > ``results/kernel_tuning.json`` > 1); the
+    top-k selection changes the kernel's VMEM/compute profile, so ``topk >
+    1`` resolves from its own ``fused_<algorithm>_topk`` bucket.
     """
     m = resolve_substrate(mode)
     flat, lead = _batched(img, 3)
@@ -218,18 +239,18 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
             flat, flat_ids, A_saved, last_update, initialized,
             algorithm=algorithm, radius=radius, omega=omega, beta=beta,
             cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
-            t0=t0, gamma=gamma, period=period, lam=lam)
+            t0=t0, gamma=gamma, period=period, lam=lam, topk=topk)
     else:
         if frames_per_block <= 0:
+            op = f"fused_{algorithm}" + ("_topk" if topk > 1 else "")
             frames_per_block = int(tuning.get_params(
-                f"fused_{algorithm}", flat.shape[:3]).get(
-                    "frames_per_block", 1))
+                op, flat.shape[:3]).get("frames_per_block", 1))
         j, t, a_seq, a_fin, k_fin = fused_dehaze_pallas(
             flat, flat_ids, A_saved, last_update, initialized,
             algorithm=algorithm, radius=radius, omega=omega, beta=beta,
             cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
             gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam,
-            frames_per_block=frames_per_block,
+            topk=topk, frames_per_block=frames_per_block,
             interpret=(m == "interpret"))
     return (j.reshape(lead + j.shape[1:]), t.reshape(lead + t.shape[1:]),
             a_seq.reshape(lead + (3,)), a_fin, k_fin)
@@ -240,55 +261,70 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                        omega: float = 0.95, beta: float = 1.0,
                        cap_w: Tuple[float, float, float] = CAP_COEFFS,
                        refine: bool, gf_radius: int, gf_eps: float,
+                       topk: int = 1,
                        mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
-    """Fused t-map + argmin-t candidates (the sharded-step stage):
-    (..., H, W, 3) -> (t, t_min (...,), cand_rgb (..., 3))."""
+    """Fused t-map + A candidates (the batch-sharded-step stage):
+    (..., H, W, 3) -> (t, t_min (...,), cand_rgb (..., 3)). The candidate
+    is the argmin-t pixel for ``topk == 1``, the mean of the ``topk``
+    smallest-t pixels otherwise (each frame is whole on its shard, so the
+    mean needs no cross-shard merge)."""
     m = resolve_substrate(mode)
     flat, lead = _batched(img, 3)
     if m == "ref":
         t, t_min, cand = _ref.fused_transmission(
             flat, A_saved, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-            gf_eps=gf_eps)
+            gf_eps=gf_eps, topk=topk)
     else:
         t, t_min, cand = fused_transmission_pallas(
             flat, A_saved, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
-            gf_eps=gf_eps, interpret=(m == "interpret"))
+            gf_eps=gf_eps, topk=topk, interpret=(m == "interpret"))
     return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
             cand.reshape(lead + (3,)))
 
 
 def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
-                            guide_ext: jnp.ndarray, valid: jnp.ndarray, *,
+                            guide_ext: jnp.ndarray, valid: jnp.ndarray,
+                            valid_w: jnp.ndarray = None, *,
                             algorithm: str = "dcp", radius: int,
                             omega: float = 0.95, beta: float = 1.0,
                             refine: bool, gf_radius: int, gf_eps: float,
+                            topk: int = 1, frames_per_block: int = 0,
                             mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
-    """Halo-aware fused t-map stage for the height-sharded pipeline.
+    """Halo-aware fused t-map stage for the spatially-sharded pipeline.
 
-    img: (..., H_loc, W, 3) core block; pre_ext/guide_ext: (..., H_ext, W)
-    halo-extended planes from ``core.spatial.halo_exchange_height``;
-    valid: (H_ext,) row-validity mask. -> (t, t_min, cand_rgb) as
-    ``fused_transmission``. The masked min/box filters run in-VMEM on the
-    Pallas substrates and through ``core.spatial`` on the XLA oracle.
+    img: (..., H_loc, W_loc, 3) core block; pre_ext/guide_ext:
+    (..., H_ext, W_ext) halo-extended planes from the ``core.spatial`` halo
+    exchanges; valid: (H_ext,) row-validity mask; valid_w: optional (W_ext,)
+    column-validity mask (None = no W sharding). Returns ``(t, tk_t
+    (..., k), tk_rgb (..., k, 3), tk_idx (..., k))`` — the shard-local
+    top-k smallest-t candidates ascending in (t, local flat index), ready
+    for the cross-shard lexicographic merge in ``core.pipeline``. The
+    masked min/box filters run in-VMEM on the Pallas substrates and through
+    ``core.spatial`` on the XLA oracle. ``frames_per_block <= 0`` resolves
+    from the ``fused_halo_2d`` tuning bucket (Pallas substrates only).
     """
     m = resolve_substrate(mode)
     flat, lead = _batched(img, 3)
     flat_pre, _ = _batched(pre_ext, 2)
     flat_guide, _ = _batched(guide_ext, 2)
     if m == "ref":
-        t, t_min, cand = _ref.fused_transmission_halo(
-            flat, flat_pre, flat_guide, valid, algorithm=algorithm,
+        t, tk_t, tk_rgb, tk_idx = _ref.fused_transmission_halo(
+            flat, flat_pre, flat_guide, valid, valid_w, algorithm=algorithm,
             radius=radius, omega=omega, beta=beta, refine=refine,
-            gf_radius=gf_radius, gf_eps=gf_eps)
+            gf_radius=gf_radius, gf_eps=gf_eps, topk=topk)
     else:
-        t, t_min, cand = fused_transmission_halo_pallas(
-            flat, flat_pre, flat_guide, valid, algorithm=algorithm,
+        if frames_per_block <= 0:
+            frames_per_block = int(tuning.get_params(
+                "fused_halo_2d", flat.shape[:3]).get("frames_per_block", 1))
+        t, tk_t, tk_rgb, tk_idx = fused_transmission_halo_pallas(
+            flat, flat_pre, flat_guide, valid, valid_w, algorithm=algorithm,
             radius=radius, omega=omega, beta=beta, refine=refine,
-            gf_radius=gf_radius, gf_eps=gf_eps, interpret=(m == "interpret"))
-    return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
-            cand.reshape(lead + (3,)))
+            gf_radius=gf_radius, gf_eps=gf_eps, topk=topk,
+            frames_per_block=frames_per_block, interpret=(m == "interpret"))
+    return (t.reshape(lead + t.shape[1:]), tk_t.reshape(lead + (topk,)),
+            tk_rgb.reshape(lead + (topk, 3)), tk_idx.reshape(lead + (topk,)))
 
 
 def fused_dehaze_dcp(img: jnp.ndarray, frame_ids: jnp.ndarray,

@@ -192,11 +192,14 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                        algorithm: str = "dcp", radius: int,
                        omega: float = 0.95, beta: float = 1.0,
                        cap_w=CAP_COEFFS, refine: bool, gf_radius: int,
-                       gf_eps: float):
+                       gf_eps: float, topk: int = 1):
     """Oracle for ``fused.fused_transmission_pallas``.
 
     (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)): Eq. 3 (DCP) / Eq. 4 (CAP)
-    transmission, guided-filter refinement, per-frame argmin-t candidate.
+    transmission, guided-filter refinement, per-frame atmospheric-light
+    candidate — the argmin-t pixel (Eq. 6) for ``topk == 1``, the mean of
+    the ``topk`` smallest-t pixels (the robust Eq. 5/6 generalization,
+    identical to :func:`atmospheric_light`) otherwise.
     """
     b = img.shape[0]
     x = img.astype(jnp.float32)
@@ -207,7 +210,11 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
     flat_t = t_raw.reshape(b, -1)
     j = jnp.argmin(flat_t, axis=-1)
     t_min = jnp.take_along_axis(flat_t, j[:, None], axis=-1)[:, 0]
-    cand = jnp.take_along_axis(x.reshape(b, -1, 3), j[:, None, None], axis=1)[:, 0]
+    if topk == 1:
+        cand = jnp.take_along_axis(x.reshape(b, -1, 3), j[:, None, None],
+                                   axis=1)[:, 0]
+    else:
+        cand = atmospheric_light(x, t_raw, topk)
     if refine:
         t = jnp.clip(guided_filter(luminance(x), t_raw, gf_radius, gf_eps),
                      0.0, 1.0)
@@ -226,38 +233,51 @@ def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
 
 
 def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
-                            guide_ext: jnp.ndarray, valid: jnp.ndarray, *,
+                            guide_ext: jnp.ndarray, valid: jnp.ndarray,
+                            valid_w: jnp.ndarray = None, *,
                             algorithm: str = "dcp", radius: int,
                             omega: float = 0.95, beta: float = 1.0,
-                            refine: bool, gf_radius: int, gf_eps: float):
+                            refine: bool, gf_radius: int, gf_eps: float,
+                            topk: int = 1):
     """Oracle for ``fused.fused_transmission_halo_pallas``.
 
     Composes the masked XLA filters from ``core.spatial`` on the
     halo-extended (pre-map, guide) planes — exactly the per-stage chain the
-    height-sharded pipeline ran before the fused halo kernel existed.
+    spatially-sharded pipeline ran before the fused halo kernel existed.
+    ``valid``/``valid_w`` are the row/column validity vectors from the halo
+    exchange (``valid_w=None`` means all columns valid, i.e. no W
+    sharding).
+
+    Returns ``(t (B, H_loc, W_loc), tk_t (B, k), tk_rgb (B, k, 3),
+    tk_idx (B, k) int32)``: the refined transmission plus the shard-local
+    top-k smallest-t candidates over the core block, ascending in
+    (t, local flat index) — ready for the cross-shard lexicographic merge
+    in ``core.pipeline``. ``topk == 1`` is the Eq. 6 argmin candidate.
     """
     from repro.core import spatial                 # lazy: spatial imports ref
-    b, h_loc = img.shape[0], img.shape[1]
-    halo = (pre_ext.shape[1] - h_loc) // 2
+    b, h_loc, w_loc = img.shape[0], img.shape[1], img.shape[2]
+    halo_h = (pre_ext.shape[1] - h_loc) // 2
+    halo_w = (pre_ext.shape[2] - w_loc) // 2
     dark = spatial.masked_min_filter_2d(pre_ext.astype(jnp.float32), valid,
-                                        radius)
+                                        radius, valid_w)
     t_raw_ext = tmap_from_dark(dark, algorithm, omega, beta)
-    core = slice(halo, halo + h_loc)
-    t_raw = t_raw_ext[:, core]
+    core_h = slice(halo_h, halo_h + h_loc)
+    core_w = slice(halo_w, halo_w + w_loc)
+    t_raw = t_raw_ext[:, core_h, core_w]
     if refine:
         t_ext = spatial.masked_guided_filter(guide_ext.astype(jnp.float32),
                                              t_raw_ext, valid, gf_radius,
-                                             gf_eps)
-        t = jnp.clip(t_ext[:, core], 0.0, 1.0)
+                                             gf_eps, valid_w)
+        t = jnp.clip(t_ext[:, core_h, core_w], 0.0, 1.0)
     else:
         t = t_raw
     flat_t = t_raw.reshape(b, -1)
-    j = jnp.argmin(flat_t, axis=-1)
-    t_min = jnp.take_along_axis(flat_t, j[:, None], axis=-1)[:, 0]
-    cand = jnp.take_along_axis(
-        img.astype(jnp.float32).reshape(b, -1, 3), j[:, None, None],
-        axis=1)[:, 0]
-    return t.astype(img.dtype), t_min, cand.astype(img.dtype)
+    _, idx = lax.top_k(-flat_t, topk)              # k smallest, ties by idx
+    tk_t = jnp.take_along_axis(flat_t, idx, axis=-1)
+    tk_rgb = jnp.take_along_axis(img.astype(jnp.float32).reshape(b, -1, 3),
+                                 idx[..., None], axis=1)
+    return (t.astype(img.dtype), tk_t, tk_rgb.astype(img.dtype),
+            idx.astype(jnp.int32))
 
 
 def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
@@ -266,17 +286,18 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
                  radius: int, omega: float = 0.95, beta: float = 1.0,
                  cap_w=CAP_COEFFS, refine: bool, gf_radius: int,
                  gf_eps: float, t0: float, gamma: float, period: int,
-                 lam: float):
+                 lam: float, topk: int = 1):
     """Oracle for ``fused.fused_dehaze_pallas``: (J, t, a_seq, A_fin, k_fin).
 
     Composes the per-stage oracles plus the Eq. 9 EMA recurrence (lax.scan)
     — the sequential scan the megakernel realizes via its grid carry.
+    ``topk > 1`` feeds the EMA the robust mean-of-top-k candidate.
     """
     x = img.astype(jnp.float32)
     t, _, cand = fused_transmission(
         x, A_saved, algorithm=algorithm, radius=radius, omega=omega,
         beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps)
+        gf_eps=gf_eps, topk=topk)
 
     def step(carry, inp):
         A_prev, k, inited = carry

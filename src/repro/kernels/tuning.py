@@ -31,7 +31,16 @@ DEFAULTS: Dict[str, Dict[str, Any]] = {
     # different VMEM/FLOP profile, so its sweet spot is tuned separately.
     "fused_dcp": {"frames_per_block": 1},
     "fused_cap": {"frames_per_block": 1},
+    # Robust top-k A estimator (k > 1): the in-VMEM k-step running
+    # selection adds compute per frame, so its tile is tuned apart from
+    # the argmin (k=1) kernels.
+    "fused_dcp_topk": {"frames_per_block": 1},
+    "fused_cap_topk": {"frames_per_block": 1},
+    # Spatially-sharded (H and/or W) halo megakernel: per-shard blocks are
+    # smaller than full frames, so more of them fit one grid step.
+    "fused_halo_2d": {"frames_per_block": 1},
     "atmolight": {"tile_h": 0},          # 0 = whole frame per grid step
+    "atmolight_topk": {"tile_h": 0},     # k-row grid-carry fold tile
 }
 
 _ENV_PATH = "REPRO_KERNEL_TUNING"
@@ -132,12 +141,15 @@ def autotune(op: str, shape: Iterable[int],
 
 def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
                    candidates=(1, 2, 4), iters: int = 3, persist: bool = True,
-                   algorithms=("dcp", "cap")) -> Dict[str, Any]:
-    """Sweep ``frames_per_block`` for the fused megakernels, per algorithm.
+                   algorithms=("dcp", "cap"),
+                   topks=(1, 4)) -> Dict[str, Any]:
+    """Sweep ``frames_per_block`` for the fused megakernels, per algorithm
+    and per A-estimator (argmin vs robust top-k).
 
     Uses the dispatch layer, so it times whatever substrate the current
     backend resolves to (Pallas on TPU, the XLA oracle on CPU). Each
-    algorithm persists into its own ``fused_<algorithm>`` bucket.
+    (algorithm, estimator) pair persists into its own bucket:
+    ``fused_<algorithm>`` for topk=1, ``fused_<algorithm>_topk`` for k>1.
     """
     import jax.numpy as jnp
     import numpy as np
@@ -146,32 +158,68 @@ def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
 
     table: Dict[str, Any] = {}
     for algorithm in algorithms:
-        op = f"fused_{algorithm}"
-        table[op] = {}
-        for b, h, w in shapes:
-            r = np.random.default_rng(0)
-            img = jnp.asarray(r.random((b, h, w, 3), np.float32))
-            ids = jnp.arange(b, dtype=jnp.int32)
-            A = jnp.ones((3,), jnp.float32)
-            k0 = jnp.asarray(-(2 ** 30), jnp.int32)
-            init = jnp.asarray(False)
+        for topk in topks:
+            op = f"fused_{algorithm}" + ("_topk" if topk > 1 else "")
+            table.setdefault(op, {})
+            for b, h, w in shapes:
+                r = np.random.default_rng(0)
+                img = jnp.asarray(r.random((b, h, w, 3), np.float32))
+                ids = jnp.arange(b, dtype=jnp.int32)
+                A = jnp.ones((3,), jnp.float32)
+                k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+                init = jnp.asarray(False)
 
-            def build(params):
-                def run():
-                    return ops.fused_dehaze(
-                        img, ids, A, k0, init, algorithm=algorithm, radius=7,
-                        omega=0.95, refine=True, gf_radius=8, gf_eps=1e-3,
-                        t0=0.1, gamma=1.0, period=8, lam=0.05,
-                        frames_per_block=params["frames_per_block"])
-                return run
+                def build(params):
+                    def run():
+                        return ops.fused_dehaze(
+                            img, ids, A, k0, init, algorithm=algorithm,
+                            radius=7, omega=0.95, refine=True, gf_radius=8,
+                            gf_eps=1e-3, t0=0.1, gamma=1.0, period=8,
+                            lam=0.05, topk=topk,
+                            frames_per_block=params["frames_per_block"])
+                    return run
 
-            table[op][shape_bucket((b, h, w))] = autotune(
-                op, (b, h, w),
-                [{"frames_per_block": f} for f in candidates],
-                build, iters=iters, persist=persist)
+                table[op][shape_bucket((b, h, w))] = autotune(
+                    op, (b, h, w),
+                    [{"frames_per_block": f} for f in candidates],
+                    build, iters=iters, persist=persist)
+    return table
+
+
+def autotune_fused_halo(shapes=((4, 24, 64), (2, 60, 160)), halo=23,
+                        candidates=(1, 2, 4), iters: int = 3,
+                        persist: bool = True) -> Dict[str, Any]:
+    """Sweep ``frames_per_block`` for the spatially-sharded halo megakernel
+    (``fused_halo_2d`` bucket) on representative per-shard block shapes."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    table: Dict[str, Any] = {"fused_halo_2d": {}}
+    for b, h_loc, w in shapes:
+        r = np.random.default_rng(0)
+        img = jnp.asarray(r.random((b, h_loc, w, 3), np.float32))
+        pre = jnp.asarray(r.random((b, h_loc + 2 * halo, w), np.float32))
+        guide = jnp.asarray(r.random((b, h_loc + 2 * halo, w), np.float32))
+        valid = jnp.arange(h_loc + 2 * halo) >= halo      # top-edge shard
+
+        def build(params):
+            def run():
+                return ops.fused_transmission_halo(
+                    img, pre, guide, valid, algorithm="dcp", radius=7,
+                    omega=0.95, refine=True, gf_radius=8, gf_eps=1e-3,
+                    frames_per_block=params["frames_per_block"])
+            return run
+
+        table["fused_halo_2d"][shape_bucket((b, h_loc, w))] = autotune(
+            "fused_halo_2d", (b, h_loc, w),
+            [{"frames_per_block": f} for f in candidates],
+            build, iters=iters, persist=persist)
     return table
 
 
 if __name__ == "__main__":
     out = autotune_fused()
+    out.update(autotune_fused_halo())
     print(json.dumps({**out, "path": str(table_path())}, indent=2))

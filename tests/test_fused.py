@@ -234,6 +234,66 @@ def test_fused_halo_parity(mask, algorithm, refine):
         assert err <= 1e-5, err
 
 
+def _halo_inputs_2d(h_loc=14, w_loc=18, halo=5, b=2, seed=47):
+    """W-extended variant of ``_halo_inputs`` (2-D shard of an H x W mesh),
+    again with garbage in the invalid rows *and* columns."""
+    r = np.random.default_rng(seed)
+    img = jnp.asarray(r.random((b, h_loc, w_loc, 3), np.float32))
+    pre_ext = jnp.asarray(
+        r.random((b, h_loc + 2 * halo, w_loc + 2 * halo), np.float32))
+    guide_ext = jnp.asarray(
+        r.random((b, h_loc + 2 * halo, w_loc + 2 * halo), np.float32))
+    return img, pre_ext, guide_ext, halo
+
+
+W_MASKS = {
+    "interior": lambda n, halo: jnp.ones((n,), bool),
+    "left-edge": lambda n, halo: jnp.arange(n) >= halo,
+    "right-edge": lambda n, halo: jnp.arange(n) < n - halo,
+}
+
+
+@pytest.mark.parametrize("hmask", sorted(MASKS))
+@pytest.mark.parametrize("wmask", sorted(W_MASKS))
+@pytest.mark.parametrize("topk", [1, 4])
+def test_fused_halo_parity_2d(hmask, wmask, topk):
+    """2-D (H x W) shard masking: the halo kernel with row *and* column
+    validity — including the corner shards of a 2-D mesh, where both masks
+    clip — must match the masked XLA chain oracle, for the argmin and the
+    robust top-k candidate estimators."""
+    img, pre_ext, guide_ext, halo = _halo_inputs_2d()
+    valid_h = MASKS[hmask](pre_ext.shape[1], halo)
+    valid_w = W_MASKS[wmask](pre_ext.shape[2], halo)
+    kw = dict(HALO_KW, algorithm="dcp", refine=True, topk=topk)
+    got = fused_transmission_halo_pallas(img, pre_ext, guide_ext, valid_h,
+                                         valid_w, interpret=True, **kw)
+    want = ref.fused_transmission_halo(img, pre_ext, guide_ext, valid_h,
+                                       valid_w, **kw)
+    for g, w in zip(got, want):
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(want[3]))
+
+
+def test_fused_halo_frames_per_block():
+    """Halo-kernel tiling (``fused_halo_2d`` bucket): multiple frames per
+    grid step must be output-identical to one frame per step."""
+    img, pre_ext, guide_ext, halo = _halo_inputs_2d(b=4)
+    valid_h = jnp.arange(pre_ext.shape[1]) >= halo
+    valid_w = jnp.arange(pre_ext.shape[2]) < pre_ext.shape[2] - halo
+    kw = dict(HALO_KW, algorithm="cap", refine=True, topk=2)
+    got = fused_transmission_halo_pallas(img, pre_ext, guide_ext, valid_h,
+                                         valid_w, frames_per_block=2,
+                                         interpret=True, **kw)
+    want = ref.fused_transmission_halo(img, pre_ext, guide_ext, valid_h,
+                                       valid_w, **kw)
+    for g, w in zip(got, want):
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+
+
 @pytest.mark.parametrize("algorithm", ["dcp", "cap"])
 def test_fused_halo_stitches_to_full_frame(algorithm):
     """Two hand-built shards (top edge + bottom edge) run through the halo
@@ -263,11 +323,11 @@ def test_fused_halo_stitches_to_full_frame(algorithm):
             pre_ext = jnp.concatenate([pre[:, lo:], junk], axis=1)
             guide_ext = jnp.concatenate([guide[:, lo:], junk], axis=1)
             valid = jnp.arange(h_loc + 2 * halo) < h_loc + halo
-        t, t_min, rgb = fused_transmission_halo_pallas(
+        t, tk_t, tk_rgb, _ = fused_transmission_halo_pallas(
             img[:, rows], pre_ext, guide_ext, valid, interpret=True, **kw)
         t_parts.append(t)
-        tmins.append(t_min)
-        rgbs.append(rgb)
+        tmins.append(tk_t[:, 0])
+        rgbs.append(tk_rgb[:, 0])
 
     t_full, tmin_full, rgb_full = ref.fused_transmission(
         img, A, algorithm=algorithm, radius=kw["radius"], omega=kw["omega"],
@@ -327,23 +387,66 @@ def test_pipeline_fused_matches_ref_chain(monkeypatch, substrate, algorithm):
 
 
 def test_supports_fused_coverage():
-    """CAP is fused-covered now; top-k and DCP recompute still fall back
-    (kernel_mode="fused" must keep working through the per-stage chain)."""
+    """Top-k (any k) is fused-covered now alongside DCP and CAP; the only
+    remaining fallback is DCP + recompute (kernel_mode="fused" must keep
+    working through the per-stage chain there)."""
     from repro.core import algorithms as alg
     assert alg.supports_fused(DehazeConfig(algorithm="cap"))
     assert alg.supports_fused(DehazeConfig(algorithm="dcp"))
-    assert not alg.supports_fused(DehazeConfig(topk=8))
+    assert alg.supports_fused(DehazeConfig(topk=8))
+    assert alg.supports_fused(DehazeConfig(algorithm="cap", topk=8))
     assert not alg.supports_fused(
         DehazeConfig(algorithm="dcp", recompute_t_with_final_a=True))
     # CAP's transmission is A-free: the recompute flag is a chain no-op
     # there and must not knock it off the fused path.
     assert alg.supports_fused(
         DehazeConfig(algorithm="cap", recompute_t_with_final_a=True))
+    # The remaining fallback config still runs through the per-stage chain.
     J, _ = _scene()
     ids = jnp.arange(4, dtype=jnp.int32)
-    out = make_dehaze_step(DehazeConfig(topk=8, kernel_mode="fused"))(
+    out = make_dehaze_step(DehazeConfig(algorithm="dcp", kernel_mode="fused",
+                                        recompute_t_with_final_a=True))(
         J, ids, init_atmo_state())
     assert not bool(jnp.isnan(out.frames).any())
+
+
+@pytest.mark.parametrize("algorithm", ["dcp", "cap"])
+def test_fused_parity_topk(algorithm):
+    """Robust top-k (k=4) megakernel: the in-VMEM running selection must
+    feed the EMA the same mean-of-top-k candidate as the oracle."""
+    kw = dict(FUSED_KW, algorithm=algorithm, topk=4)
+    img = _img((4, 16, 16), seed=53)
+    for warm in (False, True):
+        state = _state(warm)
+        got = _run(img, state, "interpret", **kw)
+        want = _run(img, state, "ref", **kw)
+        for g, w in zip(got[:3], want[:3]):
+            err = np.max(np.abs(np.asarray(g, np.float32)
+                                - np.asarray(w, np.float32)))
+            assert err <= 1e-5, err
+        np.testing.assert_allclose(np.asarray(got[3]), np.asarray(want[3]),
+                                   atol=1e-5)
+        assert int(got[4]) == int(want[4])
+
+
+def test_fused_topk_registry_bucket(monkeypatch, tmp_path):
+    """topk > 1 resolves its tile from the ``fused_<alg>_topk`` bucket."""
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
+    assert tuning.get_params("fused_dcp_topk", (4, 16, 16)) == \
+        {"frames_per_block": 1}
+    monkeypatch.setenv("REPRO_TUNE_FUSED_DCP_TOPK", '{"frames_per_block": 2}')
+    assert tuning.get_params("fused_dcp_topk", (4, 16, 16)) == \
+        {"frames_per_block": 2}
+    # The argmin bucket is unaffected by the topk override.
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 1}
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    img = _img((4, 16, 16), seed=19)
+    kw = dict(FUSED_KW, topk=4)
+    got = _run(img, _state(), "auto", **kw)
+    want = _run(img, _state(), "ref", **kw)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-5)
 
 
 def test_sharded_step_selects_fused():

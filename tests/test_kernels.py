@@ -162,3 +162,115 @@ def test_box_filter_property(h, w, r, seed):
     i, j = np.random.default_rng(seed).integers(0, (h, w))
     win = xn[max(0, i - r):i + r + 1, max(0, j - r):j + r + 1]
     np.testing.assert_allclose(got[i, j], win.mean(), rtol=1e-5, atol=1e-5)
+
+
+# --- top-k atmospheric-light selector (kernels.atmolight.topk_select) ------
+
+def _distinct_tmap(h, w, seed):
+    """A transmission map with pairwise-distinct values (a scaled
+    permutation of arange), so top-k selection is order-unambiguous."""
+    perm = np.random.default_rng(seed).permutation(h * w)
+    return jnp.asarray(perm.reshape(1, h, w).astype(np.float32) / (h * w))
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 24), w=st.integers(4, 24), k=st.integers(1, 16),
+       seed=st.integers(0, 2 ** 16))
+def test_topk_selector_permutation_invariant(h, w, k, seed):
+    """Permuting the pixels (jointly in t and I) must not change the
+    mean-of-top-k A: the selected (t, rgb) multiset is permutation-
+    invariant when the t values are distinct."""
+    img = _img((1, h, w), jnp.float32, seed)
+    t = _distinct_tmap(h, w, seed)
+    perm = np.random.default_rng(seed + 1).permutation(h * w)
+    img_p = jnp.asarray(np.asarray(img).reshape(1, -1, 3)[:, perm]
+                        ).reshape(1, h, w, 3)
+    t_p = jnp.asarray(np.asarray(t).reshape(1, -1)[:, perm]).reshape(1, h, w)
+    a = ops.atmospheric_light(img, t, k=k, mode="interpret")
+    a_p = ops.atmospheric_light(img_p, t_p, k=k, mode="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_p), atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 24), w=st.integers(4, 24),
+       seed=st.integers(0, 2 ** 16))
+def test_topk_selector_k1_reduces_to_argmin(h, w, seed):
+    """k=1 must be the Eq. 6 argmin-t pixel — identical to both the
+    dedicated argmin kernel and the direct gather, including ties (ties
+    resolve to the lowest flat index, so a tie-heavy quantized map is used
+    half the time)."""
+    img = _img((1, h, w), jnp.float32, seed)
+    t = _map((1, h, w), jnp.float32, seed + 1)
+    if seed % 2:
+        t = jnp.round(t * 4) / 4                      # force ties
+    from repro.kernels.atmolight import atmolight_topk_pallas
+    got = atmolight_topk_pallas(img, t, k=1, interpret=True)
+    want = ops.atmospheric_light(img, t, k=1, mode="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+    j = int(np.argmin(np.asarray(t).reshape(-1)))
+    np.testing.assert_allclose(np.asarray(got)[0],
+                               np.asarray(img).reshape(-1, 3)[j], atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 16), w=st.integers(4, 16),
+       seed=st.integers(0, 2 ** 16))
+def test_topk_selector_full_k_is_global_mean(h, w, seed):
+    """k = H*W selects every pixel: A must equal the full image mean."""
+    img = _img((1, h, w), jnp.float32, seed)
+    t = _map((1, h, w), jnp.float32, seed + 1)
+    got = ops.atmospheric_light(img, t, k=h * w, mode="interpret")
+    want = np.asarray(img).reshape(-1, 3).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(got)[0], want, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 24), w=st.integers(4, 24), k=st.integers(2, 8),
+       tile=st.integers(1, 6), seed=st.integers(0, 2 ** 16))
+def test_topk_selector_tiled_fold_matches_oracle(h, w, k, tile, seed):
+    """The k-row running selection folded across row tiles (the atmolight
+    grid carry) must equal the whole-frame lax.top_k oracle, ties included."""
+    img = _img((1, h, w), jnp.float32, seed)
+    t = jnp.round(_map((1, h, w), jnp.float32, seed + 1) * 8) / 8
+    from repro.kernels.atmolight import atmolight_topk_pallas
+    got = atmolight_topk_pallas(img, t, k=k, tile_h=tile, interpret=True)
+    want = ref.atmospheric_light(img, t, k=k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# --- 2-D (H x W) masked box mean (kernels.boxfilter._masked_box_mean) ------
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 24), w=st.integers(4, 24), r=st.integers(0, 6),
+       seed=st.integers(0, 2 ** 16))
+def test_masked_box_mean_all_valid_equals_unmasked(h, w, r, seed):
+    """A mask of all-valid rows AND columns must reproduce the unmasked
+    kernel exactly — the column-count fix must not perturb the interior."""
+    x = _map((1, h, w), jnp.float32, seed)
+    got = ops.masked_box_filter_2d(x, jnp.ones((h,), bool), r,
+                                   jnp.ones((w,), bool), mode="interpret")
+    want = ref.box_filter_2d(x, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    got = ops.masked_min_filter_2d(x, jnp.ones((h,), bool), r,
+                                   jnp.ones((w,), bool), mode="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.min_filter_2d(x, r)), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(6, 24), w=st.integers(6, 24), r=st.integers(1, 5),
+       lo_h=st.integers(0, 3), hi_h=st.integers(0, 3),
+       lo_w=st.integers(0, 3), hi_w=st.integers(0, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_masked_box_mean_2d_matches_spatial_reference(h, w, r, lo_h, hi_h,
+                                                      lo_w, hi_w, seed):
+    """Random separable edge masks (the halo-exchange shapes): the in-VMEM
+    separable row x column divisor must match the reduce_window reference
+    that sums the full 2-D mask."""
+    x = _map((1, h, w), jnp.float32, seed)
+    valid_h = (jnp.arange(h) >= lo_h) & (jnp.arange(h) < h - hi_h)
+    valid_w = (jnp.arange(w) >= lo_w) & (jnp.arange(w) < w - hi_w)
+    from repro.core import spatial
+    got = ops.masked_box_filter_2d(x, valid_h, r, valid_w, mode="interpret")
+    want = spatial.masked_box_filter_2d(x, valid_h, r, valid_w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

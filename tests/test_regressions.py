@@ -187,6 +187,58 @@ def test_serve_chunked_with_padded_tails_matches_unchunked():
     assert srv.store.cursor("default") == 12
 
 
+# --- supports_fused must cover the full production config grid ---------------
+
+def test_supports_fused_production_grid():
+    """Regression gate for the fused-coverage contract: ``supports_fused``
+    used to gate on ``topk == 1`` (and the halo kernel on height-only
+    sharding), silently bouncing the production configs — robust top-k A
+    estimation, W-sharded high-res frames — to the seven-launch per-stage
+    chain. It must now return True for every serving config; if a future
+    kernel change reintroduces a gate, this fails loudly instead of
+    production quietly losing the megakernel.
+    """
+    import itertools
+
+    from repro.core import DehazeConfig
+    from repro.core import algorithms as alg
+
+    grid = itertools.product(
+        ("dcp", "cap"),                    # algorithm
+        (1, 4, 32),                        # topk: Eq. 6 and robust top-k
+        ("float32", "bfloat16"),           # serving dtypes
+        (False, True),                     # halo_packed (sharded perf lever)
+        ("float32", "bfloat16"),           # halo_dtype
+        (1, 8),                            # update_period
+    )
+    for algorithm, topk, dtype, packed, hdt, period in grid:
+        cfg = DehazeConfig(algorithm=algorithm, topk=topk, dtype=dtype,
+                           halo_packed=packed, halo_dtype=hdt,
+                           update_period=period, kernel_mode="fused")
+        assert alg.supports_fused(cfg), (algorithm, topk, dtype, packed,
+                                         hdt, period)
+    # The one documented fallback: DCP's recompute-with-final-A second
+    # transmission pass is inherently two-stage.
+    assert not alg.supports_fused(
+        DehazeConfig(algorithm="dcp", recompute_t_with_final_a=True))
+
+
+def test_supports_fused_docs_match_behavior():
+    """The docstring/config comment used to still describe the retired
+    ``topk == 1`` gate; keep the prose in sync with the predicate."""
+    import inspect
+
+    from repro.core import algorithms as alg
+    from repro.core import config as cfg_mod
+
+    doc = inspect.getdoc(alg.supports_fused)
+    assert "topk == 1" not in doc and "k=1) estimator" not in doc
+    assert "top-k" in doc                 # coverage is called out explicitly
+    src = inspect.getsource(cfg_mod)
+    assert "top-k / recompute configs fall" not in src
+    assert "any topk" in src
+
+
 # --- frames_per_block largest-divisor degradation ----------------------------
 
 @pytest.mark.parametrize("batch,requested,expected", [
