@@ -68,6 +68,8 @@ def rows() -> List[Tuple[str, float, str]]:
         out.extend(_fused_topk_rows(img, tag))
         out.extend(_sharded_halo_rows(img, tag))
         out.extend(_sharded_halo_w_rows(img, tag))
+    for n_lanes in (4, 16):
+        out.extend(_multi_lane_rows(n_lanes))
     return out
 
 
@@ -264,6 +266,73 @@ def _sharded_halo_w_rows(img: jnp.ndarray, tag: str, n_w: int = 2):
         (f"kernels/sharded_t_staged_nw{n_w}/{tag}", t_staged * 1e6 / b, ""),
         (f"kernels/sharded_t_fused_nw{n_w}/{tag}", t_fused * 1e6 / b,
          f"speedup_vs_staged={t_staged / t_fused:.2f}x"),
+    ]
+
+
+def _multi_lane_rows(n_lanes: int):
+    """Multi-stream tick: L lanes through the staged-vmapped chain, the
+    vmapped fused megakernel, and the lane-native megakernel (the lane
+    axis folded into the pallas grid).
+
+    µs are per real frame per tick (one lane is all-padding, the typical
+    partially occupied fleet). The lane-native row's derived column also
+    reports the per-tick ``pallas_call`` launch count from the traced
+    program — 1, vs L for per-lane kernel dispatch — the launch-amortization
+    the refactor exists for (wall-clock on this CPU runner measures the
+    XLA substrate; the launch counts are substrate-independent).
+    """
+    from repro.core import (DehazeConfig, init_atmo_state_lanes, lane_carry,
+                            make_multi_stream_step)
+    from repro.kernels import ops
+
+    b, h, w = (2, 32, 40) if os.environ.get("REPRO_BENCH_SMOKE") \
+        else (2, 120, 160)
+    tag = f"{n_lanes}x{b}x{h}x{w}"
+    r = np.random.default_rng(0)
+    frames = jnp.asarray(r.random((n_lanes, b, h, w, 3), np.float32))
+    ids = jnp.stack([jnp.arange(b, dtype=jnp.int32)] * (n_lanes - 1)
+                    + [jnp.full((b,), -1, jnp.int32)])
+    packed = init_atmo_state_lanes(n_lanes)
+    n_real = (n_lanes - 1) * b
+
+    staged_cfg = DehazeConfig(kernel_mode="ref", update_period=8)
+    fused_cfg = DehazeConfig(kernel_mode="fused", update_period=8)
+    staged = jax.jit(make_multi_stream_step(staged_cfg, lane_native=False))
+    vmapped = jax.jit(make_multi_stream_step(fused_cfg, lane_native=False))
+    lane_native = jax.jit(make_multi_stream_step(fused_cfg, lane_native=True))
+
+    def timed(step):
+        return _timeit(lambda f: step(f, ids, packed).frames, frames)
+
+    t_staged = timed(staged)
+    t_vmap = timed(vmapped)
+    t_lane = timed(lane_native)
+
+    # Launch counts are counted on the traced program with the kernels
+    # forced to the (interpretable) Pallas substrate, per-lane dispatch vs
+    # the lane-native grid — tracing only, nothing executes.
+    kw = dict(radius=7, omega=0.95, refine=True, gf_radius=20, gf_eps=1e-3,
+              t0=0.1, gamma=1.0, period=8, lam=0.05)
+    A0 = jnp.ones((3,), jnp.float32)
+    k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+    init = jnp.asarray(False)
+    carry_f, carry_i = lane_carry(packed)
+    n_per_lane = ops.pallas_launch_count(
+        lambda f: [ops.fused_dehaze(f[l], ids[l], A0, k0, init,
+                                    mode="interpret", **kw)[0]
+                   for l in range(n_lanes)], frames)
+    n_lane_native = ops.pallas_launch_count(
+        lambda f: ops.fused_dehaze_lanes(f, ids, carry_f, carry_i,
+                                         mode="interpret", **kw)[0], frames)
+    return [
+        (f"kernels/multi_staged_L{n_lanes}/{tag}", t_staged * 1e6 / n_real,
+         ""),
+        (f"kernels/multi_fused_vmap_L{n_lanes}/{tag}", t_vmap * 1e6 / n_real,
+         f"speedup_vs_staged={t_staged / t_vmap:.2f}x"),
+        (f"kernels/fused_lanes_L{n_lanes}/{tag}", t_lane * 1e6 / n_real,
+         f"speedup_vs_staged={t_staged / t_lane:.2f}x"
+         f";launches_per_tick={n_lane_native}"
+         f";per_lane_dispatch_launches={n_per_lane}"),
     ]
 
 

@@ -11,16 +11,19 @@ from repro.core.config import DehazeConfig
 from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
                                   ema_scan_lanes, get_lane_state,
                                   init_atmo_state, init_atmo_state_lanes,
-                                  pack_atmo_states, set_lane_state,
+                                  lane_carry, pack_atmo_states,
+                                  set_lane_state, state_from_lane_carry,
                                   unpack_atmo_states)
 from repro.core.pipeline import (DehazeOutput, make_dehaze_step,
                                  make_multi_stream_step,
-                                 make_sharded_dehaze_step)
+                                 make_sharded_dehaze_step,
+                                 resolve_lane_native)
 
 __all__ = [
     "DehazeConfig", "AtmoState", "ema_scan", "ema_scan_associative",
     "ema_scan_lanes", "init_atmo_state", "init_atmo_state_lanes",
-    "pack_atmo_states", "unpack_atmo_states", "get_lane_state",
-    "set_lane_state", "DehazeOutput", "make_dehaze_step",
-    "make_multi_stream_step", "make_sharded_dehaze_step",
+    "lane_carry", "pack_atmo_states", "unpack_atmo_states",
+    "state_from_lane_carry", "get_lane_state", "set_lane_state",
+    "DehazeOutput", "make_dehaze_step", "make_multi_stream_step",
+    "make_sharded_dehaze_step", "resolve_lane_native",
 ]

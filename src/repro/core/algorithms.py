@@ -168,6 +168,31 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
     return J, t, a_seq, new_state
 
 
+def fused_dehaze_lanes(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
+                       cfg: DehazeConfig):
+    """Lane-native fused path: run components 1-3 + the §3.3 EMA for L
+    independent streams in ONE kernel launch.
+
+    ``frames``: (L, B, H, W, 3); ``frame_ids``: (L, B); ``state``: a
+    lane-batched ``AtmoState`` (``normalize.pack_atmo_states``). The
+    packed state feeds the kernel's per-lane carry rows through
+    ``normalize.lane_carry``; per lane, outputs and the returned state
+    match ``fused_dehaze`` on that lane alone — padding lanes (all ids
+    < 0) pass their state through untouched, exactly as under
+    ``jax.vmap``.
+    """
+    from repro.core.normalize import lane_carry, state_from_lane_carry
+    carry_f, carry_i = lane_carry(state)
+    J, t, a_seq, cf, ci = ops.fused_dehaze_lanes(
+        frames, frame_ids, carry_f, carry_i,
+        algorithm=cfg.algorithm, radius=cfg.patch_radius, omega=cfg.omega,
+        beta=cfg.beta, cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2),
+        refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
+        t0=cfg.t0, gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
+        topk=cfg.topk, mode=cfg.kernel_mode)
+    return J, t, a_seq, state_from_lane_carry(cf, ci)
+
+
 def fused_transmission(frames: jnp.ndarray, a_saved: jnp.ndarray,
                        cfg: DehazeConfig):
     """Fused t-map + A-candidate stage for the batch-sharded step."""

@@ -32,7 +32,11 @@ stack every leaf with ``pack_atmo_states`` and the result is an AtmoState
 with ``A (L, 3) / last_update (L,) / initialized (L,)`` that vmaps over
 lane 0. Padded (unoccupied) lanes carry all-padding frame ids, so the
 per-frame mask above doubles as the lane-validity mask: a dead lane's
-state rides through every step bit-unchanged.
+state rides through every step bit-unchanged. ``lane_carry`` /
+``state_from_lane_carry`` convert between this pytree and the
+``(L, 3)``/``(L, 2)`` carry-row layout the lane-native megakernel keeps
+in VMEM scratch, so the serving runtime's packed state feeds the kernel
+grid directly.
 """
 from __future__ import annotations
 
@@ -195,6 +199,27 @@ def set_lane_state(packed: AtmoState, lane: int, state: AtmoState) -> AtmoState:
     a new stream takes over a free/evicted lane)."""
     return jax.tree_util.tree_map(
         lambda p, s: p.at[lane].set(jnp.asarray(s, p.dtype)), packed, state)
+
+
+def lane_carry(state: AtmoState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Lane-batched AtmoState -> the lane-native megakernel's carry layout.
+
+    Returns ``(carry_f (L, 3) float32, carry_i (L, 2) int32)`` — row
+    ``l`` is lane ``l``'s (A,) and (last_update, initialized). This is
+    exactly the per-lane scratch-row layout
+    ``kernels.fused.fused_dehaze_lanes_pallas`` carries across its grid,
+    so the packed state feeds the kernel with no per-lane unstacking."""
+    return (state.A.astype(jnp.float32),
+            jnp.stack([state.last_update.astype(jnp.int32),
+                       state.initialized.astype(jnp.int32)], axis=-1))
+
+
+def state_from_lane_carry(carry_f: jnp.ndarray,
+                          carry_i: jnp.ndarray) -> AtmoState:
+    """Inverse of :func:`lane_carry`: kernel carry rows -> lane-batched
+    AtmoState."""
+    return AtmoState(A=carry_f, last_update=carry_i[..., 0],
+                     initialized=carry_i[..., 1].astype(bool))
 
 
 def ema_scan_lanes(a_cand: jnp.ndarray, frame_ids: jnp.ndarray,

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -87,7 +88,40 @@ def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
 # Multi-stream (lane-batched) step — N videos in one compiled program
 # ---------------------------------------------------------------------------
 
-def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True):
+def resolve_lane_native(cfg: DehazeConfig) -> bool:
+    """Should the multi-stream step use the lane-native megakernel?
+
+    Default: yes whenever the fused megakernel covers the config
+    (``kernel_mode == "fused"`` and ``algorithms.supports_fused``) — the
+    lane axis then folds into the pallas grid and L streams cost one
+    launch. Env ``REPRO_LANE_NATIVE`` overrides: ``0`` forces the vmapped
+    path (A/B benchmarking, bisection), ``1`` forces lane-native and
+    *raises* if the config cannot take it — CI uses this to guarantee the
+    smoke run exercised the lane-native path rather than silently falling
+    back.
+    """
+    cfg = cfg.validate()
+    fused_ok = cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
+    env = os.environ.get("REPRO_LANE_NATIVE", "")
+    if env not in ("", "0", "1"):
+        raise ValueError(
+            f"REPRO_LANE_NATIVE={env!r} is not a valid override; expected "
+            "'0' (force vmap), '1' (force lane-native) or unset")
+    if env == "1":
+        if not fused_ok:
+            raise ValueError(
+                "REPRO_LANE_NATIVE=1 requires kernel_mode='fused' and a "
+                "config the megakernel covers (algorithms.supports_fused); "
+                f"got kernel_mode={cfg.kernel_mode!r}, "
+                f"algorithm={cfg.algorithm!r}")
+        return True
+    if env == "0":
+        return False
+    return fused_ok
+
+
+def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True,
+                           lane_native: Optional[bool] = None):
     """Returns step(frames (L, B, H, W, 3), frame_ids (L, B), state) ->
     DehazeOutput with a leading lane axis on every field.
 
@@ -95,18 +129,41 @@ def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True):
     multiple videos" — realized as *continuous batching*: L independent
     streams ride one fixed-shape device batch, each lane carrying its own
     causal A trajectory (the state is a lane-batched ``AtmoState``, see
-    ``normalize.pack_atmo_states``). The single-stream component chain is
-    vmapped over the lane axis, so the staged path *and* the fused
-    megakernel path (gated by ``algorithms.supports_fused``, exactly as in
-    ``make_dehaze_step``) both compile to one program for all lanes.
+    ``normalize.pack_atmo_states``).
 
-    Lane semantics: per-lane outputs are bit-identical to running
-    ``make_dehaze_step`` on that lane's frames alone — vmap adds a batch
-    axis, it does not reorder any within-frame reduction. Unoccupied
-    (padding) lanes carry ``frame_ids == -1`` everywhere; the masked EMA
-    scans pass their state through untouched and their frame outputs are
-    discarded by the scheduler.
+    Two realizations, selected by ``lane_native`` (None =
+    :func:`resolve_lane_native`: lane-native whenever the megakernel
+    covers the config, env ``REPRO_LANE_NATIVE`` to force):
+
+    - *lane-native* (fused configs): the lane axis is folded into the
+      megakernel's own grid (``ops.fused_dehaze_lanes``) — one
+      ``pallas_call`` launch and one VMEM carry setup for all L lanes,
+      instead of L kernel launches under vmap;
+    - *vmapped* (staged configs, or forced): the single-stream component
+      chain under ``jax.vmap`` over the lane axis.
+
+    Lane semantics are identical in both: per-lane outputs match running
+    ``make_dehaze_step`` on that lane's frames alone (neither the vmap nor
+    the in-kernel lane grid reorders any within-frame reduction).
+    Unoccupied (padding) lanes carry ``frame_ids == -1`` everywhere; the
+    masked EMA paths pass their state through untouched and their frame
+    outputs are discarded by the scheduler.
     """
+    cfg = cfg.validate()
+    if lane_native is None:
+        lane_native = resolve_lane_native(cfg)
+    if lane_native:
+        if not (cfg.kernel_mode == "fused" and alg.supports_fused(cfg)):
+            raise ValueError(
+                "lane_native=True requires kernel_mode='fused' and a config "
+                "the megakernel covers (algorithms.supports_fused)")
+
+        def lane_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
+                      state: AtmoState) -> DehazeOutput:
+            out, t, a_seq, new_state = alg.fused_dehaze_lanes(
+                frames, frame_ids, state, cfg)
+            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+        return lane_step
     step = make_dehaze_step(cfg, associative=associative)
     return jax.vmap(step)
 
@@ -186,14 +243,24 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
     fspec = P(batch_axes, height_axis, width_axis)
     ispec = P(batch_axes)
 
-    def halo_premap_and_guide(frames, state):
+    def halo_premap_and_guide(frames, state, keep_halo_dtype=False):
         """Halo-extended (pre-map, guide) planes + row/column validity,
         honoring ``cfg.halo_packed``: either exchange the packed 2-channel
         stack (what the stencils consume — 1/3 less wire than RGB) or
         exchange RGB and compute the maps on the extended block. Both the
         staged chain and the fused halo kernel consume this, so the two
         paths see identical inputs (including bf16 halo rounding
-        placement)."""
+        placement).
+
+        ``keep_halo_dtype`` (fused packed path): hand the exchanged planes
+        onward in the wire dtype instead of re-casting at the boundary —
+        the halo megakernel accepts bf16 inputs and upcasts in-VMEM, so
+        ``halo_dtype="bfloat16"`` halves the exchange bytes end-to-end
+        with no extra cast pass. Values are unchanged (bf16 -> f32 is
+        exact; the rounding already happened before the exchange). The
+        unpacked path always upcasts: its maps are *computed* from the
+        exchanged RGB and must use the same f32 arithmetic as the staged
+        chain."""
         hdt = jnp.dtype(cfg.halo_dtype)
 
         def exchange(p):
@@ -207,14 +274,17 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             if shard_w:
                 p, valid_w = spatial.halo_exchange_width(
                     p, halo, width_axis, n_w)
-            return p.astype(frames.dtype), valid_h, valid_w
+            return p, valid_h, valid_w
 
         if cfg.halo_packed:
             packed = jnp.stack([alg.premap(frames, state.A, cfg),
                                 alg.luminance(frames)], axis=-1)
             p_ext, valid_h, valid_w = exchange(packed)
+            if not keep_halo_dtype:
+                p_ext = p_ext.astype(frames.dtype)
             return p_ext[..., 0], p_ext[..., 1], valid_h, valid_w
         x_ext, valid_h, valid_w = exchange(frames)
+        x_ext = x_ext.astype(frames.dtype)
         return (alg.premap(x_ext, state.A, cfg), alg.luminance(x_ext),
                 valid_h, valid_w)
 
@@ -282,9 +352,10 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
         per block instead of the masked per-stage XLA chain."""
         if spatial_axes:
             # Halo-aware fused kernel: the exchange output is the kernel
-            # input; masking happens in-VMEM.
+            # input; masking (and any bf16 -> f32 upcast of packed halo
+            # planes) happens in-VMEM.
             pre_ext, guide_ext, valid_h, valid_w = halo_premap_and_guide(
-                frames, state)
+                frames, state, keep_halo_dtype=cfg.halo_packed)
             t, tk_t, tk_rgb, tk_idx = alg.fused_transmission_halo(
                 frames, pre_ext, guide_ext, valid_h, valid_w, cfg)
             rgb = candidates_from_local_topk(tk_t, tk_rgb, tk_idx, frames)
@@ -327,6 +398,7 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
 
 
 __all__ = ["DehazeOutput", "make_dehaze_step", "make_multi_stream_step",
-           "make_sharded_dehaze_step", "init_atmo_state",
-           "init_atmo_state_lanes", "pack_atmo_states", "unpack_atmo_states",
-           "AtmoState", "ema_scan", "ema_scan_associative", "DehazeConfig"]
+           "make_sharded_dehaze_step", "resolve_lane_native",
+           "init_atmo_state", "init_atmo_state_lanes", "pack_atmo_states",
+           "unpack_atmo_states", "AtmoState", "ema_scan",
+           "ema_scan_associative", "DehazeConfig"]

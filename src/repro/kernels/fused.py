@@ -25,10 +25,27 @@ Eq. 4 are the two shipped instantiations):
 The cross-frame EMA recurrence (step 4) is sequential, which would normally
 force the scan *between* kernels — but the TPU grid executes sequentially,
 so the running (A, last_update, initialized) state is carried across grid
-steps in a small output ref, the same race-free fold trick as
+steps in a small VMEM scratch, the same race-free fold trick as
 ``atmolight.py``. One HBM read of I, one write of (J, t) per frame; every
 intermediate (pre-map, dark channel, box-filter moments) lives and dies in
 VMEM.
+
+**Lane axis.** The kernel family is *lane-native*: the multi-tenant
+serving runtime batches L independent video streams on a leading lane
+axis, and ``fused_dehaze_lanes_pallas`` folds that axis straight into the
+pallas grid — a 2-D ``(L, B // frames_per_block)`` grid (or the
+transposed frame-major order, a tuning choice) where each lane owns its
+own row of the ``(L, 3)``/``(L, 2)`` EMA carry scratch. The per-lane EMA
+stays causal *within* a lane (the batch-block dimension of the grid runs
+in ascending order for every lane under both grid orders) and fully
+independent *across* lanes (carry rows never alias), and padding lanes
+(``frame_id == -1`` everywhere) ride through with their state untouched —
+exactly the masked-EMA contract of the vmapped path. Serving L streams is
+ONE ``pallas_call`` launch and one compiled program instead of L.
+``fused_dehaze_pallas`` is the single-stream entry point, a lane-count-1
+view of the same kernel; ``fused_transmission_lanes_pallas`` is the
+lane-batched form of the (stateless) sharded-step stage, with a per-lane
+saved-A input.
 
 ``fused_transmission_pallas`` is the sharded-pipeline variant: it stops
 after step 5 and returns per-frame candidates instead of recovering,
@@ -60,6 +77,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.atmolight import (flat_iota_2d as _flat_iota_2d,
                                      topk_select as _topk_select)
@@ -160,25 +178,38 @@ def _ema_step(cand: jnp.ndarray, fid: jnp.ndarray, A_prev: jnp.ndarray,
 
 
 def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
-                         out_ref, t_ref, aseq_ref, carry_f_ref, carry_i_ref, *,
+                         out_ref, t_ref, aseq_ref, statef_ref, statei_ref,
+                         carry_f_ref, carry_i_ref, *,
                          algorithm: str, radius: int, omega: float, beta: float,
                          cap_w: Tuple[float, float, float], refine: bool,
                          gf_radius: int, gf_eps: float, t0: float,
                          gamma: float, period: int, lam: float, topk: int,
-                         frames_per_block: int):
-    step = pl.program_id(0)
+                         frames_per_block: int, lane_major: bool):
+    """Lane-aware megakernel body over a 2-D (lane, batch-block) grid.
 
-    @pl.when(step == 0)
+    ``carry_f_ref``/``carry_i_ref`` are (L, 3)/(L, 2) VMEM *scratch*: row
+    ``lane`` is that lane's running (A, last_update, initialized) EMA
+    state. Scratch persists across the whole sequential grid, so the carry
+    is correct under either grid order — within a lane the batch blocks
+    always run in ascending order, and no two lanes touch the same row.
+    """
+    if lane_major:
+        lane, blk = pl.program_id(0), pl.program_id(1)
+    else:
+        blk, lane = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(blk == 0)
     def _init_carry():
-        carry_f_ref[0] = state_f_ref[0]
-        carry_i_ref[0] = state_i_ref[0]
+        carry_f_ref[pl.ds(lane, 1)] = state_f_ref[0:1]
+        carry_i_ref[pl.ds(lane, 1)] = state_i_ref[0:1]
 
-    A = carry_f_ref[0, 0:3]
-    k = carry_i_ref[0, 0]
-    inited = carry_i_ref[0, 1]
-    # Pre-map divisor: the batch-entry *saved* A for every frame (§3.3);
-    # state_f_ref is an input block, so it stays constant while the carry
-    # refs advance. (CAP's pre-map is A-free and ignores it.)
+    A = carry_f_ref[pl.ds(lane, 1)][0]
+    ci = carry_i_ref[pl.ds(lane, 1)][0]
+    k = ci[0]
+    inited = ci[1]
+    # Pre-map divisor: the lane's batch-entry *saved* A for every frame
+    # (§3.3); state_f_ref is an input block, so it stays constant while the
+    # carry rows advance. (CAP's pre-map is A-free and ignores it.)
     a0 = jnp.maximum(state_f_ref[0].astype(jnp.float32), 1e-3)
 
     for f in range(frames_per_block):
@@ -197,9 +228,108 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
         out_ref[f] = J.astype(out_ref.dtype)
         t_ref[f] = t.astype(t_ref.dtype)
 
-    carry_f_ref[0, 0:3] = A
-    carry_i_ref[0, 0] = k
-    carry_i_ref[0, 1] = inited
+    ci_next = jnp.stack([k, inited])
+    carry_f_ref[pl.ds(lane, 1)] = A[None]
+    carry_i_ref[pl.ds(lane, 1)] = ci_next[None]
+    # Final-state outputs are written every block; the last block of a lane
+    # is the last writer of that lane's (1, 3)/(1, 2) output block, so the
+    # flushed value is the lane's final EMA state under both grid orders.
+    statef_ref[0] = A
+    statei_ref[0] = ci_next
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
+    "gf_eps", "t0", "gamma", "period", "lam", "topk", "frames_per_block",
+    "lane_major", "interpret"))
+def fused_dehaze_lanes_pallas(
+        img: jnp.ndarray, frame_ids: jnp.ndarray, carry_f: jnp.ndarray,
+        carry_i: jnp.ndarray, *, algorithm: str = "dcp", radius: int,
+        omega: float = 0.95, beta: float = 1.0,
+        cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
+        gf_radius: int, gf_eps: float, t0: float, gamma: float,
+        period: int, lam: float, topk: int = 1, frames_per_block: int = 1,
+        lane_major: bool = True, interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Lane-native single-launch dehaze for L independent streams.
+
+    img: (L, B, H, W, 3); frame_ids: (L, B) int (< 0 = padding);
+    carry_f: (L, 3) f32 saved A per lane; carry_i: (L, 2) int32
+    (last_update, initialized) per lane — the layout produced by
+    ``core.normalize.lane_carry``.
+
+    Returns ``(J (L, B, H, W, 3), t (L, B, H, W), a_seq (L, B, 3) f32,
+    carry_f' (L, 3), carry_i' (L, 2))``. Per lane the outputs are
+    bit-identical to ``fused_dehaze_pallas`` on that lane alone: the grid
+    is ``(L, B // frames_per_block)`` (``lane_major``) or its transpose
+    (frame-major, a cache-locality tuning choice — resolved by the
+    ``fused_lanes`` tuning bucket), each lane's EMA lives in its own
+    ``(L, ...)`` scratch row, and an all-padding lane's carry rides
+    through untouched. One ``pallas_call`` for all L streams.
+    """
+    L, b, h, w, c = img.shape
+    assert c == 3 and frame_ids.shape == (L, b), (img.shape, frame_ids.shape)
+    assert carry_f.shape == (L, 3) and carry_i.shape == (L, 2)
+    assert algorithm in ALGORITHMS, algorithm
+    fpb = _resolve_frames_per_block(b, frames_per_block)
+    nblk = b // fpb
+    # Lane-flattened views keep the blocks 4-D (the same shapes the
+    # single-stream kernel tiles); the (lane, block) -> row arithmetic
+    # lives in the index maps.
+    flat_img = img.reshape(L * b, h, w, 3)
+    ids = frame_ids.astype(jnp.int32).reshape(L * b, 1)
+    state_f = carry_f.astype(jnp.float32)
+    state_i = carry_i.astype(jnp.int32)
+
+    if lane_major:
+        grid = (L, nblk)
+
+        def gi(l, i):
+            return l, i
+    else:
+        grid = (nblk, L)
+
+        def gi(i, l):
+            return l, i
+
+    def frame_map(*g):
+        l, i = gi(*g)
+        return l * nblk + i
+
+    kernel = functools.partial(
+        _fused_dehaze_kernel, algorithm=algorithm, radius=radius, omega=omega,
+        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
+        frames_per_block=fpb, lane_major=lane_major)
+    out, t, a_seq, statef, statei = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((fpb, h, w, 3), lambda *g: (frame_map(*g), 0, 0, 0)),
+            pl.BlockSpec((fpb, 1), lambda *g: (frame_map(*g), 0)),
+            pl.BlockSpec((1, 3), lambda *g: (gi(*g)[0], 0)),
+            pl.BlockSpec((1, 2), lambda *g: (gi(*g)[0], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((fpb, h, w, 3), lambda *g: (frame_map(*g), 0, 0, 0)),
+            pl.BlockSpec((fpb, h, w), lambda *g: (frame_map(*g), 0, 0)),
+            pl.BlockSpec((fpb, 3), lambda *g: (frame_map(*g), 0)),
+            pl.BlockSpec((1, 3), lambda *g: (gi(*g)[0], 0)),
+            pl.BlockSpec((1, 2), lambda *g: (gi(*g)[0], 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L * b, h, w, 3), img.dtype),
+            jax.ShapeDtypeStruct((L * b, h, w), img.dtype),
+            jax.ShapeDtypeStruct((L * b, 3), jnp.float32),
+            jax.ShapeDtypeStruct((L, 3), jnp.float32),
+            jax.ShapeDtypeStruct((L, 2), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((L, 3), jnp.float32),
+                        pltpu.VMEM((L, 2), jnp.int32)],
+        interpret=interpret,
+    )(flat_img, ids, state_f, state_i)
+    return (out.reshape(L, b, h, w, 3), t.reshape(L, b, h, w),
+            a_seq.reshape(L, b, 3), statef, statei)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -219,48 +349,21 @@ def fused_dehaze_pallas(
 
     ``A_saved``/``last_update``/``initialized`` are the ``AtmoState`` fields;
     the EMA state is carried across the sequential grid, so ``a_seq[b]`` is
-    bit-equal to running the Eq. 9 scan outside the kernel.
+    bit-equal to running the Eq. 9 scan outside the kernel. A lane-count-1
+    view of the lane-native kernel (``fused_dehaze_lanes_pallas``).
     """
-    b, h, w, c = img.shape
-    assert c == 3 and frame_ids.shape == (b,)
-    assert algorithm in ALGORITHMS, algorithm
-    fpb = _resolve_frames_per_block(b, frames_per_block)
-    ids = frame_ids.astype(jnp.int32).reshape(b, 1)
-    state_f = A_saved.astype(jnp.float32).reshape(1, 3)
-    state_i = jnp.stack([last_update.astype(jnp.int32),
+    b = img.shape[0]
+    assert frame_ids.shape == (b,)
+    carry_f = A_saved.astype(jnp.float32).reshape(1, 3)
+    carry_i = jnp.stack([last_update.astype(jnp.int32),
                          initialized.astype(jnp.int32)]).reshape(1, 2)
-
-    kernel = functools.partial(
-        _fused_dehaze_kernel, algorithm=algorithm, radius=radius, omega=omega,
-        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
-        frames_per_block=fpb)
-    out, t, a_seq, carry_f, carry_i = pl.pallas_call(
-        kernel,
-        grid=(b // fpb,),
-        in_specs=[
-            pl.BlockSpec((fpb, h, w, 3), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((fpb, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 3), lambda i: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((fpb, h, w, 3), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((fpb, h, w), lambda i: (i, 0, 0)),
-            pl.BlockSpec((fpb, 3), lambda i: (i, 0)),
-            pl.BlockSpec((1, 3), lambda i: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h, w, 3), img.dtype),
-            jax.ShapeDtypeStruct((b, h, w), img.dtype),
-            jax.ShapeDtypeStruct((b, 3), jnp.float32),
-            jax.ShapeDtypeStruct((1, 3), jnp.float32),
-            jax.ShapeDtypeStruct((1, 2), jnp.int32),
-        ],
-        interpret=interpret,
-    )(img, ids, state_f, state_i)
-    return out, t, a_seq, carry_f[0], carry_i[0, 0]
+    out, t, a_seq, statef, statei = fused_dehaze_lanes_pallas(
+        img[None], frame_ids.reshape(1, b), carry_f, carry_i,
+        algorithm=algorithm, radius=radius, omega=omega, beta=beta,
+        cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+        t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
+        frames_per_block=frames_per_block, interpret=interpret)
+    return out[0], t[0], a_seq[0], statef[0], statei[0, 0]
 
 
 # Back-compat alias (PR 1 shipped the DCP-only kernel under this name).
@@ -325,6 +428,56 @@ def fused_transmission_pallas(
         interpret=interpret,
     )(img, a0)
     return t, cand[:, 0], cand[:, 1:4].astype(img.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
+    "gf_eps", "topk", "interpret"))
+def fused_transmission_lanes_pallas(
+        img: jnp.ndarray, A_saved: jnp.ndarray, *, algorithm: str = "dcp",
+        radius: int, omega: float = 0.95, beta: float = 1.0,
+        cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
+        gf_radius: int, gf_eps: float, topk: int = 1,
+        interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Lane-native sharded-step stage: (L,B,H,W,3) + per-lane A (L,3) ->
+    (t (L,B,H,W), t_min (L,B), cand_rgb (L,B,3)).
+
+    The stage is stateless across frames, so the lane axis folds into a
+    flat ``L*B`` grid; what makes it lane-*native* (vs reshaping into the
+    single-stream kernel) is the per-lane saved-A input — frame row ``i``
+    reads its own lane's A block via the ``i // B`` index map, so every
+    lane's DCP pre-map divides by that lane's coherent A. One launch for
+    all L streams.
+    """
+    L, b, h, w, c = img.shape
+    assert c == 3 and A_saved.shape == (L, 3), (img.shape, A_saved.shape)
+    assert algorithm in ALGORITHMS, algorithm
+    flat = img.reshape(L * b, h, w, 3)
+    a0 = A_saved.astype(jnp.float32)
+    kernel = functools.partial(
+        _fused_tmap_kernel, algorithm=algorithm, radius=radius, omega=omega,
+        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps, topk=topk)
+    t, cand = pl.pallas_call(
+        kernel,
+        grid=(L * b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i // b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L * b, h, w), img.dtype),
+            jax.ShapeDtypeStruct((L * b, 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flat, a0)
+    return (t.reshape(L, b, h, w), cand[:, 0].reshape(L, b),
+            cand[:, 1:4].astype(img.dtype).reshape(L, b, 3))
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +568,12 @@ def fused_transmission_halo_pallas(
     valid:     (H_ext,) bool        — row validity from the H halo exchange.
     valid_w:   (W_ext,) bool | None — column validity from the W halo
                exchange; None (no W sharding) means all columns valid.
+
+    ``pre_ext``/``guide_ext`` may arrive in the halo *wire* dtype (e.g.
+    bfloat16 under ``halo_dtype="bfloat16"``): the kernel upcasts them to
+    float32 in-VMEM, so the exchanged planes feed the launch directly with
+    no boundary re-cast pass — half the exchange bytes, bit-identical
+    results to upcasting outside (bf16 -> f32 is exact).
 
     Returns ``(t (B, H_loc, W_loc), tk_t (B, k), tk_rgb (B, k, 3),
     tk_idx (B, k) int32)`` — the shard-local top-k smallest-t candidates in

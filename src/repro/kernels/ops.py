@@ -29,8 +29,10 @@ from repro.kernels.dark_channel import dark_channel_pallas, min_filter_2d_pallas
 from repro.kernels.boxfilter import box_filter_2d_pallas
 from repro.kernels.recover import recover_pallas
 from repro.kernels.atmolight import atmolight_pallas, atmolight_topk_pallas
-from repro.kernels.fused import (fused_dehaze_pallas,
+from repro.kernels.fused import (fused_dehaze_lanes_pallas,
+                                 fused_dehaze_pallas,
                                  fused_transmission_halo_pallas,
+                                 fused_transmission_lanes_pallas,
                                  fused_transmission_pallas)
 from repro.kernels.ref import CAP_COEFFS
 
@@ -256,6 +258,58 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
             a_seq.reshape(lead + (3,)), a_fin, k_fin)
 
 
+def fused_dehaze_lanes(img: jnp.ndarray, frame_ids: jnp.ndarray,
+                       carry_f: jnp.ndarray, carry_i: jnp.ndarray, *,
+                       algorithm: str = "dcp", radius: int,
+                       omega: float = 0.95, beta: float = 1.0,
+                       cap_w: Tuple[float, float, float] = CAP_COEFFS,
+                       refine: bool, gf_radius: int, gf_eps: float, t0: float,
+                       gamma: float, period: int, lam: float, topk: int = 1,
+                       frames_per_block: int = 0, lane_major=None,
+                       mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Lane-native fused dehaze: L streams, one launch.
+
+    img: (L, B, H, W, 3); frame_ids: (L, B); carry_f (L, 3) f32 /
+    carry_i (L, 2) int32 are the lane-packed EMA carry rows
+    (``core.normalize.lane_carry``). Returns ``(J, t, a_seq (L, B, 3),
+    carry_f', carry_i')`` — per lane identical to :func:`fused_dehaze` on
+    that lane alone, padding lanes (all ids < 0) untouched.
+
+    ``frames_per_block <= 0`` and ``lane_major=None`` resolve from the
+    ``fused_lanes`` tuning bucket (env ``REPRO_TUNE_FUSED_LANES`` >
+    persisted table > lane-major, 1 frame per block); the bucket's shape
+    key includes the lane count, so the lane-major-vs-frame-major grid
+    order and the ``frames_per_block`` x L tile sweep are tuned per
+    serving shape.
+    """
+    assert img.ndim == 5, img.shape
+    n_lanes, b = img.shape[0], img.shape[1]
+    assert frame_ids.shape == (n_lanes, b), frame_ids.shape
+    m = resolve_substrate(mode)
+    if m == "ref":
+        def one_lane(im, ids, cf, ci):
+            j, t, a_seq, a_fin, k_fin = _ref.fused_dehaze(
+                im, ids, cf, ci[0], ci[1].astype(bool), algorithm=algorithm,
+                radius=radius, omega=omega, beta=beta, cap_w=cap_w,
+                refine=refine, gf_radius=gf_radius, gf_eps=gf_eps, t0=t0,
+                gamma=gamma, period=period, lam=lam, topk=topk)
+            inited = jnp.maximum(ci[1], jnp.any(ids >= 0).astype(ci.dtype))
+            return j, t, a_seq, a_fin, jnp.stack([k_fin, inited])
+        return jax.vmap(one_lane)(img, frame_ids, carry_f, carry_i)
+    params = tuning.get_params("fused_lanes", img.shape[:4])
+    if frames_per_block <= 0:
+        frames_per_block = int(params.get("frames_per_block", 1))
+    if lane_major is None:
+        lane_major = str(params.get("grid_order", "lane_major")) \
+            != "frame_major"
+    return fused_dehaze_lanes_pallas(
+        img, frame_ids, carry_f, carry_i, algorithm=algorithm, radius=radius,
+        omega=omega, beta=beta, cap_w=tuple(cap_w), refine=refine,
+        gf_radius=gf_radius, gf_eps=gf_eps, t0=t0, gamma=gamma, period=period,
+        lam=lam, topk=topk, frames_per_block=frames_per_block,
+        lane_major=bool(lane_major), interpret=(m == "interpret"))
+
+
 def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                        algorithm: str = "dcp", radius: int,
                        omega: float = 0.95, beta: float = 1.0,
@@ -282,6 +336,38 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
             gf_eps=gf_eps, topk=topk, interpret=(m == "interpret"))
     return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
             cand.reshape(lead + (3,)))
+
+
+def fused_transmission_lanes(img: jnp.ndarray, A_saved: jnp.ndarray, *,
+                             algorithm: str = "dcp", radius: int,
+                             omega: float = 0.95, beta: float = 1.0,
+                             cap_w: Tuple[float, float, float] = CAP_COEFFS,
+                             refine: bool, gf_radius: int, gf_eps: float,
+                             topk: int = 1,
+                             mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
+    """Lane-native fused t-map stage: (L, B, H, W, 3) + per-lane saved A
+    (L, 3) -> (t (L, B, H, W), t_min (L, B), cand_rgb (L, B, 3)).
+
+    The lane-batched form of :func:`fused_transmission` — each lane's DCP
+    pre-map divides by its own coherent A, and all L lanes ride one
+    launch. The stage is stateless across frames, so there is no carry to
+    fold; the per-lane A input is what distinguishes this from reshaping
+    the lane axis into the batch."""
+    assert img.ndim == 5, img.shape
+    n_lanes = img.shape[0]
+    assert A_saved.shape == (n_lanes, 3), A_saved.shape
+    m = resolve_substrate(mode)
+    if m == "ref":
+        def one_lane(im, a):
+            return _ref.fused_transmission(
+                im, a, algorithm=algorithm, radius=radius, omega=omega,
+                beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
+                gf_eps=gf_eps, topk=topk)
+        return jax.vmap(one_lane)(img, A_saved)
+    return fused_transmission_lanes_pallas(
+        img, A_saved, algorithm=algorithm, radius=radius, omega=omega,
+        beta=beta, cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
+        gf_eps=gf_eps, topk=topk, interpret=(m == "interpret"))
 
 
 def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
@@ -350,3 +436,41 @@ def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
     return fused_transmission(img, A_saved, algorithm="dcp", radius=radius,
                               omega=omega, refine=refine,
                               gf_radius=gf_radius, gf_eps=gf_eps, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Introspection: pallas_call launches in a traced program
+# ---------------------------------------------------------------------------
+
+def _iter_jaxprs(val):
+    from jax import core
+    if isinstance(val, core.Jaxpr):
+        yield val
+    elif isinstance(val, core.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _iter_jaxprs(v)
+
+
+def _count_pallas(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _iter_jaxprs(v):
+                n += _count_pallas(sub)
+    return n
+
+
+def pallas_launch_count(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``fn``'s traced jaxpr
+    (recursing into nested call/scan/cond jaxprs).
+
+    This is the per-tick launch count the lane-native refactor optimizes:
+    dispatching L streams through per-lane kernel calls traces L
+    ``pallas_call``s, the lane-native kernel exactly one. Used by the
+    ``kernels/fused_lanes_*`` bench rows and the launch-count regression
+    test."""
+    return _count_pallas(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)

@@ -39,6 +39,12 @@ DEFAULTS: Dict[str, Dict[str, Any]] = {
     # Spatially-sharded (H and/or W) halo megakernel: per-shard blocks are
     # smaller than full frames, so more of them fit one grid step.
     "fused_halo_2d": {"frames_per_block": 1},
+    # Lane-native multi-stream megakernel: the (lane, batch-block) grid
+    # order trades carry-row locality (lane-major streams one lane's
+    # whole batch) against output-tile locality (frame-major interleaves
+    # lanes per block); the shape key includes the lane count, so the
+    # frames_per_block x L product is swept per serving shape.
+    "fused_lanes": {"frames_per_block": 1, "grid_order": "lane_major"},
     "atmolight": {"tile_h": 0},          # 0 = whole frame per grid step
     "atmolight_topk": {"tile_h": 0},     # k-row grid-carry fold tile
 }
@@ -186,6 +192,53 @@ def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
     return table
 
 
+def autotune_fused_lanes(shapes=((4, 4, 48, 64), (16, 2, 48, 64)),
+                         fpb_candidates=(1, 2, 4),
+                         orders=("lane_major", "frame_major"),
+                         iters: int = 3, persist: bool = True) -> Dict[str, Any]:
+    """Sweep the lane-native megakernel's grid: ``frames_per_block`` x
+    grid order (lane-major vs frame-major), per ``(L, B, H, W)`` serving
+    shape, into the ``fused_lanes`` bucket.
+
+    Uses the dispatch layer, so it times whatever substrate the backend
+    resolves to — run on the serving pod to bake in real measurements.
+    One lane is all-padding (ids -1), matching a typical partially
+    occupied fleet tick.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    table: Dict[str, Any] = {"fused_lanes": {}}
+    for n_lanes, b, h, w in shapes:
+        r = np.random.default_rng(0)
+        img = jnp.asarray(r.random((n_lanes, b, h, w, 3), np.float32))
+        ids = jnp.stack(
+            [jnp.arange(b, dtype=jnp.int32)] * (n_lanes - 1)
+            + [jnp.full((b,), -1, jnp.int32)])
+        carry_f = jnp.ones((n_lanes, 3), jnp.float32)
+        carry_i = jnp.stack([jnp.full((n_lanes,), -(2 ** 30), jnp.int32),
+                             jnp.zeros((n_lanes,), jnp.int32)], axis=-1)
+
+        def build(params):
+            def run():
+                return ops.fused_dehaze_lanes(
+                    img, ids, carry_f, carry_i, algorithm="dcp", radius=7,
+                    omega=0.95, refine=True, gf_radius=8, gf_eps=1e-3,
+                    t0=0.1, gamma=1.0, period=8, lam=0.05,
+                    frames_per_block=params["frames_per_block"],
+                    lane_major=(params["grid_order"] == "lane_major"))
+            return run
+
+        table["fused_lanes"][shape_bucket((n_lanes, b, h, w))] = autotune(
+            "fused_lanes", (n_lanes, b, h, w),
+            [{"frames_per_block": f, "grid_order": o}
+             for f in fpb_candidates for o in orders],
+            build, iters=iters, persist=persist)
+    return table
+
+
 def autotune_fused_halo(shapes=((4, 24, 64), (2, 60, 160)), halo=23,
                         candidates=(1, 2, 4), iters: int = 3,
                         persist: bool = True) -> Dict[str, Any]:
@@ -221,5 +274,6 @@ def autotune_fused_halo(shapes=((4, 24, 64), (2, 60, 160)), halo=23,
 
 if __name__ == "__main__":
     out = autotune_fused()
+    out.update(autotune_fused_lanes())
     out.update(autotune_fused_halo())
     print(json.dumps({**out, "path": str(table_path())}, indent=2))

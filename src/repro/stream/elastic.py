@@ -32,7 +32,7 @@ import jax
 import numpy as np
 
 from repro.core import (DehazeConfig, init_atmo_state, make_dehaze_step,
-                        make_multi_stream_step)
+                        make_multi_stream_step, resolve_lane_native)
 from repro.core.normalize import AtmoState
 from repro.stream.dispatcher import StreamDispatcher
 from repro.stream.monitor import Monitor
@@ -91,14 +91,23 @@ def _cached_step(cfg: DehazeConfig):
                            lambda: jax.jit(make_dehaze_step(cfg)))
 
 
-def _cached_multi_step(cfg: DehazeConfig):
-    """Lane-vmapped step, same bounded cache. One cache entry per config;
-    ``jax.jit`` still specializes per input shape underneath, so each
-    distinct ``(n_lanes, batch, H, W)`` traces/compiles once — changing
-    the lane count mid-fleet costs a recompile (see the ROADMAP lane-
-    autoscaling follow-on)."""
-    return _STEP_CACHE.get(("multi", cfg),
-                           lambda: jax.jit(make_multi_stream_step(cfg)))
+def _cached_multi_step(cfg: DehazeConfig, n_lanes: int, lane_native: bool):
+    """Multi-stream step (lane-native megakernel or lane-vmapped chain),
+    same bounded cache.
+
+    The key includes ``n_lanes`` and the lane-native-vs-vmap path, not
+    just the config: a ``serve_many`` resize or a ``REPRO_LANE_NATIVE``
+    toggle between calls must never reuse a stale compiled step — the old
+    ``("multi", cfg)`` key did exactly that, handing a 4-lane fleet the
+    executable (and, for lane-native, the grid/tuning resolution) built
+    for a different lane count or the other dispatch path. ``jax.jit``
+    still specializes per input shape underneath; changing the lane count
+    mid-fleet costs a recompile (see the ROADMAP lane-autoscaling
+    follow-on)."""
+    return _STEP_CACHE.get(
+        ("multi", cfg, n_lanes, lane_native),
+        lambda: jax.jit(make_multi_stream_step(cfg,
+                                               lane_native=lane_native)))
 
 
 class ElasticServer:
@@ -164,11 +173,20 @@ class ElasticServer:
                    = None) -> MultiServeReport:
         """Serve N videos concurrently via lane-batched continuous batching.
 
-        ``streams`` is a sequence of ``(stream_id, frames)`` pairs; all
-        streams must share the same (H, W) resolution (the lane batch has
-        one fixed device shape). ``n_lanes`` defaults to one lane per
-        stream; with fewer lanes than streams the scheduler queues the
-        surplus and admits them as lanes free up (eviction + reuse).
+        ``streams`` is a sequence of ``(stream_id, frames)`` pairs — or
+        ``(stream_id, frames, deadline)`` triples to request
+        earliest-deadline-first lane admission when lanes are scarce
+        (FIFO among deadline-less streams; see
+        ``MultiStreamScheduler``). All streams must share the same (H, W)
+        resolution (the lane batch has one fixed device shape).
+        ``n_lanes`` defaults to one lane per stream; with fewer lanes
+        than streams the scheduler queues the surplus and admits them as
+        lanes free up (eviction + reuse).
+
+        With a fused-covered config the device step is the *lane-native*
+        megakernel — all L lanes fold into one ``pallas_call`` grid, so a
+        tick costs one kernel launch instead of L (env
+        ``REPRO_LANE_NATIVE=0`` forces the vmapped path back).
 
         Per-stream semantics match N sequential :meth:`serve` calls to
         float32 round-off (exactly, on the fused path; the vmapped staged
@@ -186,8 +204,10 @@ class ElasticServer:
                                     wall_s=0.0, n_lanes=0, ticks=0,
                                     admissions=0)
         lanes = n_lanes if n_lanes is not None else len(streams)
+        step = _cached_multi_step(self.cfg, lanes,
+                                  resolve_lane_native(self.cfg))
         scheduler = MultiStreamScheduler(
-            _cached_multi_step(self.cfg), self.store, n_lanes=lanes,
+            step, self.store, n_lanes=lanes,
             batch=self.batch, timeout_s=self.timeout_s,
             max_in_flight=self.max_in_flight)
         return scheduler.run(streams, sink=sink)

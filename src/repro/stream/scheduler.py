@@ -28,14 +28,24 @@ back to the ``StreamStateStore``), and the freed lane is reused by the
 next pending stream in the same tick. Unoccupied lanes are padded with
 ``frame_id = -1`` batches, which the masked EMA scans treat as identity —
 a dead lane's state rides through every step unchanged and emits nothing.
+
+**Admission policy.** The pending queue is FIFO by default. A stream may
+carry an optional *deadline* (a third tuple element, any comparable
+number — e.g. epoch seconds or a priority rank): when lanes are scarce,
+free lanes are granted earliest-deadline-first, deadline-less streams
+rank after every deadlined one, and ties (equal deadlines, and the whole
+no-deadline class) break by arrival order — so a real-time stream never
+queues behind a batch backfill, and plain FIFO callers see the exact
+pre-deadline behavior.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
+import math
 import threading
 import time
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -46,8 +56,11 @@ from repro.stream.monitor import Monitor
 from repro.stream.spout import FrameBatch, Spout
 from repro.stream.state import StreamStateStore
 
-# A stream to serve: (stream_id, iterable of (H, W, 3) frames).
-StreamEntry = Tuple[str, Iterable[np.ndarray]]
+# A stream to serve: (stream_id, iterable of (H, W, 3) frames) with an
+# optional per-stream deadline — (stream_id, frames, deadline) — granting
+# that stream earliest-deadline-first lane admission.
+StreamEntry = Union[Tuple[str, Iterable[np.ndarray]],
+                    Tuple[str, Iterable[np.ndarray], Optional[float]]]
 # sink(stream_id, frame_id, frame) — called in per-stream ascending order.
 MultiSink = Callable[[str, int, np.ndarray], None]
 
@@ -188,7 +201,9 @@ class MultiStreamScheduler:
             if self._lanes[lane_idx] is None:
                 if not self._pending:
                     return None, packed
-                sid, frames = self._pending.popleft()
+                # EDF pop: (deadline, arrival) heap key — FIFO when no
+                # stream carries a deadline (all keys (inf, arrival)).
+                _, sid, frames = heapq.heappop(self._pending)
                 packed = self._admit(lane_idx, sid, frames, packed, sink)
                 # Keep the shared view current immediately: if the new
                 # stream's iterator raises below, the error-path eviction
@@ -205,7 +220,7 @@ class MultiStreamScheduler:
     def run(self, streams: Iterable[StreamEntry],
             sink: Optional[MultiSink] = None) -> MultiServeReport:
         streams = list(streams)
-        sids = [sid for sid, _ in streams]
+        sids = [e[0] for e in streams]
         if len(set(sids)) != len(sids):
             # A duplicate id would race its predecessor's background
             # finalizer for the store cursor and the report slot. Resume a
@@ -214,7 +229,16 @@ class MultiStreamScheduler:
             dupes = sorted({s for s in sids if sids.count(s) > 1})
             raise ValueError(f"duplicate stream ids in one serve_many call: "
                              f"{dupes}")
-        self._pending = collections.deque(streams)
+        # Pending heap keyed (deadline, arrival): earliest-deadline-first
+        # admission, deadline-less streams (key (inf, arrival)) after every
+        # deadlined one and FIFO among themselves — with no deadlines at
+        # all this is exactly the old FIFO deque.
+        self._pending = []
+        for arrival, entry in enumerate(streams):
+            sid, frames = entry[0], entry[1]
+            deadline = entry[2] if len(entry) > 2 and entry[2] is not None \
+                else math.inf
+            heapq.heappush(self._pending, ((deadline, arrival), sid, frames))
         self._lanes: List[Optional[_Lane]] = [None] * self.n_lanes
         self._inflight: List[threading.Thread] = []
         self._finalizers: List[threading.Thread] = []

@@ -9,3 +9,28 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def ramp_frames(seed, *lead, h, w):
+    """Tie-stable differential-test frames: a seeded permutation gray ramp
+    (all pixel levels distinct, separation 1/prod(shape)) with fixed
+    per-channel scales (1.0, 0.9, 0.8), shaped ``lead + (h, w, 3)``.
+
+    THE shared recipe for comparing top-k/argmin selections across
+    *separately compiled* programs (fused kernel vs oracle, lane-native vs
+    vmapped): both premaps (DCP ``min_c scale_c·g/A_c`` and CAP
+    ``w0 + w1·g + w2·s``) are strictly monotone in the ramp for any
+    atmospheric light, distinct t values sit orders of magnitude above
+    cross-program FMA round-off, and every exact t tie is a min-filter
+    plateau *copy* — resolved by flat index identically in both programs.
+    Uniform random frames do hit coincidental 1-ulp boundary ties, which
+    are legitimate cross-path behavior, not bugs. The channel scales keep
+    R/G/B distinct at every pixel so channel mix-ups in a candidate
+    gather or the EMA still show.
+    """
+    import jax.numpy as jnp
+    r = np.random.default_rng(seed)
+    n = int(np.prod(lead)) * h * w
+    g = (r.permutation(n).reshape(*lead, h, w) + 1.0) / (n + 1.0)
+    rgb = np.stack([g, 0.9 * g, 0.8 * g], axis=-1)
+    return jnp.asarray(rgb.astype(np.float32))

@@ -184,3 +184,125 @@ def test_config_validation():
     with pytest.raises(AssertionError):
         DehazeConfig(lam=1.5).validate()
     DehazeConfig().validate()
+
+
+# --- lane-packed state + lane-native step properties -------------------------
+
+def _random_lane_states(r, n_lanes):
+    from repro.core import init_atmo_state
+    states = []
+    for lane in range(n_lanes):
+        if r.random() < 0.3:                       # padding / fresh lane
+            states.append(init_atmo_state())
+        else:
+            states.append(AtmoState(
+                A=jnp.asarray(r.random(3), jnp.float32),
+                last_update=jnp.asarray(int(r.integers(0, 1000)), jnp.int32),
+                initialized=jnp.asarray(bool(r.integers(0, 2)))))
+    return states
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_lanes=st.integers(1, 6), seed=st.integers(0, 1000))
+def test_lane_state_pack_unpack_get_set_roundtrip(n_lanes, seed):
+    """Lane-packed AtmoState invariants: pack/unpack is the identity,
+    get_lane_state reads what pack wrote, set_lane_state replaces exactly
+    one lane, and the kernel carry layout (lane_carry /
+    state_from_lane_carry) round-trips — including uninitialized
+    (padding-lane) states."""
+    from repro.core import (get_lane_state, lane_carry, pack_atmo_states,
+                            set_lane_state, state_from_lane_carry,
+                            unpack_atmo_states)
+    r = np.random.default_rng(seed)
+    states = _random_lane_states(r, n_lanes)
+    packed = pack_atmo_states(states)
+    assert packed.A.shape == (n_lanes, 3)
+    assert packed.last_update.shape == (n_lanes,)
+
+    def assert_state_eq(a, b):
+        np.testing.assert_array_equal(np.asarray(a.A), np.asarray(b.A))
+        assert int(a.last_update) == int(b.last_update)
+        assert bool(a.initialized) == bool(b.initialized)
+
+    for lane, (s, u) in enumerate(zip(states, unpack_atmo_states(packed))):
+        assert_state_eq(s, u)
+        assert_state_eq(s, get_lane_state(packed, lane))
+
+    # Kernel carry layout round-trip.
+    carry_f, carry_i = lane_carry(packed)
+    assert carry_f.shape == (n_lanes, 3) and carry_f.dtype == jnp.float32
+    assert carry_i.shape == (n_lanes, 2) and carry_i.dtype == jnp.int32
+    back = state_from_lane_carry(carry_f, carry_i)
+    for lane in range(n_lanes):
+        assert_state_eq(get_lane_state(packed, lane),
+                        get_lane_state(back, lane))
+
+    # set_lane_state replaces one lane, leaves every other bit-unchanged.
+    victim = int(r.integers(0, n_lanes))
+    repl = AtmoState(A=jnp.asarray([0.5, 0.25, 0.125], jnp.float32),
+                     last_update=jnp.asarray(4242, jnp.int32),
+                     initialized=jnp.asarray(True))
+    updated = set_lane_state(packed, victim, repl)
+    for lane in range(n_lanes):
+        assert_state_eq(repl if lane == victim else states[lane],
+                        get_lane_state(updated, lane))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_lanes=st.integers(1, 4), seed=st.integers(0, 1000),
+       algorithm=st.sampled_from(["dcp", "cap"]),
+       pad_mask=st.lists(st.booleans(), min_size=4, max_size=4),
+       data=st.data())
+def test_lane_native_step_equals_vmapped(n_lanes, seed, algorithm, pad_mask,
+                                         data):
+    """Lane-native megakernel vs jax.vmap of the fused single-stream step,
+    over random lane counts and padding patterns (whole padding lanes and
+    padded batch tails): identical outputs and states per lane. On the
+    XLA-oracle substrate (this suite's default) the comparison is
+    bit-exact; under REPRO_KERNEL_MODE=interpret the separately compiled
+    programs are allowed 2 ulp of FMA reassociation."""
+    from repro.core import make_multi_stream_step, pack_atmo_states
+    from repro.kernels.ops import resolve_mode
+    float_tol = 0.0 if resolve_mode("fused") == "ref" else 1.2e-7
+    b, h, w = 3, 12, 16
+    r = np.random.default_rng(seed)
+    # Tie-stable ramp frames: distinct t everywhere, so the top-k
+    # *selection* cannot fork between the two compiled programs.
+    from conftest import ramp_frames
+    frames = ramp_frames(seed, n_lanes, b, h=h, w=w)
+    ids = np.stack([np.arange(lane * 5, lane * 5 + b, dtype=np.int32)
+                    for lane in range(n_lanes)])
+    for lane in range(n_lanes):
+        if pad_mask[lane]:                          # whole lane unoccupied
+            ids[lane] = -1
+        else:                                       # padded batch tail
+            tail = int(data.draw(st.integers(0, b - 1)))
+            if tail:
+                ids[lane, b - tail:] = -1
+    ids = jnp.asarray(ids)
+    packed = pack_atmo_states(_random_lane_states(r, n_lanes))
+
+    cfg = DehazeConfig(algorithm=algorithm, kernel_mode="fused",
+                       patch_radius=2, gf_radius=2, update_period=2,
+                       topk=int(data.draw(st.sampled_from([1, 3]))))
+    got = make_multi_stream_step(cfg, lane_native=True)(frames, ids, packed)
+    want = make_multi_stream_step(cfg, lane_native=False)(frames, ids,
+                                                          packed)
+    for field in ("frames", "transmission", "atmo_light"):
+        np.testing.assert_allclose(np.asarray(getattr(got, field)),
+                                   np.asarray(getattr(want, field)),
+                                   atol=float_tol, rtol=0, err_msg=field)
+    np.testing.assert_allclose(np.asarray(got.state.A),
+                               np.asarray(want.state.A), atol=float_tol,
+                               rtol=0)
+    np.testing.assert_array_equal(np.asarray(got.state.last_update),
+                                  np.asarray(want.state.last_update))
+    np.testing.assert_array_equal(np.asarray(got.state.initialized),
+                                  np.asarray(want.state.initialized))
+    # All-padding lanes ride through bit-unchanged on the lane-native path.
+    for lane in range(n_lanes):
+        if pad_mask[lane]:
+            np.testing.assert_array_equal(np.asarray(got.state.A[lane]),
+                                          np.asarray(packed.A[lane]))
+            assert int(got.state.last_update[lane]) == \
+                int(packed.last_update[lane])

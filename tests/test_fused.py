@@ -545,3 +545,197 @@ def test_fused_cap_registry_bucket(monkeypatch, tmp_path):
     want = _run(img, _state(), "ref", **kw)
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
                                atol=1e-5)
+
+
+# --- lane-native megakernel (multi-stream lane axis in the pallas grid) ------
+
+def _lane_inputs(n_lanes=3, b=4, h=16, w=20, seed=29):
+    """Tie-stable lane-batched inputs (``conftest.ramp_frames`` — all t
+    values distinct, so selections cannot fork across separately compiled
+    programs), warm and cold per-lane states, and one all-padding lane."""
+    from conftest import ramp_frames
+    r = np.random.default_rng(seed)
+    img = ramp_frames(seed, n_lanes, b, h=h, w=w)
+    ids = jnp.stack([jnp.arange(b, dtype=jnp.int32) + 10 * lane
+                     for lane in range(n_lanes - 1)]
+                    + [jnp.full((b,), -1, jnp.int32)])
+    carry_f = jnp.asarray(r.random((n_lanes, 3), np.float32) * 0.4 + 0.6)
+    carry_i = jnp.stack([jnp.asarray([3, 1], jnp.int32)]
+                        + [jnp.asarray([-2 ** 30, 0], jnp.int32)] *
+                        (n_lanes - 1))
+    return img, ids, carry_f, carry_i
+
+
+@pytest.mark.parametrize("lane_major", [True, False])
+@pytest.mark.parametrize("fpb", [1, 2])
+def test_fused_lanes_kernel_matches_per_lane(lane_major, fpb):
+    """The lane-native kernel's per-lane outputs match the single-stream
+    kernel run on each lane alone — for both grid orders (lane-major and
+    frame-major) and multi-frame blocks — and an all-padding lane's carry
+    rides through untouched. Float outputs are compared to 2 ulp: the two
+    interpret-mode programs compile separately, and XLA's shape-dependent
+    FMA fusion legally reassociates at that level (the candidate
+    *selection* cannot fork — the frames are a tie-stable ramp); integer
+    state is exact."""
+    from repro.kernels.fused import (fused_dehaze_lanes_pallas,
+                                     fused_dehaze_pallas)
+    img, ids, carry_f, carry_i = _lane_inputs()
+    kw = dict(FUSED_KW, refine=True, topk=4)
+    out = fused_dehaze_lanes_pallas(img, ids, carry_f, carry_i,
+                                    frames_per_block=fpb,
+                                    lane_major=lane_major, interpret=True,
+                                    **kw)
+    for lane in range(img.shape[0]):
+        want = fused_dehaze_pallas(img[lane], ids[lane], carry_f[lane],
+                                   carry_i[lane, 0], carry_i[lane, 1],
+                                   frames_per_block=fpb, interpret=True,
+                                   **kw)
+        tag = f"lane{lane}/major{lane_major}/fpb{fpb}"
+        for g, w in zip(out[:4], want[:4]):          # J, t, a_seq, A_fin
+            np.testing.assert_allclose(np.asarray(g[lane]), np.asarray(w),
+                                       atol=1.2e-7, rtol=0, err_msg=tag)
+        assert int(out[4][lane, 0]) == int(want[4]), tag
+    pad = img.shape[0] - 1
+    np.testing.assert_array_equal(np.asarray(out[3][pad]),
+                                  np.asarray(carry_f[pad]))
+    assert int(out[4][pad, 1]) == 0                  # never initialized
+
+
+def test_fused_lanes_ref_dispatch_matches_per_lane():
+    """ops.fused_dehaze_lanes on the XLA oracle substrate == per-lane
+    oracle runs (the lane-vmapped reference the serving runtime uses on
+    CPU)."""
+    img, ids, carry_f, carry_i = _lane_inputs(seed=31)
+    kw = dict(FUSED_KW, topk=2)
+    out = ops.fused_dehaze_lanes(img, ids, carry_f, carry_i, mode="ref",
+                                 **kw)
+    for lane in range(img.shape[0]):
+        want = ref.fused_dehaze(img[lane], ids[lane], carry_f[lane],
+                                carry_i[lane, 0],
+                                carry_i[lane, 1].astype(bool), **kw)
+        for g, w in zip(out[:4], want[:4]):
+            np.testing.assert_allclose(np.asarray(g[lane]), np.asarray(w),
+                                       atol=1.2e-7, rtol=0)
+        assert int(out[4][lane, 0]) == int(want[4])
+
+
+def test_fused_lanes_interpret_vs_ref_parity():
+    """Acceptance gate vs the oracle: the lane-native kernel body keeps
+    the 1e-5 max-abs bar of the single-stream kernel."""
+    img, ids, carry_f, carry_i = _lane_inputs(seed=37)
+    kw = dict(FUSED_KW, refine=True)
+    got = ops.fused_dehaze_lanes(img, ids, carry_f, carry_i,
+                                 mode="interpret", **kw)
+    want = ops.fused_dehaze_lanes(img, ids, carry_f, carry_i, mode="ref",
+                                  **kw)
+    for g, w in zip(got[:4], want[:4]):
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(want[4]))
+
+
+def test_fused_transmission_lanes_matches_per_lane():
+    """Lane-batched t-map stage: each lane's pre-map must divide by that
+    lane's own saved A (the per-lane A input is what makes the stage
+    lane-native)."""
+    from repro.kernels.fused import (fused_transmission_lanes_pallas,
+                                     fused_transmission_pallas)
+    img, _, carry_f, _ = _lane_inputs(seed=43)
+    kw = dict(radius=3, omega=0.95, refine=True, gf_radius=4, gf_eps=1e-3,
+              topk=2)
+    t, tmin, cand = fused_transmission_lanes_pallas(img, carry_f,
+                                                    interpret=True, **kw)
+    for lane in range(img.shape[0]):
+        tr, tminr, candr = fused_transmission_pallas(img[lane], carry_f[lane],
+                                                     interpret=True, **kw)
+        np.testing.assert_allclose(np.asarray(t[lane]), np.asarray(tr),
+                                   atol=1.2e-7, rtol=0)
+        np.testing.assert_allclose(np.asarray(tmin[lane]),
+                                   np.asarray(tminr), atol=1.2e-7, rtol=0)
+        np.testing.assert_allclose(np.asarray(cand[lane]),
+                                   np.asarray(candr), atol=1.2e-7, rtol=0)
+    # Dispatch-level ref path, same per-lane contract.
+    got = ops.fused_transmission_lanes(img, carry_f, mode="ref", **kw)
+    for lane in range(img.shape[0]):
+        want = ref.fused_transmission(img[lane], carry_f[lane],
+                                      algorithm="dcp", **kw)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g[lane], np.float32),
+                                       np.asarray(w, np.float32),
+                                       atol=1.2e-7, rtol=0)
+
+
+def test_lane_native_single_launch():
+    """The acceptance criterion of the lane-axis refactor: serving L lanes
+    traces exactly ONE pallas_call, vs L for per-lane kernel dispatch."""
+    n_lanes = 4
+    img, ids, carry_f, carry_i = _lane_inputs(n_lanes=n_lanes, b=2, h=8, w=8)
+    kw = dict(FUSED_KW)
+    A0 = jnp.ones((3,), jnp.float32)
+    k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+    init = jnp.asarray(False)
+    n_loop = ops.pallas_launch_count(
+        lambda f: [ops.fused_dehaze(f[lane], ids[lane], A0, k0, init,
+                                    mode="interpret", **kw)[0]
+                   for lane in range(n_lanes)], img)
+    n_lane = ops.pallas_launch_count(
+        lambda f: ops.fused_dehaze_lanes(f, ids, carry_f, carry_i,
+                                         mode="interpret", **kw)[0], img)
+    assert n_loop == n_lanes
+    assert n_lane == 1
+
+
+def test_fused_lanes_registry_bucket(monkeypatch, tmp_path):
+    """The lane-native kernel resolves its grid from the ``fused_lanes``
+    bucket — frames_per_block AND grid order — keyed on the lane count."""
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
+    assert tuning.get_params("fused_lanes", (4, 8, 16, 16)) == \
+        {"frames_per_block": 1, "grid_order": "lane_major"}
+    monkeypatch.setenv("REPRO_TUNE_FUSED_LANES",
+                       '{"frames_per_block": 2, "grid_order": "frame_major"}')
+    assert tuning.get_params("fused_lanes", (4, 8, 16, 16)) == \
+        {"frames_per_block": 2, "grid_order": "frame_major"}
+    # The single-stream buckets are unaffected by the lanes override.
+    assert tuning.get_params("fused_dcp", (8, 16, 16)) == \
+        {"frames_per_block": 1}
+    # The dispatch layer honors the override end-to-end (kernel runs with
+    # frame-major grid + 2-frame blocks and still matches the oracle).
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
+    img, ids, carry_f, carry_i = _lane_inputs(seed=53)
+    got = ops.fused_dehaze_lanes(img, ids, carry_f, carry_i, mode="auto",
+                                 **FUSED_KW)
+    want = ops.fused_dehaze_lanes(img, ids, carry_f, carry_i, mode="ref",
+                                  **FUSED_KW)
+    for g, w in zip(got[:4], want[:4]):
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err
+
+
+# --- bf16 halo planes feed the halo kernel directly --------------------------
+
+def test_fused_halo_accepts_bf16_planes():
+    """bf16 (pre-map, guide) halo inputs upcast in-VMEM: outputs are
+    bit-identical to upcasting outside the kernel (bf16 -> f32 is exact),
+    so `halo_dtype="bfloat16"` needs no boundary re-cast pass."""
+    img, pre_ext, guide_ext, halo = _halo_inputs()
+    valid = jnp.arange(pre_ext.shape[1]) >= halo          # top-edge shard
+    pre_bf = pre_ext.astype(jnp.bfloat16)
+    guide_bf = guide_ext.astype(jnp.bfloat16)
+    kw = dict(HALO_KW, algorithm="dcp", refine=True, topk=2)
+    got = fused_transmission_halo_pallas(img, pre_bf, guide_bf, valid,
+                                         interpret=True, **kw)
+    want = fused_transmission_halo_pallas(
+        img, pre_bf.astype(jnp.float32), guide_bf.astype(jnp.float32),
+        valid, interpret=True, **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                      np.asarray(w, np.float32))
+    # Dispatch-level: the XLA oracle path accepts bf16 planes too.
+    got_ref = ops.fused_transmission_halo(img, pre_bf, guide_bf, valid,
+                                          mode="ref", **kw)
+    for g, w in zip(got_ref, want):
+        err = np.max(np.abs(np.asarray(g, np.float32)
+                            - np.asarray(w, np.float32)))
+        assert err <= 1e-5, err

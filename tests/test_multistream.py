@@ -213,3 +213,148 @@ def test_step_cache_lru_bounded():
     assert builds == []                          # hit
     cache.get(("single", 0), lambda: builds.append(1) or "rebuilt")
     assert builds == [1]                         # miss -> rebuilt
+
+
+# --- satellite: lane-native path through serve_many --------------------------
+
+def test_serve_many_forced_vmap_matches_lane_native(monkeypatch):
+    """REPRO_LANE_NATIVE=0 forces the vmapped fused path; results match a
+    lane-native serve of the same streams (the env toggle is an A/B lever,
+    not a semantics switch)."""
+    cfg = DehazeConfig(kernel_mode="fused", gf_radius=2, update_period=2)
+    vids = _streams(3, [6, 9, 4], seed=7)
+
+    outs_native = {}
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    srv.serve_many([(f"s{i}", iter(v)) for i, v in enumerate(vids)],
+                   n_lanes=2,
+                   sink=lambda sid, fid, f: outs_native.setdefault(
+                       (sid, fid), f))
+
+    monkeypatch.setenv("REPRO_LANE_NATIVE", "0")
+    outs_vmap = {}
+    srv2 = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    rep = srv2.serve_many([(f"s{i}", iter(v)) for i, v in enumerate(vids)],
+                          n_lanes=2,
+                          sink=lambda sid, fid, f: outs_vmap.setdefault(
+                              (sid, fid), f))
+    assert rep.frames == 19 and rep.skipped == 0
+    assert outs_native.keys() == outs_vmap.keys()
+    for k in outs_native:
+        np.testing.assert_allclose(outs_native[k], outs_vmap[k], atol=ATOL,
+                                   rtol=0)
+
+
+def test_lane_native_env_force_requires_fused_config(monkeypatch):
+    """REPRO_LANE_NATIVE=1 on a config the megakernel cannot cover must
+    raise, not silently fall back — CI relies on this to know its smoke
+    run actually exercised the lane-native path."""
+    from repro.core import make_multi_stream_step, resolve_lane_native
+    monkeypatch.setenv("REPRO_LANE_NATIVE", "1")
+    with pytest.raises(ValueError, match="REPRO_LANE_NATIVE"):
+        resolve_lane_native(DehazeConfig(kernel_mode="ref"))
+    with pytest.raises(ValueError, match="REPRO_LANE_NATIVE"):
+        make_multi_stream_step(DehazeConfig(kernel_mode="fused",
+                                            algorithm="dcp",
+                                            recompute_t_with_final_a=True))
+    # ...and a fused-covered config resolves lane-native.
+    assert resolve_lane_native(DehazeConfig(kernel_mode="fused"))
+    monkeypatch.setenv("REPRO_LANE_NATIVE", "maybe")
+    with pytest.raises(ValueError, match="REPRO_LANE_NATIVE"):
+        resolve_lane_native(DehazeConfig(kernel_mode="fused"))
+
+
+# --- satellite: step cache keys on lane count and dispatch path --------------
+
+def test_step_cache_keys_on_lane_count_and_path():
+    """Regression: the bounded LRU used to key multi-stream steps on the
+    config alone, so a serve_many resize (or a lane-native toggle) reused
+    a stale compiled step. The key must include n_lanes and the
+    lane-native-vs-vmap path."""
+    from repro.stream.elastic import _LRUStepCache
+    cache = _LRUStepCache(maxsize=8)
+    cfg = DehazeConfig(kernel_mode="fused", gf_radius=2)
+    builds = []
+    for key in [("multi", cfg, 2, True), ("multi", cfg, 3, True),
+                ("multi", cfg, 2, False)]:
+        cache.get(key, lambda key=key: builds.append(key) or object())
+    assert len(builds) == 3 and len(cache) == 3
+    # Same (cfg, lanes, path) -> cache hit, no rebuild.
+    cache.get(("multi", cfg, 2, True), lambda: builds.append("again"))
+    assert "again" not in builds
+
+
+def test_serve_many_resize_between_calls():
+    """End-to-end form of the cache regression: the same server serving
+    the same config at two lane counts must produce correct per-stream
+    results both times (the second call must not reuse the 2-lane step)."""
+    cfg = DehazeConfig(kernel_mode="fused", gf_radius=2, update_period=2)
+    vids = _streams(3, [5, 6, 4], seed=11)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    rep2 = srv.serve_many([(f"a{i}", iter(v)) for i, v in enumerate(vids)],
+                          n_lanes=2)
+    rep3 = srv.serve_many([(f"b{i}", iter(v)) for i, v in enumerate(vids)],
+                          n_lanes=3)
+    assert rep2.frames == rep3.frames == 15
+    assert rep2.skipped == 0 and rep3.skipped == 0
+    for i, v in enumerate(vids):
+        np.testing.assert_allclose(np.asarray(srv.store.get(f"a{i}").A),
+                                   np.asarray(srv.store.get(f"b{i}").A),
+                                   atol=ATOL, rtol=0)
+
+
+# --- satellite: deadline-aware (EDF) admission -------------------------------
+
+def _admission_order(streams, n_lanes=1):
+    """Serve on a single lane and recover the admission order from the
+    order streams complete (with one lane, completion order == admission
+    order)."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    order = []
+    srv.serve_many(streams, n_lanes=n_lanes,
+                   sink=lambda sid, fid, f: order.append(sid)
+                   if sid not in order else None)
+    return order
+
+
+def test_admission_fifo_by_default():
+    vids = _streams(3, [4, 4, 4], seed=13)
+    order = _admission_order([(f"s{i}", iter(v)) for i, v in enumerate(vids)])
+    assert order == ["s0", "s1", "s2"]
+
+
+def test_admission_earliest_deadline_first():
+    """Deadlined streams preempt the queue in deadline order; deadline-less
+    streams go last (FIFO among themselves); equal deadlines tie-break by
+    arrival."""
+    vids = _streams(5, [4, 4, 4, 4, 4], seed=17)
+    entries = [("batch0", iter(vids[0])),              # no deadline, first
+               ("rt_late", iter(vids[1]), 50.0),
+               ("rt_soon", iter(vids[2]), 2.0),
+               ("rt_tie", iter(vids[3]), 50.0),        # ties rt_late, later
+               ("batch1", iter(vids[4]), None)]        # explicit None
+    order = _admission_order(entries)
+    assert order == ["rt_soon", "rt_late", "rt_tie", "batch0", "batch1"]
+
+
+def test_admission_deadline_streams_complete_and_match():
+    """EDF reordering changes only admission order: every stream's outputs
+    still match its sequential serve (per-lane state isolation holds)."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2, update_period=2)
+    vids = _streams(3, [6, 5, 7], seed=19)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    outs = {}
+    rep = srv.serve_many(
+        [("a", iter(vids[0]), 9.0), ("b", iter(vids[1]), 1.0),
+         ("c", iter(vids[2]))], n_lanes=2,
+        sink=lambda sid, fid, f: outs.setdefault((sid, fid), f))
+    assert rep.frames == 18 and rep.skipped == 0
+    for sid, v in zip("abc", vids):
+        ref_srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+        ref_outs = {}
+        ref_srv.serve(iter(v), stream_id=sid,
+                      sink=lambda fid, f: ref_outs.setdefault(fid, f))
+        for fid, f in ref_outs.items():
+            np.testing.assert_allclose(outs[(sid, fid)], f, atol=ATOL,
+                                       rtol=0)

@@ -1,12 +1,16 @@
 """Cross-path differential-test matrix for the production dehazing configs.
 
-Sweeps {dcp, cap} x {topk 1, 4} x {staged, fused} x {n_h 1, 2} x
-{n_w 1, 2} x {single-stream, 4-lane multi-stream} and asserts
+Sweeps {dcp, cap} x {topk 1, 4} x {staged, fused, lane_native} x
+{n_h 1, 2} x {n_w 1, 2} x {single-stream, lanes 1, 4} and asserts
 J / t / A / AtmoState agreement against the per-stage ref-oracle chain —
 including all-padding lanes and mesh-edge shards. Every serving config is
 fused-covered now (``supports_fused`` has no topk / sharding gates), so
 this matrix is the contract that future kernel work cannot silently fork
-the fused and staged semantics.
+the fused and staged semantics. The lane-native cells additionally pin
+the multi-stream refactor's parity bar: per lane, the megakernel with the
+lane axis folded into its grid must equal the ``jax.vmap``-of-fused path
+(bit-for-bit on the XLA-oracle substrate; to 2 ulp across the separately
+compiled interpret-mode programs).
 
 Single-device and multi-stream cells run in-process (under
 ``REPRO_KERNEL_MODE=interpret`` they exercise the actual Pallas kernel
@@ -56,29 +60,13 @@ def _oracle_cfg(algorithm: str, topk: int) -> DehazeConfig:
 
 
 def _frames(seed=17, b=4, h=32, w=32):
-    """Tie-stable parity frames: a seeded permutation gray ramp (all pixel
-    levels distinct, separation 1/(B*H*W)) with fixed per-channel scales
-    (1.0, 0.9, 0.8).
-
-    A top-k selection is discontinuous in t, and the fused kernel and the
-    oracle compile the t-map in *different XLA programs* — ulp-level
-    FMA/fusion differences are legal there. Differential-testing the
-    selection therefore requires data whose selection boundary is
-    separated: with this ramp, both premaps (DCP ``min_c scale_c·g/A_c``
-    and CAP ``w0 + w1·g + w2·s``) are strictly monotone in the ramp for
-    *any* atmospheric light, distinct t values are ~1e-3 apart (orders of
-    magnitude above cross-program round-off), and every exact t tie is a
-    min-filter plateau *copy* — bit-equal within each program, resolved by
-    flat index identically in both. Uniform random frames do hit
-    coincidental 1-ulp boundary ties (observed: a 0.03 A fork from one
-    flipped pick), which are legitimate cross-path behavior, not bugs.
-    The channel scales keep R/G/B distinct at every pixel so channel
-    mix-ups in the candidate gather or the EMA still show.
-    """
-    r = np.random.default_rng(seed)
-    g = (r.permutation(b * h * w).reshape(b, h, w) + 1.0) / (b * h * w + 1.0)
-    rgb = np.stack([g, 0.9 * g, 0.8 * g], axis=-1)
-    return jnp.asarray(rgb.astype(np.float32))
+    """Tie-stable parity frames — ``conftest.ramp_frames``, THE shared
+    recipe for differential-testing discontinuous top-k selections across
+    separately compiled programs (see its docstring for why uniform random
+    frames are unusable here: observed a 0.03 A fork from one 1-ulp
+    boundary tie flipping a pick)."""
+    from conftest import ramp_frames
+    return ramp_frames(seed, b, h=h, w=w)
 
 
 def _assert_output_close(got, want, tag=""):
@@ -136,7 +124,21 @@ def test_single_device_parity_warm_state_chain(algorithm, path):
 # Multi-stream cells (4 lanes, incl. an all-padding lane)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("path", PATHS)
+# The lane axis has two device realizations: the single-stream chain under
+# jax.vmap ("staged"/"fused"), and the lane-native megakernel with the
+# lane axis folded into the pallas grid ("lane_native").
+MULTI_PATHS = PATHS + ["lane_native"]
+
+
+def _multi_step(algorithm, topk, path):
+    if path == "lane_native":
+        return make_multi_stream_step(_cfg(algorithm, topk, "fused"),
+                                      lane_native=True)
+    return make_multi_stream_step(_cfg(algorithm, topk, path),
+                                  lane_native=False)
+
+
+@pytest.mark.parametrize("path", MULTI_PATHS)
 @pytest.mark.parametrize("topk", TOPKS)
 @pytest.mark.parametrize("algorithm", ALGORITHMS)
 def test_multistream_parity(algorithm, topk, path):
@@ -154,7 +156,7 @@ def test_multistream_parity(algorithm, topk, path):
     states = [init_atmo_state() for _ in range(n_lanes)]
     packed = pack_atmo_states(states)
 
-    multi = make_multi_stream_step(_cfg(algorithm, topk, path))
+    multi = _multi_step(algorithm, topk, path)
     out = multi(frames, ids, packed)
 
     oracle = make_dehaze_step(_oracle_cfg(algorithm, topk))
@@ -180,6 +182,73 @@ def test_multistream_parity(algorithm, topk, path):
                                   np.asarray(packed.A[pad]))
     assert int(out.state.last_update[pad]) == int(packed.last_update[pad])
     assert not bool(out.state.initialized[pad])
+
+
+@pytest.mark.parametrize("n_lanes", [1, 4])
+@pytest.mark.parametrize("topk", TOPKS)
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_multistream_lane_native_matches_vmapped_fused(algorithm, topk,
+                                                       n_lanes):
+    """The lane-axis refactor's parity bar: the lane-native megakernel
+    equals ``jax.vmap`` of the fused single-stream step per lane — for
+    lane counts 1 and 4, including an all-padding lane (and, at
+    ``n_lanes == 1``, a batch that is *entirely* padding in a second
+    step). On the XLA-oracle substrate the two paths are bit-identical;
+    on the interpret substrate (the CI kernel-parity job) the separately
+    compiled programs may differ by FMA reassociation, bounded at 2 ulp.
+    Integer state is exact everywhere.
+    """
+    from repro.kernels.ops import resolve_mode
+    float_tol = 0.0 if resolve_mode("fused") == "ref" else 1.2e-7
+    b = 4
+    frames = jnp.stack([_frames(seed=60 + lane, b=b)
+                        for lane in range(n_lanes)])
+    if n_lanes == 1:
+        ids = jnp.arange(b, dtype=jnp.int32)[None]
+    else:
+        ids = jnp.stack(
+            [jnp.arange(lane * 7, lane * 7 + b, dtype=jnp.int32)
+             for lane in range(n_lanes - 1)]
+            + [jnp.full((b,), -1, jnp.int32)])
+    packed = pack_atmo_states([init_atmo_state() for _ in range(n_lanes)])
+
+    lane_native = _multi_step(algorithm, topk, "lane_native")
+    vmapped = _multi_step(algorithm, topk, "fused")
+
+    def check(got, want, tag):
+        for field in ("frames", "transmission", "atmo_light"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(got, field)),
+                np.asarray(getattr(want, field)), atol=float_tol, rtol=0,
+                err_msg=f"{field} {tag}")
+        np.testing.assert_allclose(np.asarray(got.state.A),
+                                   np.asarray(want.state.A), atol=float_tol,
+                                   rtol=0, err_msg=f"state.A {tag}")
+        np.testing.assert_array_equal(np.asarray(got.state.last_update),
+                                      np.asarray(want.state.last_update),
+                                      err_msg=tag)
+        np.testing.assert_array_equal(np.asarray(got.state.initialized),
+                                      np.asarray(want.state.initialized),
+                                      err_msg=tag)
+
+    tag = f"{algorithm}/topk{topk}/L{n_lanes}"
+    got = lane_native(frames, ids, packed)
+    want = vmapped(frames, ids, packed)
+    check(got, want, tag)
+
+    # Chain a second batch through the returned states: a state fork
+    # between the two realizations would compound here. At n_lanes == 1
+    # the second batch is all padding — the whole program must be a state
+    # no-op on both paths.
+    ids2 = jnp.full_like(ids, -1) if n_lanes == 1 else ids + b
+    got2 = lane_native(frames, ids2, got.state)
+    want2 = vmapped(frames, ids2, want.state)
+    check(got2, want2, tag + "/chained")
+    if n_lanes == 1:
+        np.testing.assert_array_equal(np.asarray(got2.state.A),
+                                      np.asarray(got.state.A))
+        np.testing.assert_array_equal(np.asarray(got2.state.last_update),
+                                      np.asarray(got.state.last_update))
 
 
 # ---------------------------------------------------------------------------
