@@ -7,7 +7,6 @@ expectations for the TPU kernels (bytes-bound estimates at v5e HBM BW).
 """
 from __future__ import annotations
 
-import os
 import time
 from typing import List, Tuple
 
@@ -15,11 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import env as _env
 from repro.kernels import ops
 
 HBM_BW = 819e9
 SHAPES = [(8, 240, 320), (4, 480, 640), (2, 576, 1024)]
-if os.environ.get("REPRO_BENCH_SMOKE"):        # tiny shapes for CI smoke
+if _env.bench_smoke():                         # tiny shapes for CI smoke
     SHAPES = [(2, 32, 40)]
 
 
@@ -285,8 +285,7 @@ def _multi_lane_rows(n_lanes: int):
                             make_multi_stream_step)
     from repro.kernels import ops
 
-    b, h, w = (2, 32, 40) if os.environ.get("REPRO_BENCH_SMOKE") \
-        else (2, 120, 160)
+    b, h, w = (2, 32, 40) if _env.bench_smoke() else (2, 120, 160)
     tag = f"{n_lanes}x{b}x{h}x{w}"
     r = np.random.default_rng(0)
     frames = jnp.asarray(r.random((n_lanes, b, h, w, 3), np.float32))

@@ -14,6 +14,9 @@ SUITES = {
     "fig8": fig8_atmolight.rows,
     "kernels": kernels_bench.rows,
     "roofline": roofline_report.rows,
+    # Ramping-load subset of table1 (elastic lane ladder vs fixed-max
+    # fleet + switch latency) — cheap enough for the CI smoke job.
+    "autoscale": table1_throughput.autoscale_rows,
 }
 
 

@@ -20,7 +20,6 @@ pays L times, which is exactly the serving-layer win deployment papers
 """
 from __future__ import annotations
 
-import os
 import time
 from typing import List, Tuple
 
@@ -29,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DehazeConfig, init_atmo_state, make_dehaze_step
+from repro.core import env as _env
 from repro.data import HazeVideoSpec, generate_haze_video
-from repro.stream import ElasticServer
+from repro.stream import ElasticServer, ScalePolicy, StreamRequest
 
 RESOLUTIONS = {"320x240": (240, 320), "640x480": (480, 640),
                "1024x576": (576, 1024)}
@@ -109,9 +109,9 @@ def bench_multi_stream(algo: str, h: int, w: int, n_streams: int,
     vids = _stream_videos(n_streams, h, w, n_frames)
     cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
     srv = ElasticServer(cfg, batch=batch, timeout_s=5.0)
-    srv.serve_many([(f"warm{i}", iter(v.hazy[:batch]))
+    srv.serve_many([StreamRequest(f"warm{i}", iter(v.hazy[:batch]))
                     for i, v in enumerate(vids)])              # compile
-    rep = srv.serve_many([(f"cam{i}", iter(v.hazy))
+    rep = srv.serve_many([StreamRequest(f"cam{i}", iter(v.hazy))
                           for i, v in enumerate(vids)])
     return rep.aggregate_fps
 
@@ -121,7 +121,7 @@ def multi_stream_rows(algo: str = "dcp") -> List[Tuple[str, float, str]]:
 
     The derived column reports ``<multi fps>(<multi/seq ratio>x)``."""
     res_name, (h, w) = MULTI_RESOLUTION
-    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    smoke = _env.bench_smoke()
     n_frames = 16 if smoke else 24
     out = []
     for n_streams in MULTI_LANES:
@@ -139,6 +139,68 @@ def multi_stream_rows(algo: str = "dcp") -> List[Tuple[str, float, str]]:
     return out
 
 
+def autoscale_rows(algo: str = "dcp") -> List[Tuple[str, float, str]]:
+    """Ramping load through the elastic lane ladder vs a fixed-max fleet.
+
+    The workload is a burst of short clips (forces a grow: every lane
+    full, queue deep) followed by a long-clip tail (forces a shrink: queue
+    empty, occupancy below the rung). Rows:
+
+      autoscale-ramp  aggregate fps under the ladder; the derived column
+                      appends the committed switch count, which the
+                      serve-smoke CI leg asserts is >= 2 (one grow + one
+                      shrink).
+      fixedmax-ramp   the same streams at a fixed max-lane fleet — the
+                      throughput ceiling autoscaling should track while
+                      using fewer padded lanes on the tail.
+      switch-latency  mean serve-thread stall per committed rung switch
+                      (state repack + step swap; never a trace — the
+                      ladder is pre-warmed off-thread).
+    """
+    from repro.stream import ladder_rungs
+
+    res_name, (h, w) = MULTI_RESOLUTION
+    smoke = _env.bench_smoke()
+    cap = 4 if smoke else 8
+    short, long_ = (8, 32) if smoke else (16, 64)
+    lengths = [short] * (cap + 2) + [long_] * 2
+    pol = ScalePolicy(rungs=(2, 4, 8), grow_pending=1, dwell_up=1,
+                      dwell_down=2, evict_tardy_after=None)
+    cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
+    srv = ElasticServer(cfg, batch=8, timeout_s=5.0)
+
+    def ramp(prefix: str, seed0: int):
+        vids = [generate_haze_video(HazeVideoSpec(
+            height=h, width=w, n_frames=n, seed=seed0 + i, a_noise=0.0))
+            for i, n in enumerate(lengths)]
+        return [StreamRequest(f"{prefix}{i}", iter(v.hazy))
+                for i, v in enumerate(vids)]
+
+    # Prime every rung's executable so the rows time steady-state serving,
+    # not first-call compiles (the ladder warm thread then cache-hits).
+    warm = generate_haze_video(HazeVideoSpec(
+        height=h, width=w, n_frames=8, seed=49, a_noise=0.0))
+    for r in ladder_rungs(pol.rungs, cap):
+        srv.serve_many([StreamRequest(f"warm{r}", iter(warm.hazy))],
+                       n_lanes=r)
+
+    rep_auto = srv.serve_many(ramp("a", 100), n_lanes=cap, autoscale=True,
+                              policy=pol)
+    rep_fix = srv.serve_many(ramp("f", 300), n_lanes=cap)
+    out = [
+        (f"table1/autoscale-ramp-{algo}/{res_name}",
+         1e6 / rep_auto.aggregate_fps,
+         f"{rep_auto.aggregate_fps:.2f}fps({rep_auto.ladder_switches}sw)"),
+        (f"table1/fixedmax-ramp-{algo}/{res_name}",
+         1e6 / rep_fix.aggregate_fps, f"{rep_fix.aggregate_fps:.2f}fps"),
+    ]
+    if rep_auto.ladder_switches:
+        mean_s = rep_auto.switch_wall_s / rep_auto.ladder_switches
+        out.append((f"table1/switch-latency-{algo}/{res_name}",
+                    mean_s * 1e6, f"{mean_s * 1e3:.2f}ms/switch"))
+    return out
+
+
 def rows() -> List[Tuple[str, float, str]]:
     out = []
     for algo in ("dcp", "cap"):
@@ -151,6 +213,7 @@ def rows() -> List[Tuple[str, float, str]]:
                 out.append((f"table1/{nw}N-{algo}/{res_name}",
                             1e6 / fps, f"{fps:.2f}fps"))
     out.extend(multi_stream_rows())
+    out.extend(autoscale_rows())
     return out
 
 

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core import DehazeConfig
 from repro.data import HazeVideoSpec, generate_haze_video
-from repro.stream import ElasticServer, StreamStateStore
+from repro.stream import ElasticServer, StreamRequest, StreamStateStore
 
 video = generate_haze_video(HazeVideoSpec(height=120, width=160,
                                           n_frames=48, a_noise=0.0))
@@ -47,7 +47,7 @@ cameras = [generate_haze_video(HazeVideoSpec(
     a_base=(0.72 + 0.05 * i,) * 3)) for i in range(4)]
 
 fleet = ElasticServer(cfg, batch=8, timeout_s=0.02)
-mrep = fleet.serve_many([(f"cam{i}", iter(v.hazy))
+mrep = fleet.serve_many([StreamRequest(f"cam{i}", iter(v.hazy))
                          for i, v in enumerate(cameras)], n_lanes=2)
 print(f"fleet: {mrep.frames} frames from {mrep.admissions} streams over "
       f"{mrep.n_lanes} lanes in {mrep.ticks} ticks "

@@ -1,0 +1,129 @@
+"""Consolidated ``REPRO_*`` environment resolution.
+
+Every runtime knob the repo reads from the environment goes through one
+typed, validated accessor here — call sites (`kernels.ops`,
+`kernels.tuning`, `core.pipeline`, `stream.elastic`, the benchmark
+drivers) never touch ``os.environ`` directly. Unknown or malformed values
+raise ``ValueError`` (the ``resolve_mode`` precedent: a typo like
+``REPRO_KERNEL_MODE=Pallas`` must not silently select a different code
+path), with one documented exception: ``REPRO_TUNE_<OP>`` overrides are
+best-effort performance hints, so malformed JSON there is ignored rather
+than taking a serving fleet down over a tuning experiment.
+
+Knobs:
+
+  REPRO_KERNEL_MODE      execution substrate / pipeline mode override
+  REPRO_LANE_NATIVE      force the lane-native megakernel on (1) or off (0)
+  REPRO_STEP_CACHE_SIZE  bounded LRU size of the jitted-step cache
+  REPRO_KERNEL_TUNING    path of the persisted kernel-tuning table
+  REPRO_TUNE_<OP>        per-op JSON tile-parameter override
+  REPRO_BENCH_SMOKE      benchmark drivers use tiny CI shapes when truthy
+
+``snapshot()`` / ``restore()`` capture and reinstate the full ``REPRO_*``
+environment for test isolation (monkeypatch-free setup/teardown of
+multi-knob scenarios).
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+# Execution substrates and pipeline-level modes (see ``kernels.ops``):
+# "fused" selects the megakernel path, "auto" defers to the backend.
+SUBSTRATES = ("ref", "pallas", "interpret")
+KERNEL_MODES = SUBSTRATES + ("fused", "auto")
+
+_TUNING_DEFAULT_PATH = Path("results") / "kernel_tuning.json"
+
+
+def kernel_mode() -> str:
+    """``REPRO_KERNEL_MODE``: a mode from :data:`KERNEL_MODES`, or ``""``
+    when unset. Unknown values raise."""
+    env = os.environ.get("REPRO_KERNEL_MODE", "")
+    if env and env not in KERNEL_MODES:
+        raise ValueError(
+            f"REPRO_KERNEL_MODE={env!r} is not a valid kernel mode; "
+            f"expected one of {sorted(KERNEL_MODES)}, or unset it")
+    return env
+
+
+def lane_native() -> Optional[bool]:
+    """``REPRO_LANE_NATIVE``: ``True`` (force lane-native), ``False``
+    (force the vmapped path) or ``None`` when unset. Unknown values raise;
+    the fused-coverage check the force implies lives with the config, in
+    ``core.pipeline.resolve_lane_native``."""
+    env = os.environ.get("REPRO_LANE_NATIVE", "")
+    if env not in ("", "0", "1"):
+        raise ValueError(
+            f"REPRO_LANE_NATIVE={env!r} is not a valid override; expected "
+            "'0' (force vmap), '1' (force lane-native) or unset")
+    return None if env == "" else env == "1"
+
+
+def step_cache_size(default: int = 8) -> int:
+    """``REPRO_STEP_CACHE_SIZE``: max entries in the bounded LRU jitted-step
+    cache. Must parse as a positive integer."""
+    env = os.environ.get("REPRO_STEP_CACHE_SIZE", "")
+    if not env:
+        return default
+    try:
+        size = int(env)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_STEP_CACHE_SIZE={env!r} is not an integer") from None
+    if size < 1:
+        raise ValueError(
+            f"REPRO_STEP_CACHE_SIZE must be >= 1, got {size}")
+    return size
+
+
+def tuning_table_path() -> Path:
+    """``REPRO_KERNEL_TUNING``: path of the persisted tuning table."""
+    return Path(os.environ.get("REPRO_KERNEL_TUNING",
+                               str(_TUNING_DEFAULT_PATH)))
+
+
+def tune_override(op: str) -> Dict[str, Any]:
+    """``REPRO_TUNE_<OP>``: JSON object of tile-parameter overrides for
+    ``op``, ``{}`` when unset. Malformed JSON (or a non-object) is
+    *ignored* — tuning overrides are performance hints, never allowed to
+    turn a typo into a serving outage (unlike the mode knobs above)."""
+    env = os.environ.get(f"REPRO_TUNE_{op.upper()}")
+    if not env:
+        return {}
+    try:
+        params = json.loads(env)
+    except ValueError:
+        return {}
+    return params if isinstance(params, dict) else {}
+
+
+def bench_smoke() -> bool:
+    """``REPRO_BENCH_SMOKE``: benchmark drivers shrink to CI smoke shapes
+    when set to anything non-empty."""
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+# ---------------------------------------------------------------------------
+# Test isolation
+# ---------------------------------------------------------------------------
+
+def snapshot() -> Dict[str, str]:
+    """Current values of every ``REPRO_*`` variable (for :func:`restore`)."""
+    return {k: v for k, v in os.environ.items() if k.startswith("REPRO_")}
+
+
+def restore(snap: Dict[str, str]) -> None:
+    """Reinstate a :func:`snapshot`: variables added since are removed,
+    changed ones reset — the inverse of any ``REPRO_*`` mutation batch."""
+    for k in [k for k in os.environ if k.startswith("REPRO_")]:
+        if k not in snap:
+            del os.environ[k]
+    os.environ.update(snap)
+
+
+__all__ = ["SUBSTRATES", "KERNEL_MODES", "kernel_mode", "lane_native",
+           "step_cache_size", "tuning_table_path", "tune_override",
+           "bench_smoke", "snapshot", "restore"]

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 from typing import Optional, Tuple
 
 import jax
@@ -26,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import algorithms as alg
 from repro.core import compat
+from repro.core import env as _env
 from repro.core import spatial
 from repro.core.config import DehazeConfig
 from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
@@ -102,12 +102,8 @@ def resolve_lane_native(cfg: DehazeConfig) -> bool:
     """
     cfg = cfg.validate()
     fused_ok = cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
-    env = os.environ.get("REPRO_LANE_NATIVE", "")
-    if env not in ("", "0", "1"):
-        raise ValueError(
-            f"REPRO_LANE_NATIVE={env!r} is not a valid override; expected "
-            "'0' (force vmap), '1' (force lane-native) or unset")
-    if env == "1":
+    forced = _env.lane_native()             # validated; raises on junk
+    if forced:
         if not fused_ok:
             raise ValueError(
                 "REPRO_LANE_NATIVE=1 requires kernel_mode='fused' and a "
@@ -115,7 +111,7 @@ def resolve_lane_native(cfg: DehazeConfig) -> bool:
                 f"got kernel_mode={cfg.kernel_mode!r}, "
                 f"algorithm={cfg.algorithm!r}")
         return True
-    if env == "0":
+    if forced is not None:
         return False
     return fused_ok
 

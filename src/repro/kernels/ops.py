@@ -17,12 +17,12 @@ pipeline runs on the CPU CI container and on a real pod unchanged.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Literal, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import env as _env
 from repro.kernels import ref as _ref
 from repro.kernels import tuning
 from repro.kernels.dark_channel import dark_channel_pallas, min_filter_2d_pallas
@@ -38,8 +38,8 @@ from repro.kernels.ref import CAP_COEFFS
 
 Mode = Literal["auto", "ref", "pallas", "interpret", "fused"]
 
-SUBSTRATES = ("ref", "pallas", "interpret")
-MODES = SUBSTRATES + ("fused", "auto")
+SUBSTRATES = _env.SUBSTRATES
+MODES = _env.KERNEL_MODES
 
 
 def resolve_mode(mode: Mode = "auto") -> str:
@@ -50,18 +50,15 @@ def resolve_mode(mode: Mode = "auto") -> str:
     names a substrate, else Pallas on TPU and the XLA oracle elsewhere.
 
     Unknown values — in the argument or in ``REPRO_KERNEL_MODE`` — raise
-    ``ValueError``. They used to fall straight through every dispatch
-    wrapper's ``m == "ref"`` check into the compiled-Pallas branch, so a
-    typo like ``REPRO_KERNEL_MODE=Pallas`` silently ran compiled kernels.
+    ``ValueError`` (validation lives in ``core.env.kernel_mode``). They
+    used to fall straight through every dispatch wrapper's ``m == "ref"``
+    check into the compiled-Pallas branch, so a typo like
+    ``REPRO_KERNEL_MODE=Pallas`` silently ran compiled kernels.
     """
     if mode not in MODES:
         raise ValueError(
             f"unknown kernel mode {mode!r}; expected one of {sorted(MODES)}")
-    env = os.environ.get("REPRO_KERNEL_MODE", "")
-    if env and env not in MODES:
-        raise ValueError(
-            f"REPRO_KERNEL_MODE={env!r} is not a valid kernel mode; "
-            f"expected one of {sorted(MODES)}, or unset it")
+    env = _env.kernel_mode()
     default = "pallas" if jax.default_backend() == "tpu" else "ref"
     if env == "auto":                    # explicit "auto" == unset
         env = ""

@@ -26,6 +26,8 @@ from typing import Any, Callable, Dict, Iterable, Optional
 
 import jax
 
+from repro.core import env as _env
+
 DEFAULTS: Dict[str, Dict[str, Any]] = {
     # Per-algorithm buckets: CAP's pre-map (HSV depth, no divide-by-A) has a
     # different VMEM/FLOP profile, so its sweet spot is tuned separately.
@@ -49,12 +51,8 @@ DEFAULTS: Dict[str, Dict[str, Any]] = {
     "atmolight_topk": {"tile_h": 0},     # k-row grid-carry fold tile
 }
 
-_ENV_PATH = "REPRO_KERNEL_TUNING"
-_DEFAULT_PATH = Path("results") / "kernel_tuning.json"
-
-
 def table_path() -> Path:
-    return Path(os.environ.get(_ENV_PATH, str(_DEFAULT_PATH)))
+    return _env.tuning_table_path()
 
 
 def shape_bucket(shape: Iterable[int]) -> str:
@@ -102,12 +100,7 @@ def get_params(op: str, shape: Iterable[int]) -> Dict[str, Any]:
     params = dict(DEFAULTS.get(op, {}))
     table = load_table()
     params.update(table.get(op, {}).get(shape_bucket(shape), {}))
-    env = os.environ.get(f"REPRO_TUNE_{op.upper()}")
-    if env:
-        try:
-            params.update(json.loads(env))
-        except ValueError:
-            pass                         # malformed override -> ignore
+    params.update(_env.tune_override(op))   # malformed override -> ignored
     return params
 
 

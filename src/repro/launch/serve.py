@@ -11,6 +11,12 @@ Single stream:
 Multi-tenant (N videos continuously batched over L device lanes):
   PYTHONPATH=src python -m repro.launch.serve --streams 4 --lanes 4 \
       --resolution 120p --frames 32
+
+Elastic autoscaling (lane count walks a precompiled ladder under load;
+--ramp staggers stream lengths so the burst forces a grow and the long
+tail a shrink — the CI smoke leg asserts the switches happened):
+  PYTHONPATH=src python -m repro.launch.serve --streams 6 --lanes 4 \
+      --autoscale --ladder 2,4 --ramp --expect-switches 2
 """
 from __future__ import annotations
 
@@ -22,21 +28,24 @@ import numpy as np
 
 from repro.core import DehazeConfig
 from repro.data import HazeVideoSpec, generate_haze_video
-from repro.stream import ElasticServer
+from repro.stream import (ElasticServer, ScalePolicy, StreamRequest,
+                          ladder_rungs)
 
 RESOLUTIONS = {"120p": (120, 160), "240p": (240, 320), "480p": (480, 640),
                "576p": (576, 1024)}
 
 
-def _make_videos(n: int, h: int, w: int, frames: int):
+def _make_videos(n: int, h: int, w: int, frames, seed0: int = 100):
     """N synthetic videos with distinct scenes + base atmospheric lights,
-    so each lane exercises its own coherence trajectory."""
+    so each lane exercises its own coherence trajectory. ``frames`` is an
+    int or a per-stream list (the --ramp workload)."""
+    lengths = frames if isinstance(frames, (list, tuple)) else [frames] * n
     vids = []
     for i in range(n):
         base = 0.75 + 0.05 * (i % 4)
         vids.append(generate_haze_video(HazeVideoSpec(
-            height=h, width=w, n_frames=frames, seed=100 + i, a_noise=0.0,
-            a_base=(base, base, min(1.0, base + 0.02)))))
+            height=h, width=w, n_frames=lengths[i], seed=seed0 + i,
+            a_noise=0.0, a_base=(base, base, min(1.0, base + 0.02)))))
     return vids
 
 
@@ -63,7 +72,15 @@ def _serve_single(args, cfg, h: int, w: int) -> int:
 
 
 def _serve_many(args, cfg, h: int, w: int) -> int:
-    vids = _make_videos(args.streams, h, w, args.frames)
+    if args.ramp:
+        # Burst of short clips, then long tails: queue depth forces a
+        # ladder grow, the drained tail forces a shrink.
+        n_long = min(2, args.streams)
+        lengths = [max(args.batch, args.frames // 4)] \
+            * (args.streams - n_long) + [args.frames] * n_long
+    else:
+        lengths = [args.frames] * args.streams
+    vids = _make_videos(args.streams, h, w, lengths)
     lanes = args.lanes if args.lanes > 0 else args.streams
     srv = ElasticServer(cfg, batch=args.batch,
                         timeout_s=args.timeout_ms / 1e3)
@@ -72,18 +89,40 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
     def sink(sid: str, fid: int, _f) -> None:
         counts[sid] = counts.get(sid, 0) + 1
 
+    policy = None
+    if args.autoscale:
+        rungs = tuple(int(r) for r in args.ladder.split(","))
+        policy = ScalePolicy(rungs=rungs, dwell_up=1, dwell_down=2)
+        # Prime every rung's executable so the smoke run's switches gate
+        # on load, not on compile latency racing short streams.
+        warm = _make_videos(1, h, w, args.batch, seed0=90)[0]
+        for r in ladder_rungs(rungs, lanes):
+            srv.serve_many([StreamRequest(f"_warm{r}", iter(warm.hazy))],
+                           n_lanes=r)
+
     rep = srv.serve_many(
-        [(f"cam{i}", iter(v.hazy)) for i, v in enumerate(vids)],
-        n_lanes=lanes, sink=sink)
+        [StreamRequest(f"cam{i}", iter(v.hazy))
+         for i, v in enumerate(vids)],
+        n_lanes=lanes, sink=sink, autoscale=args.autoscale, policy=policy)
     print(f"algorithm={args.algorithm} resolution={args.resolution} "
           f"streams={args.streams} lanes={rep.n_lanes} batch={args.batch}")
     print(f"frames={rep.frames} skipped={rep.skipped} ticks={rep.ticks} "
           f"aggregate_fps={rep.aggregate_fps:.2f} wall={rep.wall_s:.2f}s")
+    if args.autoscale:
+        print(f"ladder_switches={rep.ladder_switches} "
+              f"switch_wall={rep.switch_wall_s * 1e3:.1f}ms "
+              f"evictions={rep.evictions} final_lanes={rep.n_lanes}")
     for sid in sorted(rep.per_stream):
+        if sid.startswith("_warm"):
+            continue
         r = rep.per_stream[sid]
         a = np.asarray(srv.store.get(sid).A).round(3)
         print(f"  {sid}: frames={r.frames} emitted={counts.get(sid, 0)} "
               f"skipped={r.skipped} fps={r.fps:.2f} A={a}")
+    if rep.ladder_switches < args.expect_switches:
+        print(f"FAIL: expected >= {args.expect_switches} ladder switches, "
+              f"got {rep.ladder_switches}", file=sys.stderr)
+        sys.exit(1)
     return rep.skipped
 
 
@@ -102,6 +141,18 @@ def main() -> None:
                          "(default 0 = one lane per stream)")
     ap.add_argument("--workers", type=int, default=3)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic lane count: --lanes becomes the cap and "
+                         "the fleet walks the --ladder under load")
+    ap.add_argument("--ladder", default="4,8,16,32",
+                    help="comma-separated lane-count rungs (capped by "
+                         "--lanes)")
+    ap.add_argument("--ramp", action="store_true",
+                    help="stagger stream lengths (short burst + long "
+                         "tails) to force a grow and a shrink")
+    ap.add_argument("--expect-switches", type=int, default=0,
+                    help="exit nonzero unless at least this many ladder "
+                         "switches were committed (CI autoscale gating)")
     ap.add_argument("--timeout-ms", type=float, default=20.0,
                     help="monitor reader timeout (paper: 20 ms)")
     ap.add_argument("--update-period", type=int, default=8)

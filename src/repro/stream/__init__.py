@@ -1,14 +1,18 @@
 """Host-side streaming runtime (paper §3.2): spout → workers → monitor,
-plus the multi-tenant lane scheduler (continuous batching across videos)."""
+plus the multi-tenant lane scheduler (continuous batching across videos)
+and the elastic lane autoscaler (precompiled shape ladder)."""
+from repro.stream.autoscale import (DEFAULT_RUNGS, LaneAutoscaler,
+                                    ScalePolicy, ladder_rungs)
 from repro.stream.dispatcher import DispatchStats, StreamDispatcher
-from repro.stream.elastic import ElasticServer, ServeReport
+from repro.stream.elastic import ElasticServer
 from repro.stream.monitor import Monitor, MonitorStats
 from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
-                                    StreamReport)
+                                    ServeReport, StreamReport, StreamRequest)
 from repro.stream.spout import FrameBatch, Spout
 from repro.stream.state import StreamStateStore
 
 __all__ = ["Monitor", "MonitorStats", "Spout", "FrameBatch",
            "StreamDispatcher", "DispatchStats", "ElasticServer",
            "ServeReport", "StreamStateStore", "MultiStreamScheduler",
-           "MultiServeReport", "StreamReport"]
+           "MultiServeReport", "StreamReport", "StreamRequest",
+           "ScalePolicy", "LaneAutoscaler", "ladder_rungs", "DEFAULT_RUNGS"]

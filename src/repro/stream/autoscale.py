@@ -1,0 +1,219 @@
+"""Elastic lane autoscaling: a precompiled shape ladder with hysteresis.
+
+The paper's cluster "automatically scales up and down based on the actual
+workload" (§5). For the lane-batched serving runtime the unit of scale is
+the *lane count* of the fixed-shape ``(L, B, H, W, 3)`` device batch — but
+a new ``L`` is a new jitted program, and tracing it on the serve thread
+stalls every live stream for the length of a compile. This module borrows
+the elastic-network idiom (one max-capacity module, activate a sub-width
+at runtime — see OFA's ``dynamic_layers``): a small *ladder* of lane
+counts is precompiled through the bounded step cache, the scheduler walks
+the ladder from pending-queue depth and lane occupancy, and the other
+rungs are warmed on a background thread, so a ladder switch on the serve
+thread is a dictionary lookup — never a trace.
+
+Thrash control is hysteresis with distinct up/down conditions plus dwell
+counts:
+
+  * grow   — every lane occupied AND ≥ ``grow_pending`` streams queued,
+             sustained ``dwell_up`` consecutive ticks;
+  * shrink — zero streams queued AND occupancy fits the next rung down,
+             sustained ``dwell_down`` consecutive ticks.
+
+A load level that satisfies neither (e.g. all lanes busy, empty queue)
+holds the current rung, and the asymmetric dwells bias toward capacity:
+growing is cheap (idle padding lanes), shrinking too eagerly queues real
+frames. A target rung that has not finished warming simply defers the
+switch — the dwell state persists, and the switch lands on the first tick
+the rung is ready.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.normalize import init_atmo_state_lanes
+
+DEFAULT_RUNGS = (4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalePolicy:
+    """Ladder + hysteresis + eviction knobs for ``serve_many`` autoscaling.
+
+    ``rungs`` is the lane-count ladder (capped by the serve call's
+    ``n_lanes`` — see :func:`ladder_rungs`). ``evict_tardy_after`` is the
+    deadline-aware eviction dial: a stream that is past its deadline and
+    has held a lane for that many ticks while other streams queue is
+    checkpointed (cursor + EMA state) and requeued as deadline-less;
+    ``None`` disables eviction.
+    """
+    rungs: Tuple[int, ...] = DEFAULT_RUNGS
+    grow_pending: int = 1       # queued streams that constitute load
+    dwell_up: int = 2           # consecutive ticks of load before growing
+    dwell_down: int = 4         # consecutive ticks of slack before shrinking
+    evict_tardy_after: Optional[int] = 8
+
+
+def ladder_rungs(rungs: Sequence[int], max_lanes: int) -> Tuple[int, ...]:
+    """The ladder actually compiled: every rung below ``max_lanes`` plus
+    ``max_lanes`` itself (the cap is always reachable, and a cap below the
+    smallest rung degenerates to a single-rung ladder)."""
+    if max_lanes < 1:
+        raise ValueError(f"max_lanes must be >= 1, got {max_lanes}")
+    kept = sorted({int(r) for r in rungs if 0 < r < max_lanes})
+    return tuple(kept) + (max_lanes,)
+
+
+class LaneAutoscaler:
+    """Walks a precompiled ladder of lane counts for the scheduler.
+
+    ``step_factory(n_lanes)`` returns the jitted multi-stream step for a
+    rung (typically the bounded step cache in ``stream.elastic``). The
+    scheduler calls :meth:`observe` once per tick with the pending-queue
+    depth and lane occupancy; a non-``None`` return is a rung the
+    scheduler may switch to *right now* — it is already warm, so
+    :meth:`step_for` is a dictionary lookup. :meth:`commit` records the
+    switch and resets the hysteresis state.
+
+    Warming = actually *calling* the rung's step once with an all-padding
+    lane batch (``frame_id = -1`` everywhere, which the masked EMA paths
+    treat as identity), on a background thread: that populates the jit
+    executable cache for the exact serving avals, so the serve thread's
+    first real call at the new rung is a cache hit, not a trace.
+    """
+
+    def __init__(self, step_factory: Callable[[int], Callable],
+                 rungs: Sequence[int],
+                 policy: ScalePolicy = ScalePolicy(),
+                 state_factory: Callable[[int], Any] = init_atmo_state_lanes):
+        if not rungs:
+            raise ValueError("autoscale ladder must have at least one rung")
+        self.rungs = tuple(sorted(set(int(r) for r in rungs)))
+        if self.rungs[0] < 1:
+            raise ValueError(f"lane rungs must be >= 1, got {self.rungs}")
+        self.policy = policy
+        self._step_factory = step_factory
+        self._state_factory = state_factory
+        self._idx = 0
+        self._steps: Dict[int, Callable] = {}
+        self._ready: set = set()
+        self._lock = threading.Lock()
+        self._warm_thread: Optional[threading.Thread] = None
+        self._warm_errors: Dict[int, Exception] = {}
+        self._up = 0
+        self._down = 0
+        # One record per committed switch: {"from", "to", "wall_s"}.
+        self.switches: List[Dict[str, Any]] = []
+
+    # -- rungs -------------------------------------------------------------
+
+    @property
+    def rung(self) -> int:
+        """The active lane count."""
+        return self.rungs[self._idx]
+
+    def acquire_initial(self) -> Callable:
+        """The starting rung's step (built on the caller's thread — this
+        is serve start-up, not a mid-serve switch)."""
+        step = self._step_factory(self.rung)
+        with self._lock:
+            self._steps[self.rung] = step
+            self._ready.add(self.rung)
+        return step
+
+    def step_for(self, rung: int) -> Callable:
+        """Warm rung -> its step. A ``KeyError`` here means a caller tried
+        to switch to a rung that never finished warming — :meth:`observe`
+        never returns such a rung."""
+        with self._lock:
+            return self._steps[rung]
+
+    def is_ready(self, rung: int) -> bool:
+        with self._lock:
+            return rung in self._ready
+
+    # -- warming -----------------------------------------------------------
+
+    def ensure_warming(self, lane_batch_shape: Tuple[int, ...]) -> None:
+        """Start (once) the background thread that warms every other rung.
+
+        ``lane_batch_shape`` is the per-lane ``(B, H, W, 3)`` batch shape —
+        known at the first serve tick, which is when the scheduler calls
+        this. Warm failures (e.g. a rung whose compile OOMs) are recorded
+        and that rung is simply never offered."""
+        with self._lock:
+            if self._warm_thread is not None:
+                return
+            todo = [r for r in self.rungs if r not in self._ready]
+            self._warm_thread = threading.Thread(
+                target=self._warm, args=(tuple(lane_batch_shape), todo),
+                daemon=True, name="lane-ladder-warm")
+        self._warm_thread.start()
+
+    def _warm(self, shape: Tuple[int, ...], todo: Sequence[int]) -> None:
+        b, h, w, c = shape
+        for rung in todo:
+            try:
+                step = self._step_factory(rung)
+                frames = np.zeros((rung, b, h, w, c), np.float32)
+                ids = np.full((rung, b), -1, np.int32)
+                out = step(frames, ids, self._state_factory(rung))
+                jax.block_until_ready(out.state)
+                with self._lock:
+                    self._steps[rung] = step
+                    self._ready.add(rung)
+            except Exception as e:                    # pragma: no cover
+                with self._lock:
+                    self._warm_errors[rung] = e
+
+    def wait_warm(self, timeout: Optional[float] = None) -> bool:
+        """Block until the warm thread finishes (tests/benchmarks)."""
+        th = self._warm_thread
+        if th is not None:
+            th.join(timeout=timeout)
+            return not th.is_alive()
+        return True
+
+    # -- the ladder walk ---------------------------------------------------
+
+    def observe(self, pending: int, occupied: int) -> Optional[int]:
+        """One tick's load sample -> a warm rung to switch to, or ``None``.
+
+        Hysteresis: the grow condition (full lanes + queued streams) and
+        the shrink condition (empty queue + occupancy fitting the lower
+        rung) are disjoint, each must hold for its own dwell count, and
+        any tick that breaks a streak resets its counter.
+        """
+        p = self.policy
+        cur = self.rung
+        grow = (self._idx + 1 < len(self.rungs)
+                and pending >= p.grow_pending and occupied >= cur)
+        shrink = (self._idx > 0 and pending == 0
+                  and occupied <= self.rungs[self._idx - 1])
+        self._up = self._up + 1 if grow else 0
+        self._down = self._down + 1 if shrink else 0
+        if self._up >= p.dwell_up:
+            target = self.rungs[self._idx + 1]
+            if self.is_ready(target):
+                return target
+        if self._down >= p.dwell_down:
+            target = self.rungs[self._idx - 1]
+            if self.is_ready(target):
+                return target
+        return None
+
+    def commit(self, rung: int, wall_s: float = 0.0) -> None:
+        """Record a completed switch and reset the hysteresis streaks."""
+        prev = self.rung
+        self._idx = self.rungs.index(rung)
+        self._up = 0
+        self._down = 0
+        self.switches.append({"from": prev, "to": rung, "wall_s": wall_s})
+
+
+__all__ = ["ScalePolicy", "LaneAutoscaler", "ladder_rungs", "DEFAULT_RUNGS"]

@@ -22,8 +22,6 @@ those executables compile for every mesh we claim to support.
 from __future__ import annotations
 
 import collections
-import dataclasses
-import os
 import threading
 import time
 from typing import Callable, Iterable, List, Optional, Sequence
@@ -31,24 +29,16 @@ from typing import Callable, Iterable, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core import (DehazeConfig, init_atmo_state, make_dehaze_step,
+from repro.core import (DehazeConfig, make_dehaze_step,
                         make_multi_stream_step, resolve_lane_native)
-from repro.core.normalize import AtmoState
+from repro.core import env as _env
+from repro.stream.autoscale import LaneAutoscaler, ScalePolicy, ladder_rungs
 from repro.stream.dispatcher import StreamDispatcher
 from repro.stream.monitor import Monitor
 from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
-                                    StreamEntry)
-from repro.stream.spout import FrameBatch, Spout
+                                    ServeReport, StreamEntry, StreamReport)
+from repro.stream.spout import Spout
 from repro.stream.state import StreamStateStore
-
-
-@dataclasses.dataclass
-class ServeReport:
-    fps: float
-    frames: int
-    skipped: int
-    wall_s: float
-    n_workers: int
 
 
 class _LRUStepCache:
@@ -56,20 +46,33 @@ class _LRUStepCache:
     bound across config sweeps (every ``DehazeConfig`` variant pins its
     executable forever); this keeps the ``maxsize`` most recently used.
     Shared by the single-stream and the multi-stream (lane-vmapped) step
-    builders — the kind of step is part of the key."""
+    builders — the kind of step is part of the key.
+
+    ``hits``/``misses`` and ``built_by`` (key -> ident of the thread that
+    built the entry) exist so serving code can *assert* its compile
+    discipline: the autoscale tests check every ladder rung beyond the
+    starting one was built by the background warm thread, never the serve
+    thread."""
 
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._d: "collections.OrderedDict" = collections.OrderedDict()
         self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.built_by: dict = {}
 
     def get(self, key, build: Callable):
         with self._lock:
             if key in self._d:
                 self._d.move_to_end(key)
+                self.hits += 1
                 return self._d[key]
+            self.misses += 1
         step = build()                       # build outside the lock (slow)
         with self._lock:
+            if key not in self._d:
+                self.built_by[key] = threading.get_ident()
             self._d[key] = step
             self._d.move_to_end(key)
             while len(self._d) > self.maxsize:
@@ -80,8 +83,7 @@ class _LRUStepCache:
         return len(self._d)
 
 
-_STEP_CACHE = _LRUStepCache(
-    maxsize=int(os.environ.get("REPRO_STEP_CACHE_SIZE", "8")))
+_STEP_CACHE = _LRUStepCache(maxsize=_env.step_cache_size())
 
 
 def _cached_step(cfg: DehazeConfig):
@@ -161,27 +163,41 @@ class ElasticServer:
 
         cursor = start + dispatcher.stats.frames
         self.store.update(stream_id, state, cursor)
+        rep = StreamReport(stream_id=stream_id,
+                           frames=dispatcher.stats.frames,
+                           skipped=monitor.stats.skipped, wall_s=wall)
         return ServeReport(
-            fps=dispatcher.stats.frames / wall if wall > 0 else 0.0,
-            frames=dispatcher.stats.frames,
-            skipped=monitor.stats.skipped,
-            wall_s=wall, n_workers=self.n_workers)
+            per_stream={stream_id: rep},
+            frames=rep.frames, skipped=rep.skipped, wall_s=wall,
+            n_lanes=self.n_workers, ticks=dispatcher.stats.batches)
 
     def serve_many(self, streams: Sequence[StreamEntry],
                    n_lanes: Optional[int] = None,
                    sink: Optional[Callable[[str, int, np.ndarray], None]]
-                   = None) -> MultiServeReport:
+                   = None, autoscale: bool = False,
+                   policy: Optional[ScalePolicy] = None,
+                   clock: Callable[[], float] = time.time
+                   ) -> MultiServeReport:
         """Serve N videos concurrently via lane-batched continuous batching.
 
-        ``streams`` is a sequence of ``(stream_id, frames)`` pairs — or
-        ``(stream_id, frames, deadline)`` triples to request
-        earliest-deadline-first lane admission when lanes are scarce
-        (FIFO among deadline-less streams; see
-        ``MultiStreamScheduler``). All streams must share the same (H, W)
-        resolution (the lane batch has one fixed device shape).
-        ``n_lanes`` defaults to one lane per stream; with fewer lanes
-        than streams the scheduler queues the surplus and admits them as
-        lanes free up (eviction + reuse).
+        ``streams`` is a sequence of :class:`~repro.stream.StreamRequest`
+        (stream id, frames, optional ``deadline`` for
+        earliest-deadline-first admission when lanes are scarce, optional
+        ``priority``); legacy ``(stream_id, frames[, deadline])`` tuples
+        are coerced with a ``DeprecationWarning``. All streams must share
+        the same (H, W) resolution (the lane batch has one fixed device
+        shape). ``n_lanes`` defaults to one lane per stream; with fewer
+        lanes than streams the scheduler queues the surplus and admits
+        them as lanes free up (eviction + reuse).
+
+        ``autoscale=True`` makes the lane count elastic: ``n_lanes``
+        becomes the *cap*, the serve starts at the smallest rung of
+        ``policy.rungs`` (capped ladder — see ``autoscale.ladder_rungs``)
+        and walks up/down with queue depth under hysteresis, with the
+        other rungs precompiled on a background thread so a switch never
+        traces on the serve thread. Passing a ``policy`` without
+        ``autoscale`` still applies its ``evict_tardy_after``
+        deadline-aware eviction at a fixed lane count.
 
         With a fused-covered config the device step is the *lane-native*
         megakernel — all L lanes fold into one ``pallas_call`` grid, so a
@@ -204,10 +220,22 @@ class ElasticServer:
                                     wall_s=0.0, n_lanes=0, ticks=0,
                                     admissions=0)
         lanes = n_lanes if n_lanes is not None else len(streams)
-        step = _cached_multi_step(self.cfg, lanes,
-                                  resolve_lane_native(self.cfg))
+        lane_native = resolve_lane_native(self.cfg)
+        scaler = None
+        evict_after = policy.evict_tardy_after if policy is not None else None
+        if autoscale:
+            pol = policy if policy is not None else ScalePolicy()
+            evict_after = pol.evict_tardy_after
+            scaler = LaneAutoscaler(
+                lambda n: _cached_multi_step(self.cfg, n, lane_native),
+                ladder_rungs(pol.rungs, lanes), policy=pol)
+            step = scaler.acquire_initial()
+            lanes = scaler.rung
+        else:
+            step = _cached_multi_step(self.cfg, lanes, lane_native)
         scheduler = MultiStreamScheduler(
             step, self.store, n_lanes=lanes,
             batch=self.batch, timeout_s=self.timeout_s,
-            max_in_flight=self.max_in_flight)
+            max_in_flight=self.max_in_flight, autoscaler=scaler,
+            evict_tardy_after=evict_after, clock=clock)
         return scheduler.run(streams, sink=sink)

@@ -1,0 +1,289 @@
+"""Elastic lane autoscaling: ladder hysteresis, state-preserving rung
+switches, deadline-aware eviction, and the no-trace-on-serve-thread
+compile discipline.
+
+The load-bearing claims (ISSUE acceptance): a forced ramp drives at least
+one grow and one shrink with zero dropped or duplicated frames and
+per-stream EMA trajectories identical to a fixed-max-lane serve; ladder
+rungs beyond the starting one are only ever built by the background warm
+thread; a preempted (tardy) stream resumes from its checkpoint with the
+same trajectory an uninterrupted serve would have produced.
+"""
+import threading
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import DehazeConfig
+from repro.stream import (ElasticServer, LaneAutoscaler, ScalePolicy,
+                          StreamRequest, ladder_rungs)
+
+ATOL = 3e-7
+
+
+def _streams(n, lengths, h=16, w=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[rng.random((h, w, 3)).astype(np.float32) for _ in range(k)]
+            for k in lengths[:n]]
+
+
+# --- ladder construction -----------------------------------------------------
+
+def test_ladder_rungs_capped():
+    assert ladder_rungs((4, 8, 16, 32), 6) == (4, 6)
+    assert ladder_rungs((4, 8, 16, 32), 32) == (4, 8, 16, 32)
+    assert ladder_rungs((4, 8), 16) == (4, 8, 16)
+    # Cap below the smallest rung degenerates to a single-rung ladder.
+    assert ladder_rungs((4, 8), 2) == (2,)
+    assert ladder_rungs((8, 4, 8), 8) == (4, 8)      # dedup + sort
+    with pytest.raises(ValueError):
+        ladder_rungs((4, 8), 0)
+
+
+# --- hysteresis (fake steps, no device) --------------------------------------
+
+def _fake_scaler(rungs=(2, 4, 8), **pol_kw):
+    """A LaneAutoscaler over trivial host 'steps' — exercises the ladder
+    walk and warming machinery without compiling anything."""
+    built = []
+
+    def factory(n):
+        built.append(n)
+        return lambda frames, ids, state: types.SimpleNamespace(state=state)
+
+    pol = ScalePolicy(rungs=rungs, **pol_kw)
+    sc = LaneAutoscaler(factory, rungs, policy=pol,
+                        state_factory=lambda n: np.zeros((n,), np.float32))
+    return sc, built
+
+
+def _warm_all(sc):
+    sc.ensure_warming((2, 4, 4, 3))
+    assert sc.wait_warm(timeout=10.0)
+
+
+def test_grow_requires_dwell_and_resets_on_break():
+    sc, _ = _fake_scaler(dwell_up=2, dwell_down=2)
+    sc.acquire_initial()
+    _warm_all(sc)
+    assert sc.observe(pending=3, occupied=2) is None      # streak 1
+    assert sc.observe(pending=0, occupied=1) is None      # break resets
+    assert sc.observe(pending=3, occupied=2) is None      # streak 1 again
+    assert sc.observe(pending=3, occupied=2) == 4         # streak 2 -> grow
+    sc.commit(4)
+    assert sc.rung == 4 and len(sc.switches) == 1
+    assert sc.switches[0]["from"] == 2 and sc.switches[0]["to"] == 4
+
+
+def test_shrink_requires_empty_queue_and_fit():
+    sc, _ = _fake_scaler(dwell_up=1, dwell_down=2)
+    sc.acquire_initial()
+    _warm_all(sc)
+    sc.commit(8)
+    # Occupancy must fit the next rung down AND the queue must be empty.
+    assert sc.observe(pending=0, occupied=7) is None
+    assert sc.observe(pending=1, occupied=2) is None
+    assert sc.observe(pending=0, occupied=3) is None      # streak 1
+    assert sc.observe(pending=0, occupied=4) == 4         # streak 2 -> shrink
+    sc.commit(4)
+    assert sc.switches[-1] == {"from": 8, "to": 4, "wall_s": 0.0}
+
+
+def test_no_thrash_on_alternating_load():
+    """A load level flapping between grow-ish and shrink-ish each tick
+    never satisfies either dwell — the rung holds."""
+    sc, _ = _fake_scaler(dwell_up=2, dwell_down=2)
+    sc.acquire_initial()
+    _warm_all(sc)
+    sc.commit(4)
+    for _ in range(10):
+        assert sc.observe(pending=2, occupied=4) is None  # load
+        assert sc.observe(pending=0, occupied=1) is None  # slack
+    assert sc.rung == 4 and len(sc.switches) == 1         # only the commit
+
+
+def test_unwarm_rung_defers_switch():
+    """Load against a rung that has not warmed yet holds the current rung;
+    the switch lands once warming finishes (dwell state persists)."""
+    sc, built = _fake_scaler(dwell_up=2)
+    sc.acquire_initial()                                  # only rung 2 ready
+    assert sc.observe(pending=3, occupied=2) is None
+    assert sc.observe(pending=3, occupied=2) is None      # dwell met, not warm
+    assert built == [2]
+    _warm_all(sc)
+    assert sc.observe(pending=3, occupied=2) == 4         # first warm tick
+
+
+def test_top_and_bottom_rungs_are_sticky():
+    sc, _ = _fake_scaler(rungs=(2, 4), dwell_up=1, dwell_down=1)
+    sc.acquire_initial()
+    _warm_all(sc)
+    for _ in range(3):                                    # bottom: no shrink
+        assert sc.observe(pending=0, occupied=0) is None
+    sc.commit(4)
+    for _ in range(3):                                    # top: no grow
+        assert sc.observe(pending=9, occupied=4) is None
+    assert sc.rung == 4
+
+
+# --- compile discipline ------------------------------------------------------
+
+def test_ladder_warms_off_the_serve_thread():
+    """Every rung beyond the starting one must be built by the background
+    warm thread — the step cache's built_by ledger proves no ladder trace
+    ever ran on the caller (serve) thread."""
+    from repro.stream.elastic import _STEP_CACHE, _cached_multi_step
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=3, update_period=3)
+    rungs = ladder_rungs((2, 4), 4)
+    sc = LaneAutoscaler(lambda n: _cached_multi_step(cfg, n, False), rungs)
+    sc.acquire_initial()
+    misses_before = _STEP_CACHE.misses
+    sc.ensure_warming((2, 16, 20, 3))
+    assert sc.wait_warm(timeout=120.0)
+    assert not sc._warm_errors
+    main = threading.get_ident()
+    assert _STEP_CACHE.built_by[("multi", cfg, rungs[0], False)] == main
+    for rung in rungs[1:]:
+        key = ("multi", cfg, rung, False)
+        assert _STEP_CACHE.built_by[key] != main
+        assert sc.is_ready(rung)
+    # The warm pass actually built (missed) the non-initial rungs.
+    assert _STEP_CACHE.misses - misses_before >= len(rungs) - 1
+    # A switch is then a pure lookup: the cached step object is returned.
+    assert sc.step_for(rungs[1]) is _cached_multi_step(cfg, rungs[1], False)
+
+
+# --- end-to-end: forced ramp -------------------------------------------------
+
+def test_autoscale_ramp_grow_shrink_and_ema_parity():
+    """Five short streams + two long ones through a (2, 4) ladder: the
+    backlog forces a grow, the drained tail forces a shrink, and every
+    stream's output frames, emission order, and final EMA state are
+    identical to a fixed-max-lane serve of the same streams."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2, update_period=2)
+    lengths = [8, 8, 8, 8, 8, 40, 40]
+    pol = ScalePolicy(rungs=(2, 4), grow_pending=1, dwell_up=1,
+                      dwell_down=1, evict_tardy_after=None)
+
+    # Fixed-lane reference (also pre-compiles the 4-lane step; a separate
+    # 2-lane prime below makes ladder warming a cache hit, so the ramp's
+    # switches don't hinge on compile latency).
+    ref = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    ref_outs = {}
+    ref_rep = ref.serve_many(
+        [StreamRequest(f"s{i}", iter(v))
+         for i, v in enumerate(_streams(7, lengths, seed=41))], n_lanes=4,
+        sink=lambda sid, fid, f: ref_outs.setdefault((sid, fid), f))
+    assert ref_rep.skipped == 0 and ref_rep.ladder_switches == 0
+    prime = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    prime.serve_many([StreamRequest("pr", iter(_streams(1, [4],
+                                                        seed=43)[0]))],
+                     n_lanes=2)
+
+    srv = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    outs, emitted = {}, {}
+
+    def sink(sid, fid, f):
+        outs[(sid, fid)] = f
+        emitted.setdefault(sid, []).append(fid)
+
+    rep = srv.serve_many(
+        [StreamRequest(f"s{i}", iter(v))
+         for i, v in enumerate(_streams(7, lengths, seed=41))],
+        n_lanes=4, sink=sink, autoscale=True, policy=pol)
+
+    # The ramp actually walked the ladder: with a two-rung ladder starting
+    # (and ending, since rep.n_lanes == 2) at the bottom, >= 2 switches
+    # means at least one grow AND one shrink.
+    assert rep.ladder_switches >= 2
+    assert rep.n_lanes == 2
+    assert rep.evictions == 0
+
+    # Zero dropped, zero duplicated, in order — per stream.
+    assert rep.frames == sum(lengths) and rep.skipped == 0
+    for i, n in enumerate(lengths):
+        assert emitted[f"s{i}"] == list(range(n))
+
+    # Bit-for-bit the same outputs and EMA trajectory as the fixed-lane
+    # serve: the rung switch repacks state, it does not perturb it.
+    assert outs.keys() == ref_outs.keys()
+    for k in outs:
+        np.testing.assert_allclose(outs[k], ref_outs[k], atol=ATOL, rtol=0)
+    for i in range(7):
+        np.testing.assert_allclose(
+            np.asarray(srv.store.get(f"s{i}").A),
+            np.asarray(ref.store.get(f"s{i}").A), atol=ATOL, rtol=0)
+        assert srv.store.cursor(f"s{i}") == lengths[i]
+
+
+# --- deadline-aware eviction -------------------------------------------------
+
+def test_tardy_stream_checkpoints_requeues_and_resumes():
+    """A past-deadline stream hogging the only lane is preempted after
+    ``evict_tardy_after`` ticks: the waiter serves next, the tardy stream
+    resumes from its checkpoint, emits every frame exactly once in order,
+    and its final EMA state matches an uninterrupted serve."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2, update_period=2)
+    tardy_v = _streams(1, [12], seed=53)[0]
+    waiter_v = _streams(1, [4], seed=59)[0]
+
+    srv = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    seq = []
+
+    def sink(sid, fid, f):
+        seq.append((sid, fid))
+
+    rep = srv.serve_many(
+        [StreamRequest("tardy", iter(tardy_v), deadline=0.0),
+         StreamRequest("waiter", iter(waiter_v))],
+        n_lanes=1, sink=sink,
+        policy=ScalePolicy(evict_tardy_after=2),
+        clock=lambda: 100.0)                     # deadline long blown
+
+    assert rep.evictions == 1
+    assert rep.ladder_switches == 0              # policy without autoscale
+    assert rep.admissions == 3                   # tardy, waiter, tardy again
+    assert rep.frames == 16 and rep.skipped == 0
+    assert rep.per_stream["tardy"].frames == 12
+    assert rep.per_stream["waiter"].frames == 4
+
+    tardy_fids = [fid for sid, fid in seq if sid == "tardy"]
+    waiter_fids = [fid for sid, fid in seq if sid == "waiter"]
+    assert tardy_fids == list(range(12))         # no loss, no dupes, ordered
+    assert waiter_fids == list(range(4))
+    # The preemption actually interleaved: the waiter finished before the
+    # tardy stream's last frame.
+    assert seq.index(("waiter", 3)) < seq.index(("tardy", 11))
+    assert srv.store.cursor("tardy") == 12
+
+    # Checkpoint/resume preserved the EMA trajectory exactly.
+    ref = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    ref.serve_many([StreamRequest("tardy", iter(tardy_v))], n_lanes=1)
+    np.testing.assert_allclose(np.asarray(srv.store.get("tardy").A),
+                               np.asarray(ref.store.get("tardy").A),
+                               atol=ATOL, rtol=0)
+
+
+def test_no_eviction_without_waiters_or_before_deadline():
+    """Eviction needs all three: a blown deadline, the dwell, and a queue.
+    A tardy stream alone on the fleet is never preempted; a deadlined
+    stream still inside its deadline is never preempted."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    pol = ScalePolicy(evict_tardy_after=1)
+
+    srv = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    rep = srv.serve_many(
+        [StreamRequest("solo", iter(_streams(1, [8], seed=61)[0]),
+                       deadline=0.0)],
+        n_lanes=1, policy=pol, clock=lambda: 100.0)
+    assert rep.evictions == 0 and rep.frames == 8
+
+    srv2 = ElasticServer(cfg, batch=2, timeout_s=5.0)
+    vids = _streams(2, [8, 4], seed=67)
+    rep2 = srv2.serve_many(
+        [StreamRequest("ok", iter(vids[0]), deadline=1e9),
+         StreamRequest("queued", iter(vids[1]))],
+        n_lanes=1, policy=pol, clock=lambda: 0.0)
+    assert rep2.evictions == 0
+    assert rep2.frames == 12 and rep2.skipped == 0

@@ -17,7 +17,8 @@ from repro.core import (DehazeConfig, get_lane_state, init_atmo_state,
                         make_multi_stream_step, pack_atmo_states,
                         set_lane_state, unpack_atmo_states)
 from repro.core.normalize import AtmoState
-from repro.stream import ElasticServer, Monitor, StreamStateStore
+from repro.stream import (ElasticServer, Monitor, StreamRequest,
+                          StreamStateStore)
 
 ATOL = 3e-7          # float32 round-off between vmapped and plain programs
 
@@ -96,7 +97,8 @@ def test_serve_many_matches_sequential(mode):
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
     outs = {}
     rep = srv.serve_many(
-        [(f"s{i}", iter(v)) for i, v in enumerate(vids)], n_lanes=2,
+        [StreamRequest(f"s{i}", iter(v)) for i, v in enumerate(vids)],
+        n_lanes=2,
         sink=lambda sid, fid, f: outs.setdefault((sid, fid), f))
     assert rep.frames == 35 and rep.skipped == 0
     assert rep.admissions == 4 and rep.n_lanes == 2
@@ -126,7 +128,8 @@ def test_serve_many_lane_eviction_and_reuse():
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
     emitted = {}
     rep = srv.serve_many(
-        [(f"cam{i}", iter(v)) for i, v in enumerate(vids)], n_lanes=2,
+        [StreamRequest(f"cam{i}", iter(v)) for i, v in enumerate(vids)],
+        n_lanes=2,
         sink=lambda sid, fid, f: emitted.setdefault(sid, []).append(fid))
     assert rep.admissions == 5
     assert rep.frames == sum(len(v) for v in vids) and rep.skipped == 0
@@ -142,10 +145,11 @@ def test_serve_many_checkpoint_restart():
     vids = _streams(3, [12, 8, 10], seed=3)
 
     ref_srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
-    ref_srv.serve_many([(f"s{i}", iter(v)) for i, v in enumerate(vids)])
+    ref_srv.serve_many([StreamRequest(f"s{i}", iter(v))
+                        for i, v in enumerate(vids)])
 
     srv1 = ElasticServer(cfg, batch=4, timeout_s=5.0)
-    srv1.serve_many([(f"s{i}", iter(v[:len(v) // 2]))
+    srv1.serve_many([StreamRequest(f"s{i}", iter(v[:len(v) // 2]))
                      for i, v in enumerate(vids)])
     snapshot = srv1.store.to_pytree()
     del srv1                                             # "crash"
@@ -154,7 +158,7 @@ def test_serve_many_checkpoint_restart():
     srv2.store = StreamStateStore.from_pytree(snapshot)
     for i, v in enumerate(vids):
         assert srv2.store.cursor(f"s{i}") == len(v) // 2
-    srv2.serve_many([(f"s{i}", iter(v[len(v) // 2:]))
+    srv2.serve_many([StreamRequest(f"s{i}", iter(v[len(v) // 2:]))
                      for i, v in enumerate(vids)])
     for i, v in enumerate(vids):
         np.testing.assert_allclose(
@@ -172,9 +176,11 @@ def test_serve_many_rejects_mismatched_resolutions():
     b = _streams(1, [4], h=12, w=20, seed=4)[0]
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
     with pytest.raises(ValueError, match="must share"):
-        srv.serve_many([("a", iter(a)), ("b", iter(b))])
+        srv.serve_many([StreamRequest("a", iter(a)),
+                        StreamRequest("b", iter(b))])
     # The failed call flushed its lanes; a fresh serve_many still works.
-    rep = srv.serve_many([("c", iter(_streams(1, [6], seed=5)[0]))])
+    rep = srv.serve_many([StreamRequest("c", iter(_streams(1, [6],
+                                                           seed=5)[0]))])
     assert rep.frames == 6 and rep.skipped == 0
 
 
@@ -183,7 +189,8 @@ def test_serve_many_rejects_duplicate_stream_ids():
     v = _streams(2, [4, 4], seed=6)
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
     with pytest.raises(ValueError, match="duplicate stream ids"):
-        srv.serve_many([("cam", iter(v[0])), ("cam", iter(v[1]))])
+        srv.serve_many([StreamRequest("cam", iter(v[0])),
+                        StreamRequest("cam", iter(v[1]))])
 
 
 # --- satellite: bounded monitor skip history ---------------------------------
@@ -226,16 +233,16 @@ def test_serve_many_forced_vmap_matches_lane_native(monkeypatch):
 
     outs_native = {}
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
-    srv.serve_many([(f"s{i}", iter(v)) for i, v in enumerate(vids)],
-                   n_lanes=2,
+    srv.serve_many([StreamRequest(f"s{i}", iter(v))
+                    for i, v in enumerate(vids)], n_lanes=2,
                    sink=lambda sid, fid, f: outs_native.setdefault(
                        (sid, fid), f))
 
     monkeypatch.setenv("REPRO_LANE_NATIVE", "0")
     outs_vmap = {}
     srv2 = ElasticServer(cfg, batch=4, timeout_s=5.0)
-    rep = srv2.serve_many([(f"s{i}", iter(v)) for i, v in enumerate(vids)],
-                          n_lanes=2,
+    rep = srv2.serve_many([StreamRequest(f"s{i}", iter(v))
+                           for i, v in enumerate(vids)], n_lanes=2,
                           sink=lambda sid, fid, f: outs_vmap.setdefault(
                               (sid, fid), f))
     assert rep.frames == 19 and rep.skipped == 0
@@ -291,16 +298,48 @@ def test_serve_many_resize_between_calls():
     cfg = DehazeConfig(kernel_mode="fused", gf_radius=2, update_period=2)
     vids = _streams(3, [5, 6, 4], seed=11)
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
-    rep2 = srv.serve_many([(f"a{i}", iter(v)) for i, v in enumerate(vids)],
-                          n_lanes=2)
-    rep3 = srv.serve_many([(f"b{i}", iter(v)) for i, v in enumerate(vids)],
-                          n_lanes=3)
+    rep2 = srv.serve_many([StreamRequest(f"a{i}", iter(v))
+                           for i, v in enumerate(vids)], n_lanes=2)
+    rep3 = srv.serve_many([StreamRequest(f"b{i}", iter(v))
+                           for i, v in enumerate(vids)], n_lanes=3)
     assert rep2.frames == rep3.frames == 15
     assert rep2.skipped == 0 and rep3.skipped == 0
     for i, v in enumerate(vids):
         np.testing.assert_allclose(np.asarray(srv.store.get(f"a{i}").A),
                                    np.asarray(srv.store.get(f"b{i}").A),
                                    atol=ATOL, rtol=0)
+
+
+# --- satellite: legacy tuple entries keep working (with a warning) -----------
+
+def test_legacy_tuple_entries_coerce_with_deprecation_warning():
+    """(stream_id, frames) and (stream_id, frames, deadline) tuples still
+    serve correctly but emit DeprecationWarning; StreamRequest does not."""
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    vids = _streams(2, [4, 3], seed=29)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    with pytest.warns(DeprecationWarning, match="StreamRequest"):
+        rep = srv.serve_many([("pair", iter(vids[0])),
+                              ("triple", iter(vids[1]), 5.0)])
+    assert rep.frames == 7 and rep.skipped == 0
+    assert rep.per_stream["pair"].frames == 4
+    assert rep.per_stream["triple"].frames == 3
+
+    import warnings as _warnings
+    srv2 = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    vids2 = _streams(1, [4], seed=31)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        srv2.serve_many([StreamRequest("clean", iter(vids2[0]))])
+
+
+def test_malformed_entries_rejected():
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    with pytest.raises(TypeError, match="StreamRequest"):
+        srv.serve_many(["just-a-string"])
+    with pytest.raises(TypeError, match="StreamRequest"):
+        srv.serve_many([("sid",)])
 
 
 # --- satellite: deadline-aware (EDF) admission -------------------------------
@@ -320,7 +359,8 @@ def _admission_order(streams, n_lanes=1):
 
 def test_admission_fifo_by_default():
     vids = _streams(3, [4, 4, 4], seed=13)
-    order = _admission_order([(f"s{i}", iter(v)) for i, v in enumerate(vids)])
+    order = _admission_order([StreamRequest(f"s{i}", iter(v))
+                              for i, v in enumerate(vids)])
     assert order == ["s0", "s1", "s2"]
 
 
@@ -329,13 +369,27 @@ def test_admission_earliest_deadline_first():
     streams go last (FIFO among themselves); equal deadlines tie-break by
     arrival."""
     vids = _streams(5, [4, 4, 4, 4, 4], seed=17)
-    entries = [("batch0", iter(vids[0])),              # no deadline, first
-               ("rt_late", iter(vids[1]), 50.0),
-               ("rt_soon", iter(vids[2]), 2.0),
-               ("rt_tie", iter(vids[3]), 50.0),        # ties rt_late, later
-               ("batch1", iter(vids[4]), None)]        # explicit None
+    entries = [StreamRequest("batch0", iter(vids[0])),  # no deadline, first
+               StreamRequest("rt_late", iter(vids[1]), deadline=50.0),
+               StreamRequest("rt_soon", iter(vids[2]), deadline=2.0),
+               StreamRequest("rt_tie", iter(vids[3]), deadline=50.0),
+               StreamRequest("batch1", iter(vids[4]), deadline=None)]
     order = _admission_order(entries)
     assert order == ["rt_soon", "rt_late", "rt_tie", "batch0", "batch1"]
+
+
+def test_admission_priority_classes_outrank_deadlines():
+    """priority orders ahead of the deadline key: a negative-priority
+    stream admits before the whole default class even when a default-class
+    stream has the earliest deadline."""
+    vids = _streams(4, [4, 4, 4, 4], seed=23)
+    entries = [StreamRequest("rt", iter(vids[0]), deadline=1.0),
+               StreamRequest("vip", iter(vids[1]), priority=-1),
+               StreamRequest("bulk", iter(vids[2]), priority=5),
+               StreamRequest("vip_rt", iter(vids[3]), deadline=9.0,
+                             priority=-1)]
+    order = _admission_order(entries)
+    assert order == ["vip_rt", "vip", "rt", "bulk"]
 
 
 def test_admission_deadline_streams_complete_and_match():
@@ -346,8 +400,9 @@ def test_admission_deadline_streams_complete_and_match():
     srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
     outs = {}
     rep = srv.serve_many(
-        [("a", iter(vids[0]), 9.0), ("b", iter(vids[1]), 1.0),
-         ("c", iter(vids[2]))], n_lanes=2,
+        [StreamRequest("a", iter(vids[0]), deadline=9.0),
+         StreamRequest("b", iter(vids[1]), deadline=1.0),
+         StreamRequest("c", iter(vids[2]))], n_lanes=2,
         sink=lambda sid, fid, f: outs.setdefault((sid, fid), f))
     assert rep.frames == 18 and rep.skipped == 0
     for sid, v in zip("abc", vids):
