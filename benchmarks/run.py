@@ -17,6 +17,9 @@ SUITES = {
     # Ramping-load subset of table1 (elastic lane ladder vs fixed-max
     # fleet + switch latency) — cheap enough for the CI smoke job.
     "autoscale": table1_throughput.autoscale_rows,
+    # Fleet subset of table1 (1 vs 2 simulated hosts; asserts the >= 1.8x
+    # aggregate-fps scaling bar + zero EMA migrations).
+    "fleet": table1_throughput.fleet_rows,
 }
 
 

@@ -201,6 +201,54 @@ def autoscale_rows(algo: str = "dcp") -> List[Tuple[str, float, str]]:
     return out
 
 
+def fleet_rows(algo: str = "dcp") -> List[Tuple[str, float, str]]:
+    """Fleet tier: the same 8 streams behind 1 vs 2 simulated hosts of 4
+    lanes each (paper §4's headline, three PCs beating one box, in its
+    serving-tier form).
+
+    "Hosts" on this container are serve threads over one XLA device, so
+    raw compute alone would not split cleanly across them; each tick
+    instead carries a fixed simulated device service time
+    (``host_delay_s``), which makes every host device-bound the way a real
+    per-host accelerator is. Two hosts then drain the shared global-EDF
+    queue in about half the ticks per host, and the aggregate-fps ratio in
+    the derived column is the fleet's scaling headline — asserted >= 1.8x
+    (sleep-dominated ticks make this deterministic), with the spillover
+    count riding along (first-fit placement overflows host 0 onto host 1).
+    """
+    res_name, (h, w) = "64x48", (48, 64)
+    smoke = _env.bench_smoke()
+    n_frames = 16 if smoke else 32
+    delay = 0.2 if smoke else 0.25
+    lanes, n_streams, batch = 4, 8, 8
+    cfg = DehazeConfig(algorithm=algo, kernel_mode="ref")
+
+    def serve(n_hosts: int, seed0: int):
+        vids = _stream_videos(n_streams, h, w, n_frames)
+        srv = ElasticServer(cfg, batch=batch, timeout_s=5.0)
+        srv.serve_many([StreamRequest("warm", iter(vids[0].hazy[:batch]))],
+                       n_lanes=lanes)                  # compile (no delay)
+        return srv.serve_many(
+            [StreamRequest(f"cam{i}", iter(v.hazy))
+             for i, v in enumerate(vids)],
+            n_lanes=lanes, n_hosts=n_hosts, host_delay_s=delay)
+
+    rep1 = serve(1, 500)
+    rep2 = serve(2, 600)
+    assert rep2.migrations == 0, "sticky placement violated in bench"
+    ratio = rep2.aggregate_fps / rep1.aggregate_fps
+    assert ratio >= 1.8, (
+        f"fleet scaling below bar: 2-host/1-host aggregate fps ratio "
+        f"{ratio:.2f} < 1.8 (wall {rep1.wall_s:.2f}s -> {rep2.wall_s:.2f}s)")
+    return [
+        (f"table1/fleet-1host-{algo}/{res_name}", 1e6 / rep1.aggregate_fps,
+         f"{rep1.aggregate_fps:.2f}fps"),
+        (f"table1/fleet-2host-{algo}/{res_name}", 1e6 / rep2.aggregate_fps,
+         f"{rep2.aggregate_fps:.2f}fps({ratio:.2f}x,"
+         f"{rep2.spillovers}spill)"),
+    ]
+
+
 def rows() -> List[Tuple[str, float, str]]:
     out = []
     for algo in ("dcp", "cap"):
@@ -214,6 +262,7 @@ def rows() -> List[Tuple[str, float, str]]:
                             1e6 / fps, f"{fps:.2f}fps"))
     out.extend(multi_stream_rows())
     out.extend(autoscale_rows())
+    out.extend(fleet_rows())
     return out
 
 

@@ -16,14 +16,16 @@ from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
                                   unpack_atmo_states)
 from repro.core.pipeline import (DehazeOutput, make_dehaze_step,
                                  make_multi_stream_step,
-                                 make_sharded_dehaze_step,
+                                 make_sharded_dehaze_step, make_step,
                                  resolve_lane_native)
+from repro.core.placement import PlacementSpec
 
 __all__ = [
     "DehazeConfig", "AtmoState", "ema_scan", "ema_scan_associative",
     "ema_scan_lanes", "init_atmo_state", "init_atmo_state_lanes",
     "lane_carry", "pack_atmo_states", "unpack_atmo_states",
     "state_from_lane_carry", "get_lane_state", "set_lane_state",
-    "DehazeOutput", "make_dehaze_step", "make_multi_stream_step",
-    "make_sharded_dehaze_step", "resolve_lane_native",
+    "DehazeOutput", "PlacementSpec", "make_step", "make_dehaze_step",
+    "make_multi_stream_step", "make_sharded_dehaze_step",
+    "resolve_lane_native",
 ]

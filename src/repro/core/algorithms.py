@@ -204,6 +204,35 @@ def fused_transmission(frames: jnp.ndarray, a_saved: jnp.ndarray,
         mode=cfg.kernel_mode)
 
 
+def fused_transmission_lanes(frames: jnp.ndarray, a_saved: jnp.ndarray,
+                             cfg: DehazeConfig):
+    """Per-lane saved-A fused t-map + candidate stage: (L, B, H, W, 3) +
+    (L, 3) -> (t, t_min, cand_rgb) with a leading lane axis.
+
+    The building block of the lane-batched *sharded* step
+    (``pipeline.make_step`` with a lane placement): each shard's local
+    lanes divide by their own coherent A in one launch
+    (``kernels.fused.fused_transmission_lanes_pallas``), and the per-lane
+    EMA scan runs shard-locally — lanes are whole on their shard, so the
+    candidate needs no cross-shard merge.
+    """
+    return ops.fused_transmission_lanes(
+        frames, a_saved, algorithm=cfg.algorithm, radius=cfg.patch_radius,
+        omega=cfg.omega, beta=cfg.beta,
+        cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2), refine=cfg.refine,
+        gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, topk=cfg.topk,
+        mode=cfg.kernel_mode)
+
+
+def merge_topk_candidates(tk_t: jnp.ndarray, tk_gidx: jnp.ndarray,
+                          tk_rgb: jnp.ndarray, cfg: DehazeConfig):
+    """Cross-shard candidate merge (see ``ops.merge_topk_candidates``):
+    gathered (B, M) lists -> (B, 3) mean of the k best rows, lex (t, index)
+    tie-breaking identical on the sort and in-kernel grid-carry paths."""
+    return ops.merge_topk_candidates(tk_t, tk_gidx, tk_rgb, cfg.topk,
+                                     mode=cfg.kernel_mode)
+
+
 def fused_transmission_halo(frames: jnp.ndarray, pre_ext: jnp.ndarray,
                             guide_ext: jnp.ndarray, valid: jnp.ndarray,
                             valid_w, cfg: DehazeConfig):

@@ -1,27 +1,30 @@
 """Dehazing step builders: the paper's component chain as jitted SPMD steps.
 
-``make_dehaze_step``        — batched single-shard step (frames over batch).
-``make_sharded_dehaze_step``— shard_map step for a production mesh: frames
-                              sharded over the (pod,) data axes, image
-                              height sharded over the model axis with halo
-                              exchange, atmospheric-light state synchronized
-                              by collectives + the causal EMA scan.
+``make_step(cfg, placement)`` is THE step-construction path: a
+:class:`~repro.core.placement.PlacementSpec` declares once how every axis
+of the serving batch maps onto mesh axes, and the builder realizes it —
+the plain batched step, the lane-batched multi-stream step, the
+frame/spatially sharded production step, and (new) the *lane-sharded*
+pod-scale step where the lane axis shards over the ``data`` mesh axis and
+composes with H/W halo sharding. The three legacy builders
+(``make_dehaze_step``, ``make_multi_stream_step``,
+``make_sharded_dehaze_step``) are thin views of ``make_step`` and keep
+their exact signatures and semantics.
 
 The three paper components run back-to-back inside one compiled program:
 on TPU the win from the paper's operator parallelism is realized across
-*frames* (data axis) and *rows* (model axis), while component handoff is a
-register/VMEM boundary instead of an Ethernet hop (DESIGN.md §2).
+*frames* (data axis), *rows* (model axis) and now *streams* (lane axis),
+while component handoff is a register/VMEM boundary instead of an
+Ethernet hop (DESIGN.md §2).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core import algorithms as alg
 from repro.core import compat
@@ -29,8 +32,10 @@ from repro.core import env as _env
 from repro.core import spatial
 from repro.core.config import DehazeConfig
 from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
-                                  init_atmo_state, init_atmo_state_lanes,
-                                  pack_atmo_states, unpack_atmo_states)
+                                  ema_scan_lanes, init_atmo_state,
+                                  init_atmo_state_lanes, pack_atmo_states,
+                                  unpack_atmo_states)
+from repro.core.placement import PlacementSpec
 
 
 @jax.tree_util.register_dataclass
@@ -43,17 +48,51 @@ class DehazeOutput:
 
 
 # ---------------------------------------------------------------------------
+# The placement-driven entry point
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: DehazeConfig, placement: Optional[PlacementSpec] = None,
+              mesh: Optional[jax.sharding.Mesh] = None, *,
+              associative: bool = True, lane_native: Optional[bool] = None):
+    """Build the dehaze step a :class:`PlacementSpec` declares.
+
+    - no mesh axes, no lanes  -> ``step(frames (B,H,W,3), ids (B,), state)``
+    - ``lanes`` (no mesh axes)-> lane-batched ``(L, B, H, W, 3)`` step
+      (lane-native megakernel when the config is fused-covered);
+    - ``batch_axes``/spatial  -> the shard_map production step (frames over
+      the data axes, H/W halo-sharded, state synchronized by collectives);
+    - ``lane_axis``           -> the pod-scale lane-sharded step: the lane
+      axis shards over the mesh (each shard owns whole lanes, so per-lane
+      EMA rows are co-placed and scan shard-locally), optionally composed
+      with H/W halo sharding inside each shard.
+
+    ``mesh`` is required iff the placement names mesh axes. ``lane_native``
+    follows :func:`resolve_lane_native` when ``None``. The returned step is
+    un-jitted (callers jit, typically through the serving step cache which
+    keys on ``(cfg, placement)``).
+    """
+    placement = (placement if placement is not None
+                 else PlacementSpec()).validate()
+    cfg = cfg.validate()
+    if placement.sharded:
+        if mesh is None:
+            raise ValueError(
+                f"placement {placement} names mesh axes "
+                f"{placement.mesh_axes}; make_step needs the mesh")
+        return _make_sharded_step(cfg, mesh, placement,
+                                  associative=associative,
+                                  lane_native=lane_native)
+    if placement.lanes:
+        return _make_lane_step(cfg, associative=associative,
+                               lane_native=lane_native)
+    return _make_single_step(cfg, associative=associative)
+
+
+# ---------------------------------------------------------------------------
 # Single-shard batched step
 # ---------------------------------------------------------------------------
 
-def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
-    """Returns step(frames (B,H,W,3), frame_ids (B,), state) -> DehazeOutput.
-
-    With ``cfg.kernel_mode == "fused"`` (and a config the megakernel covers,
-    see ``algorithms.supports_fused``) the whole component chain runs as one
-    single-pass launch; otherwise the per-stage chain below.
-    """
-    cfg = cfg.validate()
+def _make_single_step(cfg: DehazeConfig, associative: bool = True):
     if cfg.kernel_mode == "fused" and alg.supports_fused(cfg):
         def fused_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
                        state: AtmoState) -> DehazeOutput:
@@ -82,6 +121,17 @@ def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
         return DehazeOutput(out, t, a_seq, new_state)
 
     return step
+
+
+def make_dehaze_step(cfg: DehazeConfig, associative: bool = True):
+    """Returns step(frames (B,H,W,3), frame_ids (B,), state) -> DehazeOutput.
+
+    Thin view of :func:`make_step` with the empty placement. With
+    ``cfg.kernel_mode == "fused"`` (and a config the megakernel covers,
+    see ``algorithms.supports_fused``) the whole component chain runs as
+    one single-pass launch; otherwise the per-stage chain.
+    """
+    return make_step(cfg, PlacementSpec.single(), associative=associative)
 
 
 # ---------------------------------------------------------------------------
@@ -116,10 +166,30 @@ def resolve_lane_native(cfg: DehazeConfig) -> bool:
     return fused_ok
 
 
+def _make_lane_step(cfg: DehazeConfig, associative: bool = True,
+                    lane_native: Optional[bool] = None):
+    if lane_native is None:
+        lane_native = resolve_lane_native(cfg)
+    if lane_native:
+        if not (cfg.kernel_mode == "fused" and alg.supports_fused(cfg)):
+            raise ValueError(
+                "lane_native=True requires kernel_mode='fused' and a config "
+                "the megakernel covers (algorithms.supports_fused)")
+
+        def lane_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
+                      state: AtmoState) -> DehazeOutput:
+            out, t, a_seq, new_state = alg.fused_dehaze_lanes(
+                frames, frame_ids, state, cfg)
+            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+        return lane_step
+    return jax.vmap(_make_single_step(cfg, associative=associative))
+
+
 def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True,
                            lane_native: Optional[bool] = None):
     """Returns step(frames (L, B, H, W, 3), frame_ids (L, B), state) ->
-    DehazeOutput with a leading lane axis on every field.
+    DehazeOutput with a leading lane axis on every field. Thin view of
+    :func:`make_step` with the lane-batched placement.
 
     The paper's §5 future work — coordinating atmospheric light "across
     multiple videos" — realized as *continuous batching*: L independent
@@ -145,23 +215,8 @@ def make_multi_stream_step(cfg: DehazeConfig, associative: bool = True,
     masked EMA paths pass their state through untouched and their frame
     outputs are discarded by the scheduler.
     """
-    cfg = cfg.validate()
-    if lane_native is None:
-        lane_native = resolve_lane_native(cfg)
-    if lane_native:
-        if not (cfg.kernel_mode == "fused" and alg.supports_fused(cfg)):
-            raise ValueError(
-                "lane_native=True requires kernel_mode='fused' and a config "
-                "the megakernel covers (algorithms.supports_fused)")
-
-        def lane_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
-                      state: AtmoState) -> DehazeOutput:
-            out, t, a_seq, new_state = alg.fused_dehaze_lanes(
-                frames, frame_ids, state, cfg)
-            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
-        return lane_step
-    step = make_dehaze_step(cfg, associative=associative)
-    return jax.vmap(step)
+    return make_step(cfg, PlacementSpec.lane_batched(),
+                     associative=associative, lane_native=lane_native)
 
 
 # ---------------------------------------------------------------------------
@@ -185,42 +240,48 @@ def _local_topk_candidates(t_raw: jnp.ndarray, frames: jnp.ndarray,
 
 
 def _merge_topk_over_spatial(tk_t: jnp.ndarray, tk_rgb: jnp.ndarray,
-                             tk_gidx: jnp.ndarray, axis_names, k: int):
+                             tk_gidx: jnp.ndarray, axis_names, cfg):
     """Merge per-shard top-k candidate lists into the per-frame global A
     candidate (B, 3): all-gather the (t, rgb, global flat index) lists over
-    the spatial mesh axes, lexicographically sort by (t, index), mean the k
-    best rgb rows. The explicit global-index sort key reproduces
+    the spatial mesh axes, select the k lexicographically best (t, index)
+    rows, mean their rgb. The explicit global-index key reproduces
     ``lax.top_k``'s lowest-flat-index tie-breaking even when a t plateau
     spans shard boundaries — common, since the min-filter output is
     piecewise constant — so the sharded candidate equals the single-device
-    one bit-for-bit, not just in value."""
+    one bit-for-bit, not just in value. The selection itself dispatches
+    through ``ops.merge_topk_candidates``: a two-key ``lax.sort`` on the
+    ref substrate, an in-kernel grid-carry fold on the pallas ones."""
     tk_rgb = tk_rgb.astype(jnp.float32)
     for ax in axis_names:
         tk_t = lax.all_gather(tk_t, ax, axis=1, tiled=True)
         tk_rgb = lax.all_gather(tk_rgb, ax, axis=1, tiled=True)
         tk_gidx = lax.all_gather(tk_gidx, ax, axis=1, tiled=True)
-    _, _, r_s, g_s, b_s = lax.sort(
-        (tk_t, tk_gidx, tk_rgb[..., 0], tk_rgb[..., 1], tk_rgb[..., 2]),
-        dimension=1, num_keys=2)
-    top = jnp.stack([r_s[:, :k], g_s[:, :k], b_s[:, :k]], axis=-1)
-    return top.mean(axis=1)
+    return alg.merge_topk_candidates(tk_t, tk_gidx, tk_rgb, cfg)
 
 
-def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
-                             batch_axes: Tuple[str, ...] = ("data",),
-                             height_axis: Optional[str] = "model",
-                             width_axis: Optional[str] = None):
-    """Build a shard_map dehaze step for ``mesh``.
+def _make_sharded_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
+                       placement: PlacementSpec, associative: bool = True,
+                       lane_native: Optional[bool] = None):
+    """Realize a mesh-sharded placement as a shard_map step.
 
-    Sharding: frames (B, H, W, 3) with B over ``batch_axes``, H over
-    ``height_axis`` and W over ``width_axis`` (None disables that spatial
-    axis). frame_ids (B,) over ``batch_axes``. The AtmoState is replicated.
-    With both spatial axes a 2-D (n_h x n_w) tile of shards covers each
-    frame; the halo exchange runs height-then-width (corner halos ride the
-    W hop for free) and every windowed filter is masked by the separable
-    row x column validity mask.
+    Non-lane placements reproduce the classic production step: frames over
+    ``batch_axes``, H/W halo-sharded, AtmoState replicated and synchronized
+    by an all-gather + causal EMA scan over the frame axis. Lane placements
+    are the pod-scale composition: whole lanes shard over ``lane_axis``
+    (state rows co-placed, per-lane EMA scans shard-locally with NO
+    cross-shard sync), while H/W sharding inside each shard reuses the
+    halo machinery on the lane-flattened frame axis with *per-frame saved
+    A* rows — the per-lane saved-A input of
+    ``fused_transmission_lanes_pallas`` generalized to the halo kernel.
     """
-    cfg = cfg.validate()
+    lanes = placement.lanes
+    lane_axis = placement.lane_axis
+    batch_axes = placement.batch_axes
+    height_axis, width_axis = placement.height_axis, placement.width_axis
+    if not lanes and not batch_axes:
+        raise ValueError(
+            "a sharded non-lane placement needs batch_axes (the state sync "
+            f"gathers candidates over them); got {placement}")
     n_h = mesh.shape[height_axis] if height_axis else 1
     n_w = mesh.shape[width_axis] if width_axis else 1
     shard_h = height_axis is not None and n_h > 1
@@ -235,18 +296,26 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
     # row/column-validity masks feed the kernel directly and the min/box
     # filters run masked in-VMEM (kernels.fused.fused_transmission_halo_pallas).
     use_fused = cfg.kernel_mode == "fused" and alg.supports_fused(cfg)
+    if lanes and lane_native is None:
+        # The lane-native megakernel has no halo variant: spatial sharding
+        # composes through the halo kernel + shard-local lane EMA instead.
+        lane_native = resolve_lane_native(cfg) and not spatial_axes
 
-    fspec = P(batch_axes, height_axis, width_axis)
-    ispec = P(batch_axes)
+    fspec = placement.frame_spec()
+    ispec = placement.ids_spec()
+    state_spec = placement.state_spec()
 
-    def halo_premap_and_guide(frames, state, keep_halo_dtype=False):
+    def halo_premap_and_guide(frames, a_saved, keep_halo_dtype=False):
         """Halo-extended (pre-map, guide) planes + row/column validity,
         honoring ``cfg.halo_packed``: either exchange the packed 2-channel
         stack (what the stencils consume — 1/3 less wire than RGB) or
         exchange RGB and compute the maps on the extended block. Both the
         staged chain and the fused halo kernel consume this, so the two
         paths see identical inputs (including bf16 halo rounding
-        placement).
+        placement). ``a_saved`` is the saved atmospheric light, already
+        broadcast-shaped against ``frames`` (replicated (3,) for the
+        classic step, per-frame (B, 1, 1, 3) lane rows for the
+        lane-sharded one).
 
         ``keep_halo_dtype`` (fused packed path): hand the exchanged planes
         onward in the wire dtype instead of re-casting at the boundary —
@@ -273,7 +342,7 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             return p, valid_h, valid_w
 
         if cfg.halo_packed:
-            packed = jnp.stack([alg.premap(frames, state.A, cfg),
+            packed = jnp.stack([alg.premap(frames, a_saved, cfg),
                                 alg.luminance(frames)], axis=-1)
             p_ext, valid_h, valid_w = exchange(packed)
             if not keep_halo_dtype:
@@ -281,7 +350,7 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             return p_ext[..., 0], p_ext[..., 1], valid_h, valid_w
         x_ext, valid_h, valid_w = exchange(frames)
         x_ext = x_ext.astype(frames.dtype)
-        return (alg.premap(x_ext, state.A, cfg), alg.luminance(x_ext),
+        return (alg.premap(x_ext, a_saved, cfg), alg.luminance(x_ext),
                 valid_h, valid_w)
 
     def global_flat_idx(lidx, h_loc, w_loc):
@@ -300,19 +369,19 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
         if spatial_axes:
             gidx = global_flat_idx(tk_idx, frames.shape[1], frames.shape[2])
             return _merge_topk_over_spatial(tk_t, tk_rgb, gidx,
-                                            spatial_axes, cfg.topk)
+                                            spatial_axes, cfg)
         return tk_rgb.astype(jnp.float32).mean(axis=1)
 
-    def staged_t_and_candidates(frames, state):
+    def staged_t_and_candidates(frames, a_saved):
         """Per-stage chain: masked filters over halo-extended blocks ->
         (refined t, per-frame A candidates)."""
         if spatial_axes:
             pre_ext, guide_ext, valid_h, valid_w = halo_premap_and_guide(
-                frames, state)
+                frames, a_saved)
         else:
             valid_h = jnp.ones((frames.shape[1],), bool)
             valid_w = None
-            pre_ext = alg.premap(frames, state.A, cfg)
+            pre_ext = alg.premap(frames, a_saved, cfg)
             guide_ext = alg.luminance(frames)
 
         # --- Component 1 on the halo-extended block (masked filters). ---
@@ -343,7 +412,7 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             t = t_raw
         return t, rgb
 
-    def fused_t_and_candidates(frames, state):
+    def fused_t_and_candidates(frames, a_saved):
         """Fused megakernel form of ``staged_t_and_candidates``: one launch
         per block instead of the masked per-stage XLA chain."""
         if spatial_axes:
@@ -351,21 +420,21 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             # input; masking (and any bf16 -> f32 upcast of packed halo
             # planes) happens in-VMEM.
             pre_ext, guide_ext, valid_h, valid_w = halo_premap_and_guide(
-                frames, state, keep_halo_dtype=cfg.halo_packed)
+                frames, a_saved, keep_halo_dtype=cfg.halo_packed)
             t, tk_t, tk_rgb, tk_idx = alg.fused_transmission_halo(
                 frames, pre_ext, guide_ext, valid_h, valid_w, cfg)
             rgb = candidates_from_local_topk(tk_t, tk_rgb, tk_idx, frames)
         else:
-            t, _t_min, rgb = alg.fused_transmission(frames, state.A, cfg)
+            t, _t_min, rgb = alg.fused_transmission(frames, a_saved, cfg)
         return t, rgb
 
     def local_step(frames, frame_ids, state):
         b_loc = frames.shape[0]
         if use_fused:
             # Components 1 + 2 candidates + refinement in ONE launch.
-            t, rgb = fused_t_and_candidates(frames, state)
+            t, rgb = fused_t_and_candidates(frames, state.A)
         else:
-            t, rgb = staged_t_and_candidates(frames, state)
+            t, rgb = staged_t_and_candidates(frames, state.A)
 
         # State sync: all-gather candidates over the frame axes, scan,
         # slice the local part (the paper's A broadcast, minus the race).
@@ -382,19 +451,77 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
                                      dataclasses.replace(cfg, kernel_mode="ref"))
         return DehazeOutput(out, t, a_seq, new_state)
 
-    state_spec = AtmoState(A=P(), last_update=P(), initialized=P())
+    def lane_local_step(frames, frame_ids, state):
+        # frames (L_loc, B, h, w, 3); state rows (L_loc,) — whole lanes
+        # live on this shard, so the EMA scans are shard-local and causal.
+        l_loc, b = frames.shape[:2]
+        if use_fused and lane_native and not spatial_axes:
+            # Whole chain in one lane-native launch per shard.
+            out, t, a_seq, new_state = alg.fused_dehaze_lanes(
+                frames, frame_ids, state, cfg)
+            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+        if use_fused and not spatial_axes:
+            # Per-lane saved-A fused t + candidates
+            # (fused_transmission_lanes_pallas's building-block input).
+            t, _t_min, rgb = alg.fused_transmission_lanes(frames, state.A,
+                                                          cfg)
+        else:
+            # H/W halo sharding composes on the lane-flattened frame axis:
+            # every component is frame-generic, so per-frame saved-A rows
+            # (each lane's A repeated over its batch) stand in for the
+            # replicated A of the classic step.
+            flat = frames.reshape((l_loc * b,) + frames.shape[2:])
+            a_pf = jnp.repeat(state.A.astype(jnp.float32), b,
+                              axis=0)[:, None, None, :]
+            if use_fused:
+                t, rgb = fused_t_and_candidates(flat, a_pf)
+            else:
+                t, rgb = staged_t_and_candidates(flat, a_pf)
+            t = t.reshape((l_loc, b) + t.shape[1:])
+            rgb = rgb.reshape(l_loc, b, 3)
+        a_seq, new_state = ema_scan_lanes(rgb, frame_ids, state,
+                                          cfg.update_period, cfg.lam,
+                                          associative=associative)
+        a_seq = a_seq.astype(frames.dtype)
+        out = alg.generate_haze_free(frames, t, a_seq,
+                                     dataclasses.replace(cfg, kernel_mode="ref"))
+        return DehazeOutput(out, t, a_seq, new_state)
+
     step = compat.shard_map(
-        local_step, mesh=mesh,
+        lane_local_step if lanes else local_step, mesh=mesh,
         in_specs=(fspec, ispec, state_spec),
         out_specs=DehazeOutput(frames=fspec, transmission=fspec,
                                atmo_light=ispec, state=state_spec),
         check_vma=False,
     )
-    return step, fspec, ispec
+    return step
 
 
-__all__ = ["DehazeOutput", "make_dehaze_step", "make_multi_stream_step",
-           "make_sharded_dehaze_step", "resolve_lane_native",
-           "init_atmo_state", "init_atmo_state_lanes", "pack_atmo_states",
-           "unpack_atmo_states", "AtmoState", "ema_scan",
+def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
+                             batch_axes: Tuple[str, ...] = ("data",),
+                             height_axis: Optional[str] = "model",
+                             width_axis: Optional[str] = None):
+    """Build a shard_map dehaze step for ``mesh``. Thin view of
+    :func:`make_step` with the frame-sharded placement; returns
+    ``(step, frame_spec, ids_spec)`` as before.
+
+    Sharding: frames (B, H, W, 3) with B over ``batch_axes``, H over
+    ``height_axis`` and W over ``width_axis`` (None disables that spatial
+    axis). frame_ids (B,) over ``batch_axes``. The AtmoState is replicated.
+    With both spatial axes a 2-D (n_h x n_w) tile of shards covers each
+    frame; the halo exchange runs height-then-width (corner halos ride the
+    W hop for free) and every windowed filter is masked by the separable
+    row x column validity mask.
+    """
+    placement = PlacementSpec.frame_sharded(batch_axes=tuple(batch_axes),
+                                            height_axis=height_axis,
+                                            width_axis=width_axis)
+    step = make_step(cfg, placement, mesh)
+    return step, placement.frame_spec(), placement.ids_spec()
+
+
+__all__ = ["DehazeOutput", "PlacementSpec", "make_step", "make_dehaze_step",
+           "make_multi_stream_step", "make_sharded_dehaze_step",
+           "resolve_lane_native", "init_atmo_state", "init_atmo_state_lanes",
+           "pack_atmo_states", "unpack_atmo_states", "AtmoState", "ema_scan",
            "ema_scan_associative", "DehazeConfig"]

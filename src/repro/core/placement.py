@@ -1,0 +1,171 @@
+"""Declarative placement: one spec for how every serving-batch axis maps
+onto mesh axes.
+
+Before this module each step builder hard-coded its own sharding story:
+``make_dehaze_step`` assumed a single shard, ``make_multi_stream_step``
+assumed a lane axis but no mesh, and ``make_sharded_dehaze_step`` took
+three loose axis-name arguments. A :class:`PlacementSpec` declares the
+whole mapping ONCE — the idiom of scalax's ``ShardingMetadata`` (declare
+the rules, derive every PartitionSpec from them) — and
+``core.pipeline.make_step(cfg, placement)`` realizes it:
+
+  batch axis          mesh axes
+  ------------------  -------------------------------------------------
+  lane  (L)           ``lane_axis``    (pod-scale fleet: lanes → "data")
+  frame (B)           ``batch_axes``   (data-parallel frames)
+  height (H)          ``height_axis``  (halo-exchanged spatial shard)
+  width  (W)          ``width_axis``   (halo-exchanged spatial shard)
+  EMA / AtmoState     co-placed: lane-batched state rows shard over
+                      ``lane_axis`` with their lanes, otherwise replicated
+
+The spec is a frozen, hashable dataclass so it can key the serving-tier
+step cache (``stream.elastic``) and ride through ``jax.jit`` static
+arguments; ``to_dict``/``from_dict`` give a JSON-able wire form for
+launch configs. ``n_hosts`` is the *serving* fan-out consumed by the
+fleet scheduler (how many host-level schedulers sit behind one front
+door) — it does not alter the per-host device program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.normalize import AtmoState
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSpec:
+    """Where every axis of the serving batch lives.
+
+    ``lanes`` declares a leading lane axis on the batch (``(L, B, ...)``
+    multi-stream layout); ``lane_axis`` additionally shards it over a
+    mesh axis — each shard then owns whole lanes, so per-lane EMA state
+    rows are co-placed with their lanes and the causal scan needs no
+    cross-shard sync. ``batch_axes`` shards the frame axis (single-stream
+    data parallelism; mutually exclusive with a *sharded* lane axis,
+    where each lane's batch must stay local to keep its scan causal).
+    ``height_axis``/``width_axis`` shard the image plane with halo
+    exchange. ``n_hosts`` sizes the fleet tier (see module docstring).
+    """
+    lanes: bool = False
+    lane_axis: Optional[str] = None
+    batch_axes: Tuple[str, ...] = ()
+    height_axis: Optional[str] = None
+    width_axis: Optional[str] = None
+    n_hosts: int = 1
+
+    def __post_init__(self):
+        # Hashability guarantee: list-valued batch_axes (e.g. straight from
+        # JSON) coerce to a tuple before the frozen instance is ever used.
+        if not isinstance(self.batch_axes, tuple):
+            object.__setattr__(self, "batch_axes", tuple(self.batch_axes))
+
+    # -- validation --------------------------------------------------------
+
+    def validate(self) -> "PlacementSpec":
+        if self.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.n_hosts}")
+        if self.lane_axis is not None and not self.lanes:
+            raise ValueError(
+                f"lane_axis={self.lane_axis!r} requires lanes=True (a "
+                "sharded lane axis needs a lane axis to shard)")
+        if self.lane_axis is not None and self.batch_axes:
+            raise ValueError(
+                "a sharded lane axis is mutually exclusive with batch_axes: "
+                "each lane's frame batch must stay shard-local so its EMA "
+                f"scan is causal (got lane_axis={self.lane_axis!r}, "
+                f"batch_axes={self.batch_axes!r})")
+        if self.lanes and self.batch_axes:
+            raise ValueError(
+                "lane-batched placements do not shard the frame axis; "
+                f"got batch_axes={self.batch_axes!r}")
+        named = [ax for ax in ((self.lane_axis,) + self.batch_axes
+                               + (self.height_axis, self.width_axis))
+                 if ax is not None]
+        if len(set(named)) != len(named):
+            raise ValueError(f"mesh axes must be distinct, got {named}")
+        return self
+
+    # -- derived views -----------------------------------------------------
+
+    @property
+    def mesh_axes(self) -> Tuple[str, ...]:
+        """Every mesh axis the spec names, in batch-axis order."""
+        return tuple(ax for ax in ((self.lane_axis,) + self.batch_axes
+                                   + (self.height_axis, self.width_axis))
+                     if ax is not None)
+
+    @property
+    def sharded(self) -> bool:
+        """Does realizing this placement need a mesh at all?"""
+        return bool(self.mesh_axes)
+
+    def frame_spec(self) -> P:
+        """PartitionSpec for the frame batch: ``(B, H, W, 3)`` or, with
+        ``lanes``, ``(L, B, H, W, 3)``."""
+        spatial = (self.height_axis, self.width_axis)
+        if self.lanes:
+            return P(self.lane_axis, None, *spatial)
+        return P(self.batch_axes if self.batch_axes else None, *spatial)
+
+    def ids_spec(self) -> P:
+        """PartitionSpec for frame ids: ``(B,)`` or ``(L, B)``."""
+        if self.lanes:
+            return P(self.lane_axis)
+        return P(self.batch_axes if self.batch_axes else None)
+
+    def state_spec(self) -> AtmoState:
+        """AtmoState placement: lane rows co-placed with their lanes
+        (sharded over ``lane_axis``), otherwise replicated."""
+        row = P(self.lane_axis) if self.lanes else P()
+        return AtmoState(A=row, last_update=row, initialized=row)
+
+    # -- wire form ---------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["batch_axes"] = list(self.batch_axes)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PlacementSpec":
+        d = dict(d)
+        d["batch_axes"] = tuple(d.get("batch_axes", ()))
+        return cls(**d).validate()
+
+    # -- common constructions ---------------------------------------------
+
+    @classmethod
+    def single(cls) -> "PlacementSpec":
+        """One shard, one host: the plain batched step."""
+        return cls()
+
+    @classmethod
+    def lane_batched(cls, n_hosts: int = 1) -> "PlacementSpec":
+        """Multi-stream lane batch on one device (fleet tier optional)."""
+        return cls(lanes=True, n_hosts=n_hosts).validate()
+
+    @classmethod
+    def lane_sharded(cls, lane_axis: str = "data",
+                     height_axis: Optional[str] = None,
+                     width_axis: Optional[str] = None,
+                     n_hosts: int = 1) -> "PlacementSpec":
+        """Pod-scale lanes: the lane axis shards over the data mesh axis
+        (each shard serves whole lanes), optionally composed with H/W
+        halo sharding inside each shard."""
+        return cls(lanes=True, lane_axis=lane_axis, height_axis=height_axis,
+                   width_axis=width_axis, n_hosts=n_hosts).validate()
+
+    @classmethod
+    def frame_sharded(cls, batch_axes: Tuple[str, ...] = ("data",),
+                      height_axis: Optional[str] = "model",
+                      width_axis: Optional[str] = None) -> "PlacementSpec":
+        """The classic single-stream production placement (frames over the
+        data axes, height/width over the model-side axes)."""
+        return cls(batch_axes=tuple(batch_axes or ()),
+                   height_axis=height_axis, width_axis=width_axis).validate()
+
+
+__all__ = ["PlacementSpec"]

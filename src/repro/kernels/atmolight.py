@@ -177,3 +177,80 @@ def atmolight_topk_pallas(img: jnp.ndarray, t_raw: jnp.ndarray, k: int,
         interpret=interpret,
     )(img, t_raw)
     return out_f[:, :, 1:4].mean(axis=1).astype(img.dtype)
+
+
+def _merge_topk_kernel(t_ref, i_ref, rgb_ref, out_f_ref, out_i_ref, *,
+                       k: int):
+    """Grid-carry fold over candidate-list segments: each step merges one
+    ``seg``-wide slice of the (M)-row list into the k rows carried in the
+    output refs — the same 2k-union ``topk_select`` fold as
+    ``_atmolight_topk_kernel``, applied to already-reduced candidates
+    instead of pixels."""
+    s_idx = pl.program_id(1)
+    seg_t = t_ref[0].astype(jnp.float32)            # (seg,)
+    seg_i = i_ref[0]                                # (seg,) int32
+    seg_rgb = rgb_ref[0].astype(jnp.float32)        # (seg, 3)
+    tk_t, tk_i, tk_rgb = topk_select(seg_t, seg_i, seg_rgb, k)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        out_f_ref[0, :, 0] = tk_t
+        out_f_ref[0, :, 1:4] = tk_rgb
+        out_i_ref[0] = tk_i
+
+    @pl.when(s_idx != 0)
+    def _fold():
+        all_t = jnp.concatenate([out_f_ref[0, :, 0], tk_t])
+        all_i = jnp.concatenate([out_i_ref[0], tk_i])
+        all_rgb = jnp.concatenate([out_f_ref[0, :, 1:4], tk_rgb])
+        m_t, m_i, m_rgb = topk_select(all_t, all_i, all_rgb, k)
+        out_f_ref[0, :, 0] = m_t
+        out_f_ref[0, :, 1:4] = m_rgb
+        out_i_ref[0] = m_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "seg", "interpret"))
+def merge_topk_pallas(tk_t: jnp.ndarray, tk_idx: jnp.ndarray,
+                      tk_rgb: jnp.ndarray, k: int, seg: int = 0,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Cross-shard candidate merge: ``(B, M)`` t / global-index lists +
+    ``(B, M, 3)`` rgb -> ``(B, 3)`` mean of the k lexicographically
+    smallest (t, index) rows.
+
+    This is the in-kernel form of the sharded pipeline's gather-then-
+    ``lax.sort`` candidate merge (M = n_shards * k rows after the
+    all-gather): the list folds through the sequential grid carry in
+    ``seg``-row segments, so the cross-segment state is 4k floats + k
+    indices and no sort materializes. Tie-breaking is by global flat
+    index — identical to the sort path's two-key sort, hence bit-identical
+    output (the k selected rows are the same set in the same order).
+    Requires ``M % seg == 0`` and ``seg >= k`` (defaults to one segment
+    per k rows, the natural per-shard granularity).
+    """
+    b, m_rows = tk_t.shape
+    assert tk_idx.shape == (b, m_rows) and tk_rgb.shape == (b, m_rows, 3)
+    assert 1 <= k <= m_rows, (k, m_rows)
+    if seg <= 0 or m_rows % seg != 0 or seg < k:
+        seg = k if m_rows % k == 0 else m_rows
+    n_seg = m_rows // seg
+    kernel = functools.partial(_merge_topk_kernel, k=k)
+    out_f, _ = pl.pallas_call(
+        kernel,
+        grid=(b, n_seg),
+        in_specs=[
+            pl.BlockSpec((1, seg), lambda i, j: (i, j)),
+            pl.BlockSpec((1, seg), lambda i, j: (i, j)),
+            pl.BlockSpec((1, seg, 3), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, 4), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k, 4), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tk_t.astype(jnp.float32), tk_idx.astype(jnp.int32),
+      tk_rgb.astype(jnp.float32))
+    return out_f[:, :, 1:4].mean(axis=1)

@@ -28,7 +28,8 @@ from repro.kernels import tuning
 from repro.kernels.dark_channel import dark_channel_pallas, min_filter_2d_pallas
 from repro.kernels.boxfilter import box_filter_2d_pallas
 from repro.kernels.recover import recover_pallas
-from repro.kernels.atmolight import atmolight_pallas, atmolight_topk_pallas
+from repro.kernels.atmolight import (atmolight_pallas, atmolight_topk_pallas,
+                                     merge_topk_pallas)
 from repro.kernels.fused import (fused_dehaze_lanes_pallas,
                                  fused_dehaze_pallas,
                                  fused_transmission_halo_pallas,
@@ -185,6 +186,32 @@ def atmospheric_light(img: jnp.ndarray, t_raw: jnp.ndarray, k: int = 1,
         out = atmolight_pallas(flat_i, flat_t, tile_h=tile_h,
                                interpret=(m == "interpret"))
     return out.reshape(lead + (3,))
+
+
+def merge_topk_candidates(tk_t: jnp.ndarray, tk_idx: jnp.ndarray,
+                          tk_rgb: jnp.ndarray, k: int,
+                          mode: Mode = "auto") -> jnp.ndarray:
+    """(B, M) t + global-index lists, (B, M, 3) rgb -> (B, 3) mean of the
+    k lexicographically smallest (t, index) rows.
+
+    The sharded pipeline's cross-shard candidate merge: after the
+    all-gather, M = n_shards * k rows per frame. ``ref`` is the two-key
+    ``lax.sort`` (t, then global flat index — reproducing ``lax.top_k``'s
+    lowest-index tie-break across shard boundaries); pallas/interpret fold
+    the list through a sequential grid carry (``merge_topk_pallas``) in
+    k-row segments, bit-identical by the shared tie-break rule.
+    """
+    tk_t = tk_t.astype(jnp.float32)
+    tk_rgb = tk_rgb.astype(jnp.float32)
+    m = resolve_mode(mode)
+    if m == "ref":
+        _, _, r_s, g_s, b_s = jax.lax.sort(
+            (tk_t, tk_idx, tk_rgb[..., 0], tk_rgb[..., 1], tk_rgb[..., 2]),
+            dimension=1, num_keys=2)
+        top = jnp.stack([r_s[:, :k], g_s[:, :k], b_s[:, :k]], axis=-1)
+        return top.mean(axis=1)
+    return merge_topk_pallas(tk_t, tk_idx, tk_rgb, k,
+                             interpret=(m == "interpret"))
 
 
 def recover(img: jnp.ndarray, t: jnp.ndarray, A: jnp.ndarray, t0: float = 0.1,

@@ -35,15 +35,16 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
 
 def batch_axes_for(mesh: jax.sharding.Mesh, batch: int
                    ) -> Optional[Tuple[str, ...]]:
-    """Largest prefix of (pod, data) that divides ``batch``; None if even
-    the data axis doesn't divide (then the batch stays replicated)."""
+    """Largest prefix of (pod, data) that divides ``batch``; None if no
+    non-empty prefix divides (then the batch stays replicated)."""
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
-    # Try the full product first, then data only.
-    full = 1
-    for a in axes:
-        full *= mesh.shape[a]
-    if batch % full == 0:
-        return tuple(axes)
-    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
-        return ("data",)
+    # Longest dividing prefix first: (pod, data), then (pod,) / (data,)
+    # for a batch divisible by the outer axis but not the full product.
+    for end in range(len(axes), 0, -1):
+        prefix = axes[:end]
+        size = 1
+        for a in prefix:
+            size *= mesh.shape[a]
+        if batch % size == 0:
+            return tuple(prefix)
     return None

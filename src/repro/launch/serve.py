@@ -17,6 +17,12 @@ Elastic autoscaling (lane count walks a precompiled ladder under load;
 tail a shrink — the CI smoke leg asserts the switches happened):
   PYTHONPATH=src python -m repro.launch.serve --streams 6 --lanes 4 \
       --autoscale --ladder 2,4 --ramp --expect-switches 2
+
+Fleet serving (2 simulated hosts x 4 lanes behind one global-EDF front
+door; sticky placement keeps every stream's EMA on one host, overflow
+spills to the other — the CI smoke leg asserts >= 1 spillover):
+  PYTHONPATH=src python -m repro.launch.serve --streams 8 --hosts 2 \
+      --lanes 4 --resolution 120p --frames 32 --expect-spillover 1
 """
 from __future__ import annotations
 
@@ -103,11 +109,19 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
     rep = srv.serve_many(
         [StreamRequest(f"cam{i}", iter(v.hazy))
          for i, v in enumerate(vids)],
-        n_lanes=lanes, sink=sink, autoscale=args.autoscale, policy=policy)
+        n_lanes=lanes, sink=sink, autoscale=args.autoscale, policy=policy,
+        n_hosts=args.hosts)
     print(f"algorithm={args.algorithm} resolution={args.resolution} "
-          f"streams={args.streams} lanes={rep.n_lanes} batch={args.batch}")
+          f"streams={args.streams} lanes={rep.n_lanes} batch={args.batch} "
+          f"hosts={rep.n_hosts}")
     print(f"frames={rep.frames} skipped={rep.skipped} ticks={rep.ticks} "
           f"aggregate_fps={rep.aggregate_fps:.2f} wall={rep.wall_s:.2f}s")
+    if args.hosts > 1:
+        print(f"spillovers={rep.spillovers} migrations={rep.migrations}")
+        if rep.migrations != 0:
+            print(f"FAIL: sticky placement violated — {rep.migrations} EMA "
+                  f"migration(s)", file=sys.stderr)
+            sys.exit(1)
     if args.autoscale:
         print(f"ladder_switches={rep.ladder_switches} "
               f"switch_wall={rep.switch_wall_s * 1e3:.1f}ms "
@@ -122,6 +136,10 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
     if rep.ladder_switches < args.expect_switches:
         print(f"FAIL: expected >= {args.expect_switches} ladder switches, "
               f"got {rep.ladder_switches}", file=sys.stderr)
+        sys.exit(1)
+    if rep.spillovers < args.expect_spillover:
+        print(f"FAIL: expected >= {args.expect_spillover} spillover "
+              f"admission(s), got {rep.spillovers}", file=sys.stderr)
         sys.exit(1)
     return rep.skipped
 
@@ -138,7 +156,15 @@ def main() -> None:
                          "lane-batched multi-tenant scheduler)")
     ap.add_argument("--lanes", type=int, default=0,
                     help="device lanes for --streams > 1 "
-                         "(default 0 = one lane per stream)")
+                         "(default 0 = one lane per stream; per-host count "
+                         "when --hosts > 1)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulated fleet hosts: >1 serves through the "
+                         "FleetScheduler (global EDF, sticky placement, "
+                         "spillover admission)")
+    ap.add_argument("--expect-spillover", type=int, default=0,
+                    help="exit nonzero unless at least this many spillover "
+                         "admissions happened (CI fleet gating)")
     ap.add_argument("--workers", type=int, default=3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--autoscale", action="store_true",

@@ -5,6 +5,7 @@ from repro.stream.autoscale import (DEFAULT_RUNGS, LaneAutoscaler,
                                     ScalePolicy, ladder_rungs)
 from repro.stream.dispatcher import DispatchStats, StreamDispatcher
 from repro.stream.elastic import ElasticServer
+from repro.stream.fleet import FleetScheduler
 from repro.stream.monitor import Monitor, MonitorStats
 from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
                                     ServeReport, StreamReport, StreamRequest)
@@ -15,4 +16,5 @@ __all__ = ["Monitor", "MonitorStats", "Spout", "FrameBatch",
            "StreamDispatcher", "DispatchStats", "ElasticServer",
            "ServeReport", "StreamStateStore", "MultiStreamScheduler",
            "MultiServeReport", "StreamReport", "StreamRequest",
+           "FleetScheduler",
            "ScalePolicy", "LaneAutoscaler", "ladder_rungs", "DEFAULT_RUNGS"]

@@ -22,6 +22,7 @@ those executables compile for every mesh we claim to support.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
 from typing import Callable, Iterable, List, Optional, Sequence
@@ -29,14 +30,16 @@ from typing import Callable, Iterable, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core import (DehazeConfig, make_dehaze_step,
-                        make_multi_stream_step, resolve_lane_native)
+from repro.core import (DehazeConfig, PlacementSpec, make_dehaze_step,
+                        make_step, resolve_lane_native)
 from repro.core import env as _env
 from repro.stream.autoscale import LaneAutoscaler, ScalePolicy, ladder_rungs
 from repro.stream.dispatcher import StreamDispatcher
+from repro.stream.fleet import FleetScheduler, PlacementPolicy
 from repro.stream.monitor import Monitor
 from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
-                                    ServeReport, StreamEntry, StreamReport)
+                                    ServeReport, StreamEntry, StreamReport,
+                                    _coerce_request)
 from repro.stream.spout import Spout
 from repro.stream.state import StreamStateStore
 
@@ -93,23 +96,32 @@ def _cached_step(cfg: DehazeConfig):
                            lambda: jax.jit(make_dehaze_step(cfg)))
 
 
-def _cached_multi_step(cfg: DehazeConfig, n_lanes: int, lane_native: bool):
+def _cached_multi_step(cfg: DehazeConfig, n_lanes: int, lane_native: bool,
+                       placement: Optional[PlacementSpec] = None):
     """Multi-stream step (lane-native megakernel or lane-vmapped chain),
     same bounded cache.
 
-    The key includes ``n_lanes`` and the lane-native-vs-vmap path, not
-    just the config: a ``serve_many`` resize or a ``REPRO_LANE_NATIVE``
-    toggle between calls must never reuse a stale compiled step — the old
+    The key is ``(cfg, n_lanes, lane_native, placement)``: a ``serve_many``
+    resize, a ``REPRO_LANE_NATIVE`` toggle, or a different axis placement
+    between calls must never reuse a stale compiled step — the old
     ``("multi", cfg)`` key did exactly that, handing a 4-lane fleet the
     executable (and, for lane-native, the grid/tuning resolution) built
     for a different lane count or the other dispatch path. ``jax.jit``
     still specializes per input shape underneath; changing the lane count
     mid-fleet costs a recompile (see the ROADMAP lane-autoscaling
-    follow-on)."""
+    follow-on).
+
+    ``n_hosts`` is normalized out of the key: the device step is
+    host-count agnostic (the fleet tier schedules hosts above it), so a
+    2-host fleet reuses the executable its 1-host twin compiled."""
+    if placement is None:
+        placement = PlacementSpec.lane_batched()
+    if placement.n_hosts != 1:
+        placement = dataclasses.replace(placement, n_hosts=1)
     return _STEP_CACHE.get(
-        ("multi", cfg, n_lanes, lane_native),
-        lambda: jax.jit(make_multi_stream_step(cfg,
-                                               lane_native=lane_native)))
+        ("multi", cfg, n_lanes, lane_native, placement),
+        lambda: jax.jit(make_step(cfg, placement,
+                                  lane_native=lane_native)))
 
 
 class ElasticServer:
@@ -127,6 +139,9 @@ class ElasticServer:
         self._worker_delay = worker_delay_s
         self._step = _cached_step(cfg)
         self.n_workers = n_workers
+        # Last FleetScheduler used by a multi-host serve_many — exposes the
+        # sticky-placement ledger and admission log for callers/tests.
+        self.last_fleet: Optional[FleetScheduler] = None
 
     def resize(self, n_workers: int) -> None:
         """Elastic scale up/down. State survives; executables are reused
@@ -176,8 +191,11 @@ class ElasticServer:
                    sink: Optional[Callable[[str, int, np.ndarray], None]]
                    = None, autoscale: bool = False,
                    policy: Optional[ScalePolicy] = None,
-                   clock: Callable[[], float] = time.time
-                   ) -> MultiServeReport:
+                   clock: Callable[[], float] = time.time,
+                   n_hosts: int = 1,
+                   placement: Optional[PlacementSpec] = None,
+                   placement_policy: PlacementPolicy = "first-fit",
+                   host_delay_s: float = 0.0) -> MultiServeReport:
         """Serve N videos concurrently via lane-batched continuous batching.
 
         ``streams`` is a sequence of :class:`~repro.stream.StreamRequest`
@@ -213,29 +231,82 @@ class ElasticServer:
         stream with a follow-up call). The device sees ONE
         ``(L, B, H, W, 3)`` program per tick instead of N serialized
         streams, which is where the aggregate-fps win comes from.
+
+        ``n_hosts > 1`` (or a ``placement`` with ``n_hosts > 1``) serves
+        the same streams through a :class:`~repro.stream.FleetScheduler`:
+        ``n_hosts`` host-level schedulers behind one global-EDF front door,
+        with sticky stream→host placement (EMA state never migrates) and
+        spillover admission once a host's lanes fill. ``n_lanes`` is then
+        the *per-host* lane count; ``placement_policy`` picks each fresh
+        stream's preferred host; ``host_delay_s`` simulates per-tick device
+        service time on each host (fleet benchmarks). Per-stream outputs,
+        EMA trajectories and cursors stay bit-identical to the single-host
+        serve — only which host runs a stream changes.
         """
-        streams = list(streams)
+        # Coerce HERE (not in the scheduler) and with a plain loop (not a
+        # comprehension, which owns its own frame on CPython < 3.12): the
+        # deprecation warning's stacklevel then lands on the caller that
+        # actually passed the legacy tuple.
+        coerced = []
+        for s in streams:
+            coerced.append(_coerce_request(s))
+        streams = coerced
         if not streams:
             return MultiServeReport(per_stream={}, frames=0, skipped=0,
                                     wall_s=0.0, n_lanes=0, ticks=0,
                                     admissions=0)
-        lanes = n_lanes if n_lanes is not None else len(streams)
+        if placement is None:
+            placement = PlacementSpec.lane_batched(n_hosts=n_hosts)
+        else:
+            placement.validate()
+            n_hosts = placement.n_hosts
+        if placement.sharded:
+            raise ValueError(
+                "serve_many drives local lane batches; mesh-sharded "
+                "placements go through core.make_step(cfg, placement, mesh) "
+                "with the launch tooling")
+        if not placement.lanes:
+            raise ValueError("serve_many needs a lane placement; use "
+                             "PlacementSpec.lane_batched(...)")
+        lanes = n_lanes if n_lanes is not None \
+            else max(1, -(-len(streams) // n_hosts))
         lane_native = resolve_lane_native(self.cfg)
         scaler = None
         evict_after = policy.evict_tardy_after if policy is not None else None
+        pol = policy if policy is not None else ScalePolicy()
+
+        def step_for(n: int):
+            return _cached_multi_step(self.cfg, n, lane_native, placement)
+
+        def mk_scaler(_host: int = 0) -> LaneAutoscaler:
+            return LaneAutoscaler(step_for, ladder_rungs(pol.rungs, lanes),
+                                  policy=pol)
+
         if autoscale:
-            pol = policy if policy is not None else ScalePolicy()
             evict_after = pol.evict_tardy_after
-            scaler = LaneAutoscaler(
-                lambda n: _cached_multi_step(self.cfg, n, lane_native),
-                ladder_rungs(pol.rungs, lanes), policy=pol)
+
+        if n_hosts > 1:
+            factory = mk_scaler if autoscale else None
+            fleet = FleetScheduler(
+                step_for(lanes), self.store, n_hosts=n_hosts, n_lanes=lanes,
+                batch=self.batch, timeout_s=self.timeout_s,
+                max_in_flight=self.max_in_flight,
+                autoscaler_factory=factory, evict_tardy_after=evict_after,
+                clock=clock, placement_policy=placement_policy,
+                tick_delay_s=host_delay_s)
+            self.last_fleet = fleet          # placements/log for callers
+            return fleet.run(streams, sink=sink)
+
+        if autoscale:
+            scaler = mk_scaler()
             step = scaler.acquire_initial()
             lanes = scaler.rung
         else:
-            step = _cached_multi_step(self.cfg, lanes, lane_native)
+            step = step_for(lanes)
         scheduler = MultiStreamScheduler(
             step, self.store, n_lanes=lanes,
             batch=self.batch, timeout_s=self.timeout_s,
             max_in_flight=self.max_in_flight, autoscaler=scaler,
-            evict_tardy_after=evict_after, clock=clock)
+            evict_tardy_after=evict_after, clock=clock,
+            tick_delay_s=host_delay_s)
         return scheduler.run(streams, sink=sink)

@@ -1,0 +1,314 @@
+"""Fleet-tier serving: one front door over N host-level lane schedulers.
+
+The paper's headline result is distribution itself — three PCs over
+Ethernet beating one box (§4) — and ROADMAP's pod-scale item is its
+modern form: a pod should serve ``L × n_hosts`` streams behind one front
+door. This module grows the single-host ``MultiStreamScheduler`` into
+that front door:
+
+  * **Global EDF ordering** — all pending streams live in ONE shared
+    admission queue ordered by the same ``(priority, deadline, arrival)``
+    key as the single-host heap, so the earliest deadline in the *fleet*
+    is admitted next, whichever host has the free lane.
+  * **Sticky stream→host placement** — the first admission pins a stream
+    to its host; every re-admission (deadline preemption requeues) returns
+    to the same host. A stream's EMA ``AtmoState`` therefore NEVER
+    migrates between hosts: coherence state stays where it was built, and
+    ``ServeReport.migrations`` is reported (and asserted in tests) as 0.
+  * **Spillover admission** — a fresh stream prefers the host its
+    placement policy names; when that host's lanes are all claimed it is
+    admitted wherever a lane is free instead of queueing behind a full
+    host. Counted in ``ServeReport.spillovers``.
+
+Each host runs an unmodified ``MultiStreamScheduler`` serve loop
+(admission chaining, deadline eviction, per-host ``LaneAutoscaler``
+ladders) on its own thread — the subclass only reroutes the four
+pending-queue hooks to the shared queue. On this CPU container "hosts"
+are threads over one XLA device (the lane-*sharded* device step for a
+real pod is ``core.pipeline.make_step`` with a ``lane_axis`` placement);
+the scheduler tier is identical either way.
+
+Placement policies: ``"first-fit"`` (default) prefers host 0 for every
+fresh stream — a waterfall that fills hosts in order and makes spillover
+deterministic; ``"hash"`` spreads streams by a stable CRC32 of the stream
+id; a callable ``sid -> host`` plugs in anything else.
+
+``sink`` runs on the hosts' monitor threads concurrently — a fleet sink
+must be thread-safe across *different* streams (per-stream calls stay
+ordered, as always).
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+import zlib
+from typing import Callable, List, Optional, Sequence, Union
+
+from repro.stream.scheduler import (MultiSink, MultiStreamScheduler,
+                                    ServeReport, StreamEntry, StreamRequest,
+                                    _coerce_request, _Resume)
+from repro.stream.state import StreamStateStore
+
+PlacementPolicy = Union[str, Callable[[str], int]]
+
+
+def _resolve_policy(policy: PlacementPolicy, n_hosts: int
+                    ) -> Callable[[str], int]:
+    if callable(policy):
+        return lambda sid: int(policy(sid)) % n_hosts
+    if policy == "first-fit":
+        return lambda sid: 0
+    if policy == "hash":
+        return lambda sid: zlib.crc32(sid.encode()) % n_hosts
+    raise ValueError(
+        f"placement_policy must be 'first-fit', 'hash' or a callable, "
+        f"got {policy!r}")
+
+
+class _FleetQueue:
+    """The shared cross-host admission queue.
+
+    One sorted list of ``(key, seq, req, resume, pin)`` entries — ``key``
+    is the global EDF admission key (arrivals are assigned fleet-wide, so
+    keys are unique and ordering is total), ``pin`` forces a host
+    (preemption requeues pin to the placement host). ``pop_for(host)``
+    returns the best entry the host may take under stickiness + spillover;
+    occupancy accounting (``active`` vs per-host lane capacity) decides
+    when a non-preferred host may spill."""
+
+    def __init__(self, n_hosts: int, lanes_per_host: int,
+                 prefer: Callable[[str], int]):
+        self._entries: List[tuple] = []     # sorted by (key, seq)
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._arrival = 0
+        self._prefer = prefer
+        self._cap = [lanes_per_host] * n_hosts
+        self._active = [0] * n_hosts
+        # Sticky ledger: stream id -> host of first admission. Never
+        # rewritten — a conflicting re-admission would be a migration.
+        self.placements: dict = {}
+        self.spillovers = 0
+        self.migrations = 0
+        # One record per admission: {"stream_id", "host", "spillover",
+        # "resumed"} — the no-migration property test replays this.
+        self.admission_log: List[dict] = []
+
+    def _push(self, key, req: StreamRequest, resume: Optional[_Resume],
+              pin: Optional[int]) -> None:
+        bisect.insort(self._entries, (key, self._seq, req, resume, pin))
+        self._seq += 1
+
+    def seed(self, req: StreamRequest) -> None:
+        with self._lock:
+            self._push(req.admission_key(self._arrival), req, None, None)
+            self._arrival += 1
+
+    def push_requeue(self, req: StreamRequest, resume: _Resume,
+                     pin: int) -> None:
+        """Preemption requeue: re-keyed with a fleet-wide arrival (FIFO
+        behind the live queue, same as single-host) and pinned to the
+        stream's placement host."""
+        with self._lock:
+            self._active[pin] -= 1
+            self._push(req.admission_key(self._arrival), req, resume, pin)
+            self._arrival += 1
+
+    def note_freed(self, host: int) -> None:
+        """A lane on ``host`` was released without a requeue (stream
+        exhausted or error-path eviction)."""
+        with self._lock:
+            self._active[host] -= 1
+
+    def empty(self) -> bool:
+        with self._lock:
+            return not self._entries
+
+    def depth_for(self, host: int) -> int:
+        """Entries this host could eventually admit: pinned/placed here or
+        not yet placed anywhere."""
+        with self._lock:
+            n = 0
+            for _, _, req, _, pin in self._entries:
+                target = pin if pin is not None \
+                    else self.placements.get(req.stream_id)
+                if target is None or target == host:
+                    n += 1
+            return n
+
+    def pop_for(self, host: int):
+        """Best admissible entry for ``host`` (global EDF order), or None.
+
+        Rules, per entry in key order: draining resumes (barrier unset)
+        stay queued; placed/pinned streams only go to their own host
+        (stickiness); a fresh stream goes to its preferred host, or — when
+        the preferred host's lanes are all claimed — spills to whichever
+        host is asking."""
+        with self._lock:
+            for i, (key, _seq, req, resume, pin) in enumerate(self._entries):
+                if resume is not None and not resume.barrier.is_set():
+                    continue
+                sid = req.stream_id
+                target = pin if pin is not None else self.placements.get(sid)
+                spill = False
+                if target is not None:
+                    if target != host:
+                        continue
+                else:
+                    pref = self._prefer(sid)
+                    if pref != host:
+                        if self._active[pref] < self._cap[pref]:
+                            continue        # preferred host still has room
+                        spill = True
+                prev = self.placements.get(sid)
+                if prev is not None and prev != host:   # pragma: no cover
+                    self.migrations += 1                # asserted impossible
+                self.placements[sid] = host
+                self._active[host] += 1
+                if spill:
+                    self.spillovers += 1
+                self.admission_log.append({
+                    "stream_id": sid, "host": host, "spillover": spill,
+                    "resumed": resume is not None})
+                del self._entries[i]
+                return key, req, resume
+            return None
+
+
+class _HostScheduler(MultiStreamScheduler):
+    """One host's serve loop, pending queue rerouted to the fleet's."""
+
+    def __init__(self, fleet_queue: _FleetQueue, host_id: int, **kwargs):
+        super().__init__(**kwargs)
+        self._fleet_q = fleet_queue
+        self._host_id = host_id
+
+    def _queue_depth(self) -> int:
+        return self._fleet_q.depth_for(self._host_id)
+
+    def _pop_ready(self):
+        return self._fleet_q.pop_for(self._host_id)
+
+    def _push_requeue(self, key, req, resume) -> None:
+        del key                      # re-keyed with a fleet-wide arrival
+        self._fleet_q.push_requeue(req, resume, pin=self._host_id)
+
+    def _evict(self, lane_idx: int, packed, requeue: bool = False) -> None:
+        super()._evict(lane_idx, packed, requeue=requeue)
+        if not requeue:              # requeue already rebalanced the count
+            self._fleet_q.note_freed(self._host_id)
+
+    def _wait_pending(self) -> bool:
+        # Another host may still fill up and spill work this way; keep
+        # polling until the fleet queue is fully drained.
+        if self._fleet_q.empty():
+            return False
+        time.sleep(0.005)
+        return True
+
+
+class FleetScheduler:
+    """``n_hosts`` lane schedulers behind one front door (module docstring).
+
+    ``step`` is shared by every host (same jitted executable — the per-host
+    batches have identical shapes); ``autoscaler_factory(host_id)``
+    optionally gives each host its own ``LaneAutoscaler`` ladder (they
+    share the bounded step cache, so rungs compile once fleet-wide).
+    ``n_lanes`` is the per-host lane count — the fleet serves up to
+    ``n_hosts × n_lanes`` streams concurrently. ``tick_delay_s`` simulates
+    per-tick device service time (see ``MultiStreamScheduler``).
+    """
+
+    def __init__(self, step: Callable, store: StreamStateStore,
+                 n_hosts: int, n_lanes: int, batch: int = 8,
+                 timeout_s: float = 0.020, max_in_flight: int = 4,
+                 max_skipped_ids: int = 64,
+                 autoscaler_factory: Optional[Callable[[int], object]] = None,
+                 evict_tardy_after: Optional[int] = None,
+                 clock: Callable[[], float] = time.time,
+                 placement_policy: PlacementPolicy = "first-fit",
+                 tick_delay_s: float = 0.0):
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        self.n_hosts = n_hosts
+        self.n_lanes = n_lanes
+        self._prefer = _resolve_policy(placement_policy, n_hosts)
+        self._autoscaler_factory = autoscaler_factory
+        self._kw = dict(step=step, store=store, batch=batch,
+                        timeout_s=timeout_s, max_in_flight=max_in_flight,
+                        max_skipped_ids=max_skipped_ids,
+                        evict_tardy_after=evict_tardy_after, clock=clock,
+                        tick_delay_s=tick_delay_s)
+        self.queue: Optional[_FleetQueue] = None    # exposed for tests
+
+    def _build_hosts(self, queue: _FleetQueue) -> List[_HostScheduler]:
+        hosts = []
+        for h in range(self.n_hosts):
+            scaler = (self._autoscaler_factory(h)
+                      if self._autoscaler_factory is not None else None)
+            kw = dict(self._kw)
+            if scaler is not None:
+                kw["step"] = scaler.acquire_initial()
+            hosts.append(_HostScheduler(queue, h, n_lanes=self.n_lanes,
+                                        autoscaler=scaler, **kw))
+        return hosts
+
+    def run(self, streams: Sequence[StreamEntry],
+            sink: Optional[MultiSink] = None) -> ServeReport:
+        requests = []
+        for e in streams:       # plain loop: warning stacklevel -> caller
+            requests.append(_coerce_request(e))
+        sids = [r.stream_id for r in requests]
+        if len(set(sids)) != len(sids):
+            dupes = sorted({s for s in sids if sids.count(s) > 1})
+            raise ValueError(f"duplicate stream ids in one fleet serve: "
+                             f"{dupes}")
+        queue = _FleetQueue(self.n_hosts, self.n_lanes, self._prefer)
+        self.queue = queue
+        for req in requests:
+            queue.seed(req)
+        hosts = self._build_hosts(queue)
+
+        reports: List[Optional[ServeReport]] = [None] * self.n_hosts
+        errors: List[BaseException] = []
+
+        def serve_host(h: int) -> None:
+            try:
+                reports[h] = hosts[h].run([], sink=sink)
+            except BaseException as e:          # surfaced after the join
+                errors.append(e)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=serve_host, args=(h,),
+                                    name=f"fleet-host-{h}", daemon=True)
+                   for h in range(self.n_hosts)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wall = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+
+        done = [r for r in reports if r is not None]
+        per_stream = {}
+        for r in done:
+            per_stream.update(r.per_stream)
+        return ServeReport(
+            per_stream=per_stream,
+            frames=sum(r.frames for r in done),
+            skipped=sum(r.skipped for r in done),
+            wall_s=wall,
+            n_lanes=sum(r.n_lanes for r in done),
+            ticks=sum(r.ticks for r in done),
+            admissions=sum(r.admissions for r in done),
+            ladder_switches=sum(r.ladder_switches for r in done),
+            switch_wall_s=sum(r.switch_wall_s for r in done),
+            evictions=sum(r.evictions for r in done),
+            n_hosts=self.n_hosts,
+            spillovers=queue.spillovers,
+            migrations=queue.migrations)
+
+
+__all__ = ["FleetScheduler", "PlacementPolicy"]

@@ -128,8 +128,9 @@ def _coerce_request(entry: StreamEntry) -> StreamRequest:
     if isinstance(entry, (tuple, list)) and len(entry) in (2, 3):
         warnings.warn(
             "positional (stream_id, frames[, deadline]) stream entries are "
-            "deprecated; pass stream.StreamRequest(stream_id, frames, "
-            "deadline=..., priority=...) instead",
+            "deprecated and will be removed in v0.3; pass "
+            "stream.StreamRequest(stream_id, frames, deadline=..., "
+            "priority=...) instead",
             DeprecationWarning, stacklevel=3)
         return StreamRequest(entry[0], entry[1],
                              entry[2] if len(entry) > 2 else None)
@@ -159,7 +160,13 @@ class ServeReport:
 
     ``ladder_switches`` counts committed autoscale rung changes and
     ``evictions`` counts deadline preemptions (both 0 outside autoscale /
-    eviction serving).
+    eviction serving). The fleet tier (``stream.fleet``) aggregates
+    per-host reports into one: ``n_hosts`` > 1 then, ``n_lanes`` sums the
+    hosts' lanes, ``spillovers`` counts admissions that landed off the
+    stream's preferred host because its lanes were full, and
+    ``migrations`` counts sticky-placement violations — by construction
+    always 0 (a live stream's EMA state never moves hosts); it is
+    reported so serving code can *assert* that.
     """
     per_stream: Dict[str, StreamReport]
     frames: int          # total real frames stepped, all streams
@@ -171,6 +178,9 @@ class ServeReport:
     ladder_switches: int = 0
     switch_wall_s: float = 0.0   # serve-thread seconds spent in rung switches
     evictions: int = 0
+    n_hosts: int = 1
+    spillovers: int = 0
+    migrations: int = 0
 
     @property
     def fps(self) -> float:
@@ -246,7 +256,8 @@ class MultiStreamScheduler:
                  n_lanes: int, batch: int = 8, timeout_s: float = 0.020,
                  max_in_flight: int = 4, max_skipped_ids: int = 64,
                  autoscaler=None, evict_tardy_after: Optional[int] = None,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time,
+                 tick_delay_s: float = 0.0):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         self._step = step
@@ -259,6 +270,11 @@ class MultiStreamScheduler:
         self._autoscaler = autoscaler
         self._evict_tardy_after = evict_tardy_after
         self._clock = clock
+        # Simulated per-tick device service time (seconds) on the serve
+        # thread. 0 disables. The fleet benchmarks use this to model
+        # device-bound hosts on the CPU container: with a fixed per-tick
+        # cost, aggregate fps scales with how many hosts tick in parallel.
+        self._tick_delay_s = tick_delay_s
 
     # -- lane lifecycle ----------------------------------------------------
 
@@ -348,9 +364,32 @@ class MultiStreamScheduler:
                                 priority=lane.request.priority)
             arrival = self._arrival
             self._arrival += 1
-            heapq.heappush(self._pending,
-                           (req.admission_key(arrival), req,
-                            _Resume(final_state, cursor, barrier)))
+            self._push_requeue(req.admission_key(arrival), req,
+                               _Resume(final_state, cursor, barrier))
+
+    # -- pending-queue access (the fleet tier overrides these four to talk
+    # -- to a shared cross-host queue instead of the local heap) -----------
+
+    def _queue_depth(self) -> int:
+        """Streams waiting for a lane (this scheduler's view)."""
+        return len(self._pending)
+
+    def _push_requeue(self, key, req: StreamRequest,
+                      resume: "_Resume") -> None:
+        """Return a preempted stream to the pending queue."""
+        heapq.heappush(self._pending, (key, req, resume))
+
+    def _wait_pending(self) -> bool:
+        """No live lanes: ``True`` = pending work may still arrive, wait
+        briefly and retry the admission loop; ``False`` = drained, exit.
+
+        Single-host: every pending entry is a preempted stream still
+        draining its previous segment's monitor — wait for the earliest
+        barrier."""
+        if self._pending:
+            self._pending[0][2].barrier.wait(timeout=0.1)
+            return True
+        return False
 
     def _pop_ready(self):
         """Pop the best pending entry whose resume barrier (if any) is set;
@@ -416,7 +455,7 @@ class MultiStreamScheduler:
 
     def _maybe_autoscale(self, packed: AtmoState) -> AtmoState:
         occupied = sum(1 for ln in self._lanes if ln is not None)
-        target = self._autoscaler.observe(len(self._pending), occupied)
+        target = self._autoscaler.observe(self._queue_depth(), occupied)
         if target is None or target == self.n_lanes or occupied > target:
             return packed
         t0 = time.perf_counter()
@@ -431,7 +470,7 @@ class MultiStreamScheduler:
         a lane for ``evict_tardy_after`` ticks while others queue is
         checkpointed and requeued (see ``_evict(requeue=True)``)."""
         for i, lane in enumerate(self._lanes):
-            if not self._pending:
+            if self._queue_depth() == 0:
                 return
             if (lane is not None and lane.request.deadline is not None
                     and lane.ticks >= self._evict_tardy_after
@@ -520,11 +559,7 @@ class MultiStreamScheduler:
                 fbs.append(fb)
             live = [fb for fb in fbs if fb is not None]
             if not live:
-                if self._pending:
-                    # Every pending entry is a preempted stream still
-                    # draining its previous segment's monitor; wait for
-                    # the earliest barrier and retry.
-                    self._pending[0][2].barrier.wait(timeout=0.1)
+                if self._wait_pending():
                     continue
                 break
 
@@ -555,6 +590,8 @@ class MultiStreamScheduler:
             out = self._step(frames, ids, packed)
             packed = out.state          # device-resident, possibly in flight
             self._packed = packed
+            if self._tick_delay_s > 0.0:
+                time.sleep(self._tick_delay_s)
             th = threading.Thread(target=self._complete,
                                   args=(metas, out), daemon=True)
             th.start()

@@ -15,7 +15,7 @@ import types
 import numpy as np
 import pytest
 
-from repro.core import DehazeConfig
+from repro.core import DehazeConfig, PlacementSpec
 from repro.stream import (ElasticServer, LaneAutoscaler, ScalePolicy,
                           StreamRequest, ladder_rungs)
 
@@ -143,9 +143,10 @@ def test_ladder_warms_off_the_serve_thread():
     assert sc.wait_warm(timeout=120.0)
     assert not sc._warm_errors
     main = threading.get_ident()
-    assert _STEP_CACHE.built_by[("multi", cfg, rungs[0], False)] == main
+    place = PlacementSpec.lane_batched()
+    assert _STEP_CACHE.built_by[("multi", cfg, rungs[0], False, place)] == main
     for rung in rungs[1:]:
-        key = ("multi", cfg, rung, False)
+        key = ("multi", cfg, rung, False, place)
         assert _STEP_CACHE.built_by[key] != main
         assert sc.is_ready(rung)
     # The warm pass actually built (missed) the non-initial rungs.

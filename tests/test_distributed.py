@@ -319,3 +319,79 @@ def test_seq_sharded_lm_forward_matches():
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-4)
         print("ok")
     """)
+
+
+def test_batch_axes_for_pod_prefix():
+    """Regression: the prefix walk must try ("pod", "data") THEN ("pod",) —
+    the old loop built prefixes back-to-front and could never return the
+    pod-only prefix, silently replicating pod-divisible batches."""
+    from repro.launch.mesh import batch_axes_for
+
+    class PodMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 3, "model": 4}
+
+    class DataMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    assert batch_axes_for(PodMesh(), 6) == ("pod", "data")
+    assert batch_axes_for(PodMesh(), 12) == ("pod", "data")
+    assert batch_axes_for(PodMesh(), 4) == ("pod",)     # the fixed case
+    assert batch_axes_for(PodMesh(), 2) == ("pod",)
+    assert batch_axes_for(PodMesh(), 9) is None         # divides neither
+    assert batch_axes_for(PodMesh(), 3) is None         # data alone: no prefix
+    assert batch_axes_for(DataMesh(), 8) == ("data",)
+    assert batch_axes_for(DataMesh(), 3) is None
+
+
+def test_lane_sharded_step_matches_per_lane_single_device():
+    """The tentpole composition: lanes sharded over the data axis (each
+    lane's causal chain shard-local, EMA rows co-placed via P(lane_axis)),
+    with and without simultaneous height-halo sharding (n_h 2) — both the
+    lane-native/fused and the staged ref substrate must match L independent
+    single-device ``make_dehaze_step`` chains."""
+    run_child("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import compat
+        from repro.core import (DehazeConfig, PlacementSpec, make_step,
+                                make_dehaze_step, init_atmo_state,
+                                init_atmo_state_lanes, get_lane_state)
+        mesh = compat.make_mesh((2, 2), ("data", "model"))
+        rng = np.random.default_rng(7)
+        L, B, H, W = 4, 3, 32, 32
+        frames = jnp.asarray(rng.random((L, B, H, W, 3), np.float32))
+        ids = jnp.tile(jnp.arange(B, dtype=jnp.int32), (L, 1))
+        placements = [
+            PlacementSpec.lane_sharded(lane_axis="data"),
+            PlacementSpec.lane_sharded(lane_axis="data",
+                                       height_axis="model"),   # n_h 2
+        ]
+        for mode, tol in (("ref", 3e-5), ("fused", 2e-4)):
+            cfg = DehazeConfig(kernel_mode=mode, patch_radius=3,
+                               gf_radius=4, update_period=2, topk=4)
+            ref_step = jax.jit(make_dehaze_step(
+                DehazeConfig(kernel_mode="ref", patch_radius=3,
+                             gf_radius=4, update_period=2, topk=4)))
+            refs = [ref_step(frames[l], ids[l], init_atmo_state())
+                    for l in range(L)]
+            for place in placements:
+                step = make_step(cfg, place, mesh)
+                with mesh:
+                    out = jax.jit(step)(frames, ids,
+                                        init_atmo_state_lanes(L))
+                for l in range(L):
+                    np.testing.assert_allclose(
+                        np.asarray(out.frames[l]),
+                        np.asarray(refs[l].frames), atol=tol)
+                    np.testing.assert_allclose(
+                        np.asarray(out.atmo_light[l]),
+                        np.asarray(refs[l].atmo_light), atol=tol)
+                    st = get_lane_state(out.state, l)
+                    np.testing.assert_allclose(
+                        np.asarray(st.A), np.asarray(refs[l].state.A),
+                        atol=tol)
+                    assert int(st.last_update) \\
+                        == int(refs[l].state.last_update)
+        print("ok")
+    """, devices=4)

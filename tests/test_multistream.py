@@ -413,3 +413,21 @@ def test_admission_deadline_streams_complete_and_match():
         for fid, f in ref_outs.items():
             np.testing.assert_allclose(outs[(sid, fid)], f, atol=ATOL,
                                        rtol=0)
+
+def test_legacy_tuple_warning_points_at_caller():
+    """The DeprecationWarning's stacklevel must attribute the legacy tuple
+    to the code that passed it (this file), not to repro internals — and
+    the message must carry the removal version so the attribution is
+    actionable."""
+    import warnings as _warnings
+    cfg = DehazeConfig(kernel_mode="ref", gf_radius=2)
+    vids = _streams(1, [3], seed=37)
+    srv = ElasticServer(cfg, batch=4, timeout_s=5.0)
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always", DeprecationWarning)
+        srv.serve_many([("legacy", iter(vids[0]))])
+    got = [c for c in caught if issubclass(c.category, DeprecationWarning)]
+    assert got, "legacy tuple entry must warn"
+    assert all(c.filename == __file__ for c in got), \
+        [(c.filename, c.lineno) for c in got]
+    assert "removed in v0.3" in str(got[0].message)

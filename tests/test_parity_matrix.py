@@ -361,3 +361,57 @@ def test_sharded_parity_tie_plateau():
                                        err_msg=km)
         print("ok")
     """)
+
+
+# ---------------------------------------------------------------------------
+# Fleet cells ({1 host, 2 hosts} x {staged, lane_native}, serving tier).
+# The n_h 2 dimension of the fleet bar — lanes sharded over the data axis
+# composed with height-halo sharding — runs in
+# test_distributed.test_lane_sharded_step_matches_per_lane_single_device.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", ["staged", "lane_native"])
+@pytest.mark.parametrize("n_hosts", [1, 2])
+def test_fleet_parity_cells(n_hosts, path):
+    """Fleet serve == single-host serve, bit-for-bit per stream: emitted
+    frames (the EMA trajectory is baked into every recovered frame via
+    a_seq), final EMA state, cursors. Sticky placement asserted: zero EMA
+    migrations; at 2 hosts the first-fit waterfall must spill."""
+    from repro.stream import ElasticServer, StreamRequest
+
+    cfg = _cfg("dcp", 4, "fused" if path == "lane_native" else "staged")
+
+    def stream_frames():
+        return [[np.asarray(f) for f in _frames(seed=40 + i, b=6, h=24, w=24)]
+                for i in range(4)]
+
+    def run(server, n):
+        sunk = {}
+        rep = server.serve_many(
+            [StreamRequest(f"v{i}", iter(v))
+             for i, v in enumerate(stream_frames())],
+            n_lanes=2, n_hosts=n,
+            sink=lambda s, f, p: sunk.setdefault(s, []).append((f, p.copy())))
+        return rep, sunk
+
+    base = ElasticServer(cfg, batch=3, timeout_s=5.0)
+    rep_w, want = run(base, 1)
+    srv = ElasticServer(cfg, batch=3, timeout_s=5.0)
+    rep_g, got = run(srv, n_hosts)
+
+    tag = f"fleet/{n_hosts}host/{path}"
+    assert rep_g.frames == rep_w.frames == 24, tag
+    assert rep_g.skipped == 0 and rep_g.migrations == 0, tag
+    if n_hosts > 1:
+        assert rep_g.spillovers >= 1, tag
+        placements = srv.last_fleet.queue.placements
+        assert all(e["host"] == placements[e["stream_id"]]
+                   for e in srv.last_fleet.queue.admission_log), tag
+    for sid in want:
+        assert [f for f, _ in got[sid]] == [f for f, _ in want[sid]], tag
+        for (_, a), (_, b) in zip(got[sid], want[sid]):
+            np.testing.assert_array_equal(a, b, err_msg=f"{tag}/{sid}")
+        np.testing.assert_array_equal(
+            np.asarray(srv.store.get(sid).A),
+            np.asarray(base.store.get(sid).A), err_msg=f"{tag}/{sid}")
+        assert srv.store.cursor(sid) == base.store.cursor(sid), tag

@@ -1,0 +1,112 @@
+"""PlacementSpec: validation, hashability, derived PartitionSpecs, wire
+roundtrip — the declarative layer every step builder now runs through."""
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import PlacementSpec
+
+
+# --- construction + validation ----------------------------------------------
+
+def test_constructors_validate_clean():
+    PlacementSpec.single()
+    PlacementSpec.lane_batched()
+    PlacementSpec.lane_batched(n_hosts=4)
+    PlacementSpec.lane_sharded()
+    PlacementSpec.lane_sharded(lane_axis="data", height_axis="model")
+    PlacementSpec.frame_sharded()
+    PlacementSpec.frame_sharded(batch_axes=("pod", "data"),
+                                height_axis="model", width_axis="model2")
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(n_hosts=0), "n_hosts"),
+    (dict(lane_axis="data"), "requires lanes=True"),
+    (dict(lanes=True, lane_axis="data", batch_axes=("pod",)),
+     "mutually exclusive"),
+    (dict(lanes=True, batch_axes=("data",)), "do not shard the frame axis"),
+    (dict(batch_axes=("data",), height_axis="data"), "distinct"),
+    (dict(lanes=True, lane_axis="data", height_axis="data"), "distinct"),
+])
+def test_validate_rejects(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        PlacementSpec(**kwargs).validate()
+
+
+def test_hashable_and_cache_key_stable():
+    """The spec keys the serving step cache: equal placements must hash
+    equal even when batch_axes arrives as a JSON list."""
+    a = PlacementSpec(batch_axes=("data",), height_axis="model")
+    b = PlacementSpec(batch_axes=["data"], height_axis="model")  # type: ignore
+    assert a == b and hash(a) == hash(b)
+    assert isinstance(b.batch_axes, tuple)
+    assert len({a, b}) == 1
+    # frozen: no mutation after construction
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.lanes = True  # type: ignore[misc]
+
+
+# --- derived views -----------------------------------------------------------
+
+def test_mesh_axes_and_sharded_flag():
+    assert PlacementSpec.single().mesh_axes == ()
+    assert not PlacementSpec.single().sharded
+    assert not PlacementSpec.lane_batched(n_hosts=2).sharded
+    assert PlacementSpec.lane_sharded(
+        lane_axis="data", height_axis="model").mesh_axes == ("data", "model")
+    assert PlacementSpec.frame_sharded(
+        batch_axes=("pod", "data"), height_axis="model").mesh_axes \
+        == ("pod", "data", "model")
+
+
+def test_partition_specs_single_and_frame_sharded():
+    single = PlacementSpec.single()
+    assert single.frame_spec() == P(None, None, None)
+    assert single.ids_spec() == P(None)
+    assert single.state_spec().A == P()
+
+    fs = PlacementSpec.frame_sharded(batch_axes=("data",),
+                                     height_axis="model")
+    assert fs.frame_spec() == P(("data",), "model", None)
+    assert fs.ids_spec() == P(("data",))
+    assert fs.state_spec().A == P()          # replicated: collective sync
+
+
+def test_partition_specs_lane_placements():
+    lb = PlacementSpec.lane_batched()
+    assert lb.frame_spec() == P(None, None, None, None)
+    assert lb.ids_spec() == P(None)
+    assert lb.state_spec().A == P(None)
+
+    ls = PlacementSpec.lane_sharded(lane_axis="data", height_axis="model")
+    assert ls.frame_spec() == P("data", None, "model", None)
+    assert ls.ids_spec() == P("data")
+    # EMA rows co-placed with their lanes — the no-sync invariant
+    st = ls.state_spec()
+    assert st.A == P("data")
+    assert st.last_update == P("data")
+    assert st.initialized == P("data")
+
+
+# --- wire form ---------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    PlacementSpec.single(),
+    PlacementSpec.lane_batched(n_hosts=3),
+    PlacementSpec.lane_sharded(lane_axis="data", height_axis="model",
+                               n_hosts=2),
+    PlacementSpec.frame_sharded(batch_axes=("pod", "data"),
+                                height_axis="model", width_axis="model2"),
+])
+def test_dict_roundtrip(spec):
+    d = spec.to_dict()
+    assert isinstance(d["batch_axes"], list)          # JSON-able
+    back = PlacementSpec.from_dict(d)
+    assert back == spec and hash(back) == hash(spec)
+
+
+def test_from_dict_validates():
+    with pytest.raises(ValueError, match="requires lanes=True"):
+        PlacementSpec.from_dict({"lane_axis": "data"})
