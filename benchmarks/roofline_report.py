@@ -1,21 +1,103 @@
 """Roofline report: reads the dry-run JSON records (results/dryrun/) and
 emits one row per (arch x shape x mesh) with the three roofline terms,
 dominant bottleneck, and the useful-FLOPs ratio. This is the bench view
-of deliverable (g); EXPERIMENTS.md carries the narrative."""
+of deliverable (g); EXPERIMENTS.md carries the narrative.
+
+Also emits ``roofline/fused_io/*`` rows: the fused megakernel's
+*measured* per-frame HBM byte footprint per ingest dtype, summed from the
+traced ``pallas_call`` operand/result avals — so a uint8 stream is
+verified to hit the ~1·I_u8 + out target (the kernel reads wire bytes; no
+hidden XLA upcast copy in front of it). The uint8 row carries an ``ok``
+flag gating input bytes <= 30% of the f32 baseline; ``main`` exits
+nonzero when it fails."""
 from __future__ import annotations
 
 import json
 import os
+import sys
 from typing import List, Tuple
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "dryrun")
 
+U8_INPUT_RATIO_TARGET = 0.30
+
+
+def _pallas_io_bytes(fn, *args) -> Tuple[int, int]:
+    """(input bytes, output bytes) summed over every ``pallas_call`` in
+    ``fn``'s traced program — the kernel-boundary HBM traffic, at the
+    dtypes the kernel actually reads/writes. Tracing only."""
+    import jax
+    import numpy as np
+    from repro.kernels.ops import _iter_jaxprs
+
+    calls = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                calls.append(eqn)
+            for v in eqn.params.values():
+                for sub in _iter_jaxprs(v):
+                    walk(sub)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+    def nbytes(atoms):
+        return sum(int(np.prod(a.aval.shape)) * a.aval.dtype.itemsize
+                   for a in atoms)
+
+    return (sum(nbytes(e.invars) for e in calls),
+            sum(nbytes(e.outvars) for e in calls))
+
+
+def _fused_io_rows() -> List[Tuple[str, float, str]]:
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    b, h, w = 2, 32, 40
+    base = np.random.default_rng(0).random((b, h, w, 3), np.float32)
+    ids = jnp.arange(b, dtype=jnp.int32)
+    A0 = jnp.ones((3,), jnp.float32)
+    k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+    init = jnp.asarray(False)
+    kw = dict(radius=3, omega=0.95, refine=True, gf_radius=4, gf_eps=1e-3,
+              t0=0.1, gamma=1.0, period=8, lam=0.05)
+
+    def measure(io_dtype):
+        img = jnp.asarray(kref.quantize_frames(base, io_dtype))
+        in_b, out_b = _pallas_io_bytes(
+            lambda x: ops.fused_dehaze(x, ids, A0, k0, init,
+                                       mode="interpret", **kw)[:2], img)
+        return img, in_b, out_b
+
+    out = []
+    _, f32_in, f32_out = measure("float32")
+    out.append(("roofline/fused_io/float32", (f32_in + f32_out) / b,
+                f"in_bytes_per_frame={f32_in / b:.0f};"
+                f"out_bytes_per_frame={f32_out / b:.0f}"))
+    for io_dtype in ("uint8", "bfloat16"):
+        img, in_b, out_b = measure(io_dtype)
+        ratio = in_b / f32_in
+        detail = (f"in_bytes_per_frame={in_b / b:.0f};"
+                  f"out_bytes_per_frame={out_b / b:.0f};"
+                  f"input_ratio_vs_f32={ratio:.2f}")
+        if io_dtype == "uint8":
+            ok = ratio <= U8_INPUT_RATIO_TARGET
+            detail += (f";target<={U8_INPUT_RATIO_TARGET:.2f};"
+                       f"ok={'yes' if ok else 'NO'}")
+        out.append((f"roofline/fused_io/{io_dtype}", (in_b + out_b) / b,
+                    detail))
+    return out
+
 
 def rows() -> List[Tuple[str, float, str]]:
-    out = []
+    out = _fused_io_rows()
     if not os.path.isdir(RESULTS_DIR):
-        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+        return out + [("roofline/missing", 0.0,
+                       "run repro.launch.dryrun first")]
     for name in sorted(os.listdir(RESULTS_DIR)):
         if not name.endswith(".json"):
             continue
@@ -40,5 +122,11 @@ def rows() -> List[Tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
+    bad = False
     for name, us, derived in rows():
         print(f"{name},{us:.1f},{derived}")
+        bad = bad or "ok=NO" in derived
+    if bad:
+        print("FAIL: fused_io uint8 input bytes exceed the roofline target",
+              file=sys.stderr)
+        sys.exit(1)

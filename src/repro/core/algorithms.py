@@ -160,7 +160,7 @@ def fused_dehaze(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
         beta=cfg.beta, cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2),
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
         t0=cfg.t0, gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
-        topk=cfg.topk, mode=cfg.kernel_mode)
+        topk=cfg.topk, out_dtype=cfg.out_dtype, mode=cfg.kernel_mode)
     new_state = AtmoState(
         A=a_fin, last_update=k_fin,
         initialized=jnp.logical_or(state.initialized,
@@ -189,7 +189,7 @@ def fused_dehaze_lanes(frames: jnp.ndarray, frame_ids: jnp.ndarray, state,
         beta=cfg.beta, cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2),
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
         t0=cfg.t0, gamma=cfg.gamma, period=cfg.update_period, lam=cfg.lam,
-        topk=cfg.topk, mode=cfg.kernel_mode)
+        topk=cfg.topk, out_dtype=cfg.out_dtype, mode=cfg.kernel_mode)
     return J, t, a_seq, state_from_lane_carry(cf, ci)
 
 
@@ -201,7 +201,7 @@ def fused_transmission(frames: jnp.ndarray, a_saved: jnp.ndarray,
         omega=cfg.omega, beta=cfg.beta,
         cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2), refine=cfg.refine,
         gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, topk=cfg.topk,
-        mode=cfg.kernel_mode)
+        out_dtype=cfg.out_dtype, mode=cfg.kernel_mode)
 
 
 def fused_transmission_lanes(frames: jnp.ndarray, a_saved: jnp.ndarray,
@@ -221,7 +221,7 @@ def fused_transmission_lanes(frames: jnp.ndarray, a_saved: jnp.ndarray,
         omega=cfg.omega, beta=cfg.beta,
         cap_w=(cfg.cap_w0, cfg.cap_w1, cfg.cap_w2), refine=cfg.refine,
         gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps, topk=cfg.topk,
-        mode=cfg.kernel_mode)
+        out_dtype=cfg.out_dtype, mode=cfg.kernel_mode)
 
 
 def merge_topk_candidates(tk_t: jnp.ndarray, tk_gidx: jnp.ndarray,
@@ -248,4 +248,4 @@ def fused_transmission_halo(frames: jnp.ndarray, pre_ext: jnp.ndarray,
         frames, pre_ext, guide_ext, valid, valid_w, algorithm=cfg.algorithm,
         radius=cfg.patch_radius, omega=cfg.omega, beta=cfg.beta,
         refine=cfg.refine, gf_radius=cfg.gf_radius, gf_eps=cfg.gf_eps,
-        topk=cfg.topk, mode=cfg.kernel_mode)
+        topk=cfg.topk, out_dtype=cfg.out_dtype, mode=cfg.kernel_mode)

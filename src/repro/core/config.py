@@ -50,6 +50,16 @@ class DehazeConfig:
     #                             instead of 3-ch RGB halos (1/3 less wire)
     halo_dtype: str = "float32" # bfloat16 halves halo wire bytes
 
+    # Frame I/O dtype contract (README §Dtype contract). ``io_dtype`` is the
+    # wire/ingest dtype of the frame stream — uint8 frames are the
+    # quantization round(v*255) of the [0,1] float image and are upcast
+    # in-VMEM by the kernels (kernels.ref.upcast_frames is THE canonical
+    # form), cutting input HBM traffic 4x vs f32. Compute is always f32.
+    # ``out_dtype`` is the J/t output dtype; "auto" follows the incoming
+    # frame dtype for float ingest and resolves to float32 for uint8.
+    io_dtype: str = "float32"   # float32 | bfloat16 | uint8
+    out_dtype: str = "auto"     # auto | float32 | bfloat16
+
     def validate(self) -> "DehazeConfig":
         assert self.algorithm in ("dcp", "cap"), self.algorithm
         assert self.kernel_mode in ("auto", "ref", "pallas", "interpret",
@@ -58,4 +68,6 @@ class DehazeConfig:
         assert self.update_period >= 1
         assert self.patch_radius >= 0 and self.gf_radius >= 0
         assert 0.0 < self.t0 < 1.0
+        assert self.io_dtype in ("float32", "bfloat16", "uint8"), self.io_dtype
+        assert self.out_dtype in ("auto", "float32", "bfloat16"), self.out_dtype
         return self

@@ -36,6 +36,7 @@ from repro.core.normalize import (AtmoState, ema_scan, ema_scan_associative,
                                   init_atmo_state_lanes, pack_atmo_states,
                                   unpack_atmo_states)
 from repro.core.placement import PlacementSpec
+from repro.kernels import ref as kref
 
 
 @jax.tree_util.register_dataclass
@@ -45,6 +46,24 @@ class DehazeOutput:
     transmission: jnp.ndarray  # (B, H, W) refined t
     atmo_light: jnp.ndarray    # (B, 3) per-frame normalized A
     state: AtmoState
+
+
+def _ingest(frames: jnp.ndarray, cfg: DehazeConfig):
+    """Resolve the frame I/O dtype contract for one step invocation.
+
+    Returns ``(x, odt)``: ``x`` is the compute-dtype view of ``frames``
+    (float ingest passes through untouched — bit-identical to the
+    pre-contract pipeline; uint8 ingest upcasts via the canonical
+    ``kernels.ref.upcast_frames`` quantization map) and ``odt`` is the
+    resolved output dtype for J / t / A per ``cfg.out_dtype``. The fused
+    megakernels never see ``x`` — they take the raw wire-dtype frames and
+    upcast in-VMEM (that is the 4x input-HBM-traffic win); ``x`` feeds the
+    staged XLA chain and the host-side epilogue stages.
+    """
+    odt = kref.resolve_out_dtype(frames.dtype, cfg.out_dtype)
+    x = frames if jnp.issubdtype(frames.dtype, jnp.floating) \
+        else kref.upcast_frames(frames)
+    return x, odt
 
 
 # ---------------------------------------------------------------------------
@@ -96,9 +115,11 @@ def _make_single_step(cfg: DehazeConfig, associative: bool = True):
     if cfg.kernel_mode == "fused" and alg.supports_fused(cfg):
         def fused_step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
                        state: AtmoState) -> DehazeOutput:
+            # Raw wire-dtype frames go straight into the megakernel (in-VMEM
+            # upcast); the kernel's J dtype IS the resolved out dtype.
             out, t, a_seq, new_state = alg.fused_dehaze(
                 frames, frame_ids, state, cfg)
-            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+            return DehazeOutput(out, t, a_seq.astype(out.dtype), new_state)
         return fused_step
 
     t_est = alg.get_transmission_estimator(cfg.algorithm)
@@ -106,19 +127,21 @@ def _make_single_step(cfg: DehazeConfig, associative: bool = True):
 
     def step(frames: jnp.ndarray, frame_ids: jnp.ndarray,
              state: AtmoState) -> DehazeOutput:
+        x, odt = _ingest(frames, cfg)
         # Component 1: transmission from the *saved* shared A (paper §3.3).
-        t_raw = t_est(frames, state.A, cfg)
+        t_raw = t_est(x, state.A, cfg)
         # Component 2: per-frame candidates, then cross-frame normalization.
-        a_new = alg.estimate_atmospheric_light(frames, t_raw, cfg)
+        a_new = alg.estimate_atmospheric_light(x, t_raw, cfg)
         a_seq, new_state = scan(a_new, frame_ids, state,
                                 cfg.update_period, cfg.lam)
-        a_seq = a_seq.astype(frames.dtype)
+        a_seq = a_seq.astype(x.dtype)
         if cfg.recompute_t_with_final_a and cfg.algorithm == "dcp":
-            t_raw = t_est(frames, a_seq, cfg)
-        t = alg.refine_transmission(frames, t_raw, cfg)
+            t_raw = t_est(x, a_seq, cfg)
+        t = alg.refine_transmission(x, t_raw, cfg)
         # Component 3: haze-free generation.
-        out = alg.generate_haze_free(frames, t, a_seq, cfg)
-        return DehazeOutput(out, t, a_seq, new_state)
+        out = alg.generate_haze_free(x, t, a_seq, cfg)
+        return DehazeOutput(out.astype(odt), t.astype(odt),
+                            a_seq.astype(odt), new_state)
 
     return step
 
@@ -180,7 +203,7 @@ def _make_lane_step(cfg: DehazeConfig, associative: bool = True,
                       state: AtmoState) -> DehazeOutput:
             out, t, a_seq, new_state = alg.fused_dehaze_lanes(
                 frames, frame_ids, state, cfg)
-            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+            return DehazeOutput(out, t, a_seq.astype(out.dtype), new_state)
         return lane_step
     return jax.vmap(_make_single_step(cfg, associative=associative))
 
@@ -412,15 +435,17 @@ def _make_sharded_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             t = t_raw
         return t, rgb
 
-    def fused_t_and_candidates(frames, a_saved):
+    def fused_t_and_candidates(frames, x, a_saved):
         """Fused megakernel form of ``staged_t_and_candidates``: one launch
-        per block instead of the masked per-stage XLA chain."""
+        per block instead of the masked per-stage XLA chain. ``frames`` is
+        the raw wire-dtype block (the kernels upcast in-VMEM); ``x`` its
+        compute-dtype view for the XLA-side premap/guide stages."""
         if spatial_axes:
             # Halo-aware fused kernel: the exchange output is the kernel
-            # input; masking (and any bf16 -> f32 upcast of packed halo
-            # planes) happens in-VMEM.
+            # input; masking (and any bf16/uint8 -> f32 upcast of wire
+            # frames or packed halo planes) happens in-VMEM.
             pre_ext, guide_ext, valid_h, valid_w = halo_premap_and_guide(
-                frames, a_saved, keep_halo_dtype=cfg.halo_packed)
+                x, a_saved, keep_halo_dtype=cfg.halo_packed)
             t, tk_t, tk_rgb, tk_idx = alg.fused_transmission_halo(
                 frames, pre_ext, guide_ext, valid_h, valid_w, cfg)
             rgb = candidates_from_local_topk(tk_t, tk_rgb, tk_idx, frames)
@@ -430,11 +455,12 @@ def _make_sharded_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
 
     def local_step(frames, frame_ids, state):
         b_loc = frames.shape[0]
+        x, odt = _ingest(frames, cfg)
         if use_fused:
             # Components 1 + 2 candidates + refinement in ONE launch.
-            t, rgb = fused_t_and_candidates(frames, state.A)
+            t, rgb = fused_t_and_candidates(frames, x, state.A)
         else:
-            t, rgb = staged_t_and_candidates(frames, state.A)
+            t, rgb = staged_t_and_candidates(x, state.A)
 
         # State sync: all-gather candidates over the frame axes, scan,
         # slice the local part (the paper's A broadcast, minus the race).
@@ -444,12 +470,13 @@ def _make_sharded_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             a_all, ids_all, state, cfg.update_period, cfg.lam)
         didx = lax.axis_index(batch_axes)
         a_seq = lax.dynamic_slice_in_dim(a_seq_all, didx * b_loc, b_loc)
-        a_seq = a_seq.astype(frames.dtype)
+        a_seq = a_seq.astype(x.dtype)
 
         # --- Component 3 on the core block. ---
-        out = alg.generate_haze_free(frames, t, a_seq,
+        out = alg.generate_haze_free(x, t, a_seq,
                                      dataclasses.replace(cfg, kernel_mode="ref"))
-        return DehazeOutput(out, t, a_seq, new_state)
+        return DehazeOutput(out.astype(odt), t.astype(odt),
+                            a_seq.astype(odt), new_state)
 
     def lane_local_step(frames, frame_ids, state):
         # frames (L_loc, B, h, w, 3); state rows (L_loc,) — whole lanes
@@ -459,7 +486,8 @@ def _make_sharded_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             # Whole chain in one lane-native launch per shard.
             out, t, a_seq, new_state = alg.fused_dehaze_lanes(
                 frames, frame_ids, state, cfg)
-            return DehazeOutput(out, t, a_seq.astype(frames.dtype), new_state)
+            return DehazeOutput(out, t, a_seq.astype(out.dtype), new_state)
+        x, odt = _ingest(frames, cfg)
         if use_fused and not spatial_axes:
             # Per-lane saved-A fused t + candidates
             # (fused_transmission_lanes_pallas's building-block input).
@@ -471,21 +499,23 @@ def _make_sharded_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
             # (each lane's A repeated over its batch) stand in for the
             # replicated A of the classic step.
             flat = frames.reshape((l_loc * b,) + frames.shape[2:])
+            flat_x = x.reshape((l_loc * b,) + x.shape[2:])
             a_pf = jnp.repeat(state.A.astype(jnp.float32), b,
                               axis=0)[:, None, None, :]
             if use_fused:
-                t, rgb = fused_t_and_candidates(flat, a_pf)
+                t, rgb = fused_t_and_candidates(flat, flat_x, a_pf)
             else:
-                t, rgb = staged_t_and_candidates(flat, a_pf)
+                t, rgb = staged_t_and_candidates(flat_x, a_pf)
             t = t.reshape((l_loc, b) + t.shape[1:])
             rgb = rgb.reshape(l_loc, b, 3)
         a_seq, new_state = ema_scan_lanes(rgb, frame_ids, state,
                                           cfg.update_period, cfg.lam,
                                           associative=associative)
-        a_seq = a_seq.astype(frames.dtype)
-        out = alg.generate_haze_free(frames, t, a_seq,
+        a_seq = a_seq.astype(x.dtype)
+        out = alg.generate_haze_free(x, t, a_seq,
                                      dataclasses.replace(cfg, kernel_mode="ref"))
-        return DehazeOutput(out, t, a_seq, new_state)
+        return DehazeOutput(out.astype(odt), t.astype(odt),
+                            a_seq.astype(odt), new_state)
 
     step = compat.shard_map(
         lane_local_step if lanes else local_step, mesh=mesh,

@@ -68,6 +68,24 @@ unsharded ``lax.top_k`` bit-for-bit.
 Semantics match ``make_dehaze_step``: the pre-map for *every* frame in the
 batch uses the batch-entry saved A (paper §3.3 — the T-estimator runs
 before the A refresh), while recovery uses the per-frame EMA output.
+
+**Frame I/O dtype contract.** Every kernel accepts frames in the wire
+dtype (f32, bf16, or uint8) and upcasts in-VMEM via the canonical
+``ref.upcast_frames`` (uint8 is the quantization ``round(v*255)``, so the
+upcast is ``/255``) — compute is always f32, and uint8 ingest cuts input
+HBM traffic 4x. ``out_dtype`` picks the J/t output dtype (default:
+follow float ingest, f32 for uint8); ``a_seq`` stays f32.
+
+**Double buffering.** ``buffer_depth >= 2`` switches the frame input (and
+the halo planes, for the halo kernel) to ``memory_space=ANY`` (HBM) and
+streams blocks through a ``(depth, fpb, ...)`` VMEM scratch ring with
+manual ``pltpu.make_async_copy`` DMAs: the copy of grid step n+1 is
+started before compute on step n, so the sequential grid overlaps
+HBM->VMEM traffic with compute instead of serializing on each block's
+implicit BlockSpec copy. ``buffer_depth=1`` is the classic automatic
+pipeline (the interpret-safe fallback the dispatch layer selects on the
+interpret substrate); the manual-DMA path itself also runs under
+``interpret=True`` for parity tests.
 """
 from __future__ import annotations
 
@@ -85,7 +103,9 @@ from repro.kernels.boxfilter import _box_pass, _counts_2d, _masked_box_mean
 from repro.kernels.dark_channel import _min_pass
 from repro.kernels.ref import (CAP_COEFFS, LUMA_WEIGHTS as _LUMA,
                                premap as _premap,
-                               tmap_from_dark as _tmap_from_dark)
+                               resolve_out_dtype as _resolve_out_dtype,
+                               tmap_from_dark as _tmap_from_dark,
+                               upcast_frames as _upcast_frames)
 
 ALGORITHMS = ("dcp", "cap")
 
@@ -177,15 +197,19 @@ def _ema_step(cand: jnp.ndarray, fid: jnp.ndarray, A_prev: jnp.ndarray,
     return A, k, inited_next
 
 
-def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
-                         out_ref, t_ref, aseq_ref, statef_ref, statei_ref,
-                         carry_f_ref, carry_i_ref, *,
-                         algorithm: str, radius: int, omega: float, beta: float,
-                         cap_w: Tuple[float, float, float], refine: bool,
-                         gf_radius: int, gf_eps: float, t0: float,
-                         gamma: float, period: int, lam: float, topk: int,
-                         frames_per_block: int, lane_major: bool):
-    """Lane-aware megakernel body over a 2-D (lane, batch-block) grid.
+def _dehaze_grid_step(load_frame, ids_ref, state_f_ref, state_i_ref,
+                      out_ref, t_ref, aseq_ref, statef_ref, statei_ref,
+                      carry_f_ref, carry_i_ref, lane, blk, *,
+                      algorithm: str, radius: int, omega: float, beta: float,
+                      cap_w: Tuple[float, float, float], refine: bool,
+                      gf_radius: int, gf_eps: float, t0: float,
+                      gamma: float, period: int, lam: float, topk: int,
+                      frames_per_block: int):
+    """One (lane, batch-block) grid step of the megakernel, frame source
+    abstracted: ``load_frame(f)`` yields the f-th (H, W, 3) f32 frame of
+    the block — an automatic BlockSpec copy in the classic kernel, a slot
+    of the manual-DMA VMEM ring in the double-buffered one. Both flavors
+    share this body, so they are trivially bit-identical.
 
     ``carry_f_ref``/``carry_i_ref`` are (L, 3)/(L, 2) VMEM *scratch*: row
     ``lane`` is that lane's running (A, last_update, initialized) EMA
@@ -193,11 +217,6 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
     is correct under either grid order — within a lane the batch blocks
     always run in ascending order, and no two lanes touch the same row.
     """
-    if lane_major:
-        lane, blk = pl.program_id(0), pl.program_id(1)
-    else:
-        blk, lane = pl.program_id(0), pl.program_id(1)
-
     @pl.when(blk == 0)
     def _init_carry():
         carry_f_ref[pl.ds(lane, 1)] = state_f_ref[0:1]
@@ -213,7 +232,7 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
     a0 = jnp.maximum(state_f_ref[0].astype(jnp.float32), 1e-3)
 
     for f in range(frames_per_block):
-        img = img_ref[f].astype(jnp.float32)            # (H, W, 3)
+        img = load_frame(f)                             # (H, W, 3) f32
         t, cand_min, cand_rgb = _frame_tmap(
             img, a0, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
@@ -238,10 +257,99 @@ def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
     statei_ref[0] = ci_next
 
 
+def _fused_dehaze_kernel(img_ref, ids_ref, state_f_ref, state_i_ref,
+                         out_ref, t_ref, aseq_ref, statef_ref, statei_ref,
+                         carry_f_ref, carry_i_ref, *,
+                         algorithm: str, radius: int, omega: float, beta: float,
+                         cap_w: Tuple[float, float, float], refine: bool,
+                         gf_radius: int, gf_eps: float, t0: float,
+                         gamma: float, period: int, lam: float, topk: int,
+                         frames_per_block: int, lane_major: bool):
+    """Classic megakernel body: frames arrive as automatic BlockSpec copies
+    (the grid pipeline serializes each block's HBM->VMEM copy with its
+    compute); the in-VMEM upcast makes the wire dtype free here too."""
+    if lane_major:
+        lane, blk = pl.program_id(0), pl.program_id(1)
+    else:
+        blk, lane = pl.program_id(0), pl.program_id(1)
+    _dehaze_grid_step(
+        lambda f: _upcast_frames(img_ref[f]), ids_ref, state_f_ref,
+        state_i_ref, out_ref, t_ref, aseq_ref, statef_ref, statei_ref,
+        carry_f_ref, carry_i_ref, lane, blk, algorithm=algorithm,
+        radius=radius, omega=omega, beta=beta, cap_w=cap_w, refine=refine,
+        gf_radius=gf_radius, gf_eps=gf_eps, t0=t0, gamma=gamma,
+        period=period, lam=lam, topk=topk, frames_per_block=frames_per_block)
+
+
+def _fused_dehaze_dbuf_kernel(img_hbm_ref, ids_ref, state_f_ref, state_i_ref,
+                              out_ref, t_ref, aseq_ref, statef_ref,
+                              statei_ref, carry_f_ref, carry_i_ref,
+                              img_vmem, dma_sem, *,
+                              algorithm: str, radius: int, omega: float,
+                              beta: float,
+                              cap_w: Tuple[float, float, float], refine: bool,
+                              gf_radius: int, gf_eps: float, t0: float,
+                              gamma: float, period: int, lam: float,
+                              topk: int, frames_per_block: int,
+                              lane_major: bool, n_lanes: int, nblk: int,
+                              buffer_depth: int):
+    """Double-buffered megakernel body: the frame input stays in HBM
+    (``memory_space=ANY``) and blocks stream through the ``img_vmem``
+    ``(depth, fpb, H, W, 3)`` ring via manual ``make_async_copy`` DMAs.
+
+    Grid step g waits on the copy it (or the warm-up) started for its own
+    block, but first *starts* the copy for step g+1 into the next ring
+    slot — so block n+1's HBM->VMEM traffic overlaps block n's compute.
+    Slot reuse is race-free on the sequential grid: slot ``(g+1) % depth``
+    was last read by step ``g+1-depth``, which finished before step g
+    began. The linear step index g and the flat frame row are recomputed
+    from the program ids under either grid order, so the DMA schedule is
+    exactly the BlockSpec index map of the classic kernel.
+    """
+    fpb = frames_per_block
+    if lane_major:
+        lane, blk = pl.program_id(0), pl.program_id(1)
+        g = lane * nblk + blk
+    else:
+        blk, lane = pl.program_id(0), pl.program_id(1)
+        g = blk * n_lanes + lane
+
+    def copy_in(slot, g2):
+        # Flat frame row of linear grid step g2 (mirrors ``frame_map``).
+        if lane_major:
+            l2, i2 = g2 // nblk, g2 % nblk
+        else:
+            l2, i2 = g2 % n_lanes, g2 // n_lanes
+        row = (l2 * nblk + i2) * fpb
+        return pltpu.make_async_copy(img_hbm_ref.at[pl.ds(row, fpb)],
+                                     img_vmem.at[slot], dma_sem.at[slot])
+
+    total = n_lanes * nblk
+    slot = jax.lax.rem(g, buffer_depth)
+
+    @pl.when(g == 0)
+    def _warm_up():
+        copy_in(slot, g).start()
+
+    @pl.when(g + 1 < total)
+    def _prefetch_next():
+        copy_in(jax.lax.rem(g + 1, buffer_depth), g + 1).start()
+
+    copy_in(slot, g).wait()
+    block = img_vmem[pl.ds(slot, 1)][0]                 # (fpb, H, W, 3) wire
+    _dehaze_grid_step(
+        lambda f: _upcast_frames(block[f]), ids_ref, state_f_ref,
+        state_i_ref, out_ref, t_ref, aseq_ref, statef_ref, statei_ref,
+        carry_f_ref, carry_i_ref, lane, blk, algorithm=algorithm,
+        radius=radius, omega=omega, beta=beta, cap_w=cap_w, refine=refine,
+        gf_radius=gf_radius, gf_eps=gf_eps, t0=t0, gamma=gamma,
+        period=period, lam=lam, topk=topk, frames_per_block=fpb)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
     "gf_eps", "t0", "gamma", "period", "lam", "topk", "frames_per_block",
-    "lane_major", "interpret"))
+    "lane_major", "out_dtype", "buffer_depth", "interpret"))
 def fused_dehaze_lanes_pallas(
         img: jnp.ndarray, frame_ids: jnp.ndarray, carry_f: jnp.ndarray,
         carry_i: jnp.ndarray, *, algorithm: str = "dcp", radius: int,
@@ -249,23 +357,29 @@ def fused_dehaze_lanes_pallas(
         cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
         gf_radius: int, gf_eps: float, t0: float, gamma: float,
         period: int, lam: float, topk: int = 1, frames_per_block: int = 1,
-        lane_major: bool = True, interpret: bool = False,
+        lane_major: bool = True, out_dtype: str = None,
+        buffer_depth: int = 1, interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Lane-native single-launch dehaze for L independent streams.
 
-    img: (L, B, H, W, 3); frame_ids: (L, B) int (< 0 = padding);
-    carry_f: (L, 3) f32 saved A per lane; carry_i: (L, 2) int32
+    img: (L, B, H, W, 3) in the wire dtype (f32/bf16/uint8 — upcast
+    in-VMEM, see the module dtype contract); frame_ids: (L, B) int (< 0 =
+    padding); carry_f: (L, 3) f32 saved A per lane; carry_i: (L, 2) int32
     (last_update, initialized) per lane — the layout produced by
     ``core.normalize.lane_carry``.
 
     Returns ``(J (L, B, H, W, 3), t (L, B, H, W), a_seq (L, B, 3) f32,
-    carry_f' (L, 3), carry_i' (L, 2))``. Per lane the outputs are
-    bit-identical to ``fused_dehaze_pallas`` on that lane alone: the grid
-    is ``(L, B // frames_per_block)`` (``lane_major``) or its transpose
-    (frame-major, a cache-locality tuning choice — resolved by the
-    ``fused_lanes`` tuning bucket), each lane's EMA lives in its own
+    carry_f' (L, 3), carry_i' (L, 2))`` with J/t in
+    ``ref.resolve_out_dtype(img.dtype, out_dtype)``. Per lane the outputs
+    are bit-identical to ``fused_dehaze_pallas`` on that lane alone: the
+    grid is ``(L, B // frames_per_block)`` (``lane_major``) or its
+    transpose (frame-major, a cache-locality tuning choice — resolved by
+    the ``fused_lanes`` tuning bucket), each lane's EMA lives in its own
     ``(L, ...)`` scratch row, and an all-padding lane's carry rides
     through untouched. One ``pallas_call`` for all L streams.
+    ``buffer_depth >= 2`` selects the manual-DMA double-buffered body
+    (identical results; the frame copy of grid step n+1 overlaps step n's
+    compute).
     """
     L, b, h, w, c = img.shape
     assert c == 3 and frame_ids.shape == (L, b), (img.shape, frame_ids.shape)
@@ -273,6 +387,8 @@ def fused_dehaze_lanes_pallas(
     assert algorithm in ALGORITHMS, algorithm
     fpb = _resolve_frames_per_block(b, frames_per_block)
     nblk = b // fpb
+    odt = _resolve_out_dtype(img.dtype, out_dtype)
+    depth = max(1, min(buffer_depth, L * nblk))
     # Lane-flattened views keep the blocks 4-D (the same shapes the
     # single-stream kernel tiles); the (lane, block) -> row arithmetic
     # lives in the index maps.
@@ -296,16 +412,28 @@ def fused_dehaze_lanes_pallas(
         l, i = gi(*g)
         return l * nblk + i
 
-    kernel = functools.partial(
-        _fused_dehaze_kernel, algorithm=algorithm, radius=radius, omega=omega,
-        beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
-        frames_per_block=fpb, lane_major=lane_major)
+    kw = dict(algorithm=algorithm, radius=radius, omega=omega, beta=beta,
+              cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+              t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
+              frames_per_block=fpb, lane_major=lane_major)
+    scratch = [pltpu.VMEM((L, 3), jnp.float32),
+               pltpu.VMEM((L, 2), jnp.int32)]
+    if depth >= 2:
+        kernel = functools.partial(_fused_dehaze_dbuf_kernel, **kw,
+                                   n_lanes=L, nblk=nblk, buffer_depth=depth)
+        # Frames stay in HBM; the kernel DMAs them into the VMEM ring.
+        img_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch += [pltpu.VMEM((depth, fpb, h, w, 3), img.dtype),
+                    pltpu.SemaphoreType.DMA((depth,))]
+    else:
+        kernel = functools.partial(_fused_dehaze_kernel, **kw)
+        img_spec = pl.BlockSpec((fpb, h, w, 3),
+                                lambda *g: (frame_map(*g), 0, 0, 0))
     out, t, a_seq, statef, statei = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((fpb, h, w, 3), lambda *g: (frame_map(*g), 0, 0, 0)),
+            img_spec,
             pl.BlockSpec((fpb, 1), lambda *g: (frame_map(*g), 0)),
             pl.BlockSpec((1, 3), lambda *g: (gi(*g)[0], 0)),
             pl.BlockSpec((1, 2), lambda *g: (gi(*g)[0], 0)),
@@ -318,14 +446,13 @@ def fused_dehaze_lanes_pallas(
             pl.BlockSpec((1, 2), lambda *g: (gi(*g)[0], 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((L * b, h, w, 3), img.dtype),
-            jax.ShapeDtypeStruct((L * b, h, w), img.dtype),
+            jax.ShapeDtypeStruct((L * b, h, w, 3), odt),
+            jax.ShapeDtypeStruct((L * b, h, w), odt),
             jax.ShapeDtypeStruct((L * b, 3), jnp.float32),
             jax.ShapeDtypeStruct((L, 3), jnp.float32),
             jax.ShapeDtypeStruct((L, 2), jnp.int32),
         ],
-        scratch_shapes=[pltpu.VMEM((L, 3), jnp.float32),
-                        pltpu.VMEM((L, 2), jnp.int32)],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(flat_img, ids, state_f, state_i)
     return (out.reshape(L, b, h, w, 3), t.reshape(L, b, h, w),
@@ -335,7 +462,7 @@ def fused_dehaze_lanes_pallas(
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
     "gf_eps", "t0", "gamma", "period", "lam", "topk", "frames_per_block",
-    "interpret"))
+    "out_dtype", "buffer_depth", "interpret"))
 def fused_dehaze_pallas(
         img: jnp.ndarray, frame_ids: jnp.ndarray, A_saved: jnp.ndarray,
         last_update: jnp.ndarray, initialized: jnp.ndarray, *,
@@ -343,6 +470,7 @@ def fused_dehaze_pallas(
         beta: float = 1.0, cap_w: Tuple[float, float, float] = CAP_COEFFS,
         refine: bool, gf_radius: int, gf_eps: float, t0: float, gamma: float,
         period: int, lam: float, topk: int = 1, frames_per_block: int = 1,
+        out_dtype: str = None, buffer_depth: int = 1,
         interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Single-launch dehaze: (B,H,W,3) -> (J, t, a_seq, A_fin, k_fin).
@@ -362,7 +490,8 @@ def fused_dehaze_pallas(
         algorithm=algorithm, radius=radius, omega=omega, beta=beta,
         cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
         t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
-        frames_per_block=frames_per_block, interpret=interpret)
+        frames_per_block=frames_per_block, out_dtype=out_dtype,
+        buffer_depth=buffer_depth, interpret=interpret)
     return out[0], t[0], a_seq[0], statef[0], statei[0, 0]
 
 
@@ -374,7 +503,7 @@ def _fused_tmap_kernel(img_ref, a0_ref, t_ref, cand_ref, *, algorithm: str,
                        radius: int, omega: float, beta: float,
                        cap_w: Tuple[float, float, float], refine: bool,
                        gf_radius: int, gf_eps: float, topk: int):
-    img = img_ref[0].astype(jnp.float32)
+    img = _upcast_frames(img_ref[0])
     a0 = jnp.maximum(a0_ref[0].astype(jnp.float32), 1e-3)
     t, cand_min, cand_rgb = _frame_tmap(
         img, a0, algorithm=algorithm, radius=radius, omega=omega, beta=beta,
@@ -387,24 +516,25 @@ def _fused_tmap_kernel(img_ref, a0_ref, t_ref, cand_ref, *, algorithm: str,
 
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
-    "gf_eps", "topk", "interpret"))
+    "gf_eps", "topk", "out_dtype", "interpret"))
 def fused_transmission_pallas(
         img: jnp.ndarray, A_saved: jnp.ndarray, *, algorithm: str = "dcp",
         radius: int, omega: float = 0.95, beta: float = 1.0,
         cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
         gf_radius: int, gf_eps: float, topk: int = 1,
-        interpret: bool = False,
+        out_dtype: str = None, interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Sharded-step variant: (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)).
 
     Fuses pre-map + min filter + guided refine + per-frame candidate
     (argmin for ``topk == 1``, in-VMEM mean-of-top-k otherwise) in one
     launch; the EMA and the recovery stay outside because the candidates
-    must cross shards (all-gather) first.
+    must cross shards (all-gather) first. ``img`` may be any wire dtype.
     """
     b, h, w, c = img.shape
     assert c == 3
     assert algorithm in ALGORITHMS, algorithm
+    odt = _resolve_out_dtype(img.dtype, out_dtype)
     a0 = A_saved.astype(jnp.float32).reshape(1, 3)
     kernel = functools.partial(
         _fused_tmap_kernel, algorithm=algorithm, radius=radius, omega=omega,
@@ -422,23 +552,23 @@ def fused_transmission_pallas(
             pl.BlockSpec((1, 4), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, h, w), img.dtype),
+            jax.ShapeDtypeStruct((b, h, w), odt),
             jax.ShapeDtypeStruct((b, 4), jnp.float32),
         ],
         interpret=interpret,
     )(img, a0)
-    return t, cand[:, 0], cand[:, 1:4].astype(img.dtype)
+    return t, cand[:, 0], cand[:, 1:4].astype(odt)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "cap_w", "refine", "gf_radius",
-    "gf_eps", "topk", "interpret"))
+    "gf_eps", "topk", "out_dtype", "interpret"))
 def fused_transmission_lanes_pallas(
         img: jnp.ndarray, A_saved: jnp.ndarray, *, algorithm: str = "dcp",
         radius: int, omega: float = 0.95, beta: float = 1.0,
         cap_w: Tuple[float, float, float] = CAP_COEFFS, refine: bool,
         gf_radius: int, gf_eps: float, topk: int = 1,
-        interpret: bool = False,
+        out_dtype: str = None, interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Lane-native sharded-step stage: (L,B,H,W,3) + per-lane A (L,3) ->
     (t (L,B,H,W), t_min (L,B), cand_rgb (L,B,3)).
@@ -453,6 +583,7 @@ def fused_transmission_lanes_pallas(
     L, b, h, w, c = img.shape
     assert c == 3 and A_saved.shape == (L, 3), (img.shape, A_saved.shape)
     assert algorithm in ALGORITHMS, algorithm
+    odt = _resolve_out_dtype(img.dtype, out_dtype)
     flat = img.reshape(L * b, h, w, 3)
     a0 = A_saved.astype(jnp.float32)
     kernel = functools.partial(
@@ -471,13 +602,13 @@ def fused_transmission_lanes_pallas(
             pl.BlockSpec((1, 4), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((L * b, h, w), img.dtype),
+            jax.ShapeDtypeStruct((L * b, h, w), odt),
             jax.ShapeDtypeStruct((L * b, 4), jnp.float32),
         ],
         interpret=interpret,
     )(flat, a0)
     return (t.reshape(L, b, h, w), cand[:, 0].reshape(L, b),
-            cand[:, 1:4].astype(img.dtype).reshape(L, b, 3))
+            cand[:, 1:4].astype(odt).reshape(L, b, 3))
 
 
 # ---------------------------------------------------------------------------
@@ -503,20 +634,22 @@ def _masked_guided_refine(guide: jnp.ndarray, t_raw: jnp.ndarray,
     return bf(a) * guide + bf(b)
 
 
-def _fused_tmap_halo_kernel(img_ref, pre_ref, guide_ref, valid_ref,
-                            valid_w_ref, t_ref, cand_ref, idx_ref, *,
-                            algorithm: str, radius: int, omega: float,
-                            beta: float, refine: bool, gf_radius: int,
-                            gf_eps: float, halo_h: int, halo_w: int,
-                            topk: int, frames_per_block: int):
+def _halo_grid_step(load_block, valid_ref, valid_w_ref, t_ref, cand_ref,
+                    idx_ref, *, algorithm: str, radius: int, omega: float,
+                    beta: float, refine: bool, gf_radius: int,
+                    gf_eps: float, halo_h: int, halo_w: int,
+                    topk: int, frames_per_block: int):
+    """One batch-block of the halo kernel, frame source abstracted:
+    ``load_block(f)`` yields the f-th ``(img (H_loc, W_loc, 3), pre_ext,
+    guide_ext (H_ext, W_ext))`` f32 triple — BlockSpec copies in the
+    classic flavor, slots of the manual-DMA VMEM rings in the
+    double-buffered one. Both flavors share this body."""
     valid_f = valid_ref[0]                        # (H_ext,) float row mask
     valid_w_f = valid_w_ref[0]                    # (W_ext,) float col mask
     mask2d = jnp.logical_and(valid_f[:, None] > 0.5, valid_w_f[None, :] > 0.5)
 
     for f in range(frames_per_block):
-        img = img_ref[f].astype(jnp.float32)      # (H_loc, W_loc, 3) core
-        pre = pre_ref[f].astype(jnp.float32)      # (H_ext, W_ext) extended
-        guide = guide_ref[f].astype(jnp.float32)  # (H_ext, W_ext) extended
+        img, pre, guide = load_block(f)
         h_loc, w_loc = img.shape[0], img.shape[1]
 
         # Masked min filter: invalid (off-mesh) rows/cols are +inf, so
@@ -550,15 +683,71 @@ def _fused_tmap_halo_kernel(img_ref, pre_ref, guide_ref, valid_ref,
         idx_ref[f] = tk_i
 
 
+def _fused_tmap_halo_kernel(img_ref, pre_ref, guide_ref, valid_ref,
+                            valid_w_ref, t_ref, cand_ref, idx_ref, **kw):
+    _halo_grid_step(
+        lambda f: (_upcast_frames(img_ref[f]),
+                   pre_ref[f].astype(jnp.float32),
+                   guide_ref[f].astype(jnp.float32)),
+        valid_ref, valid_w_ref, t_ref, cand_ref, idx_ref, **kw)
+
+
+def _fused_tmap_halo_dbuf_kernel(img_ref, pre_ref, guide_ref, valid_ref,
+                                 valid_w_ref, t_ref, cand_ref, idx_ref,
+                                 img_vmem, pre_vmem, guide_vmem, dma_sem,
+                                 *, nblk: int, buffer_depth: int, **kw):
+    """Double-buffered halo kernel: the three per-frame planes (core RGB
+    block + halo-extended pre-map and guide) stay in HBM and stream
+    through per-plane VMEM rings; the three DMAs of batch-block g+1 are
+    started before block g's compute. ``dma_sem`` is (depth, 3) — one
+    semaphore per (slot, plane)."""
+    fpb = kw["frames_per_block"]
+    g = pl.program_id(0)
+
+    def copies(slot, g2):
+        row = g2 * fpb
+        return (
+            pltpu.make_async_copy(img_ref.at[pl.ds(row, fpb)],
+                                  img_vmem.at[slot], dma_sem.at[slot, 0]),
+            pltpu.make_async_copy(pre_ref.at[pl.ds(row, fpb)],
+                                  pre_vmem.at[slot], dma_sem.at[slot, 1]),
+            pltpu.make_async_copy(guide_ref.at[pl.ds(row, fpb)],
+                                  guide_vmem.at[slot], dma_sem.at[slot, 2]),
+        )
+
+    slot = jax.lax.rem(g, buffer_depth)
+
+    @pl.when(g == 0)
+    def _warm_up():
+        for cp in copies(slot, g):
+            cp.start()
+
+    @pl.when(g + 1 < nblk)
+    def _prefetch_next():
+        for cp in copies(jax.lax.rem(g + 1, buffer_depth), g + 1):
+            cp.start()
+
+    for cp in copies(slot, g):
+        cp.wait()
+    imgs = img_vmem[pl.ds(slot, 1)][0]
+    pres = pre_vmem[pl.ds(slot, 1)][0]
+    guides = guide_vmem[pl.ds(slot, 1)][0]
+    _halo_grid_step(
+        lambda f: (_upcast_frames(imgs[f]), pres[f].astype(jnp.float32),
+                   guides[f].astype(jnp.float32)),
+        valid_ref, valid_w_ref, t_ref, cand_ref, idx_ref, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "algorithm", "radius", "omega", "beta", "refine", "gf_radius", "gf_eps",
-    "topk", "frames_per_block", "interpret"))
+    "topk", "frames_per_block", "out_dtype", "buffer_depth", "interpret"))
 def fused_transmission_halo_pallas(
         img: jnp.ndarray, pre_ext: jnp.ndarray, guide_ext: jnp.ndarray,
         valid: jnp.ndarray, valid_w: jnp.ndarray = None, *,
         algorithm: str = "dcp", radius: int, omega: float = 0.95,
         beta: float = 1.0, refine: bool, gf_radius: int, gf_eps: float,
-        topk: int = 1, frames_per_block: int = 1, interpret: bool = False,
+        topk: int = 1, frames_per_block: int = 1, out_dtype: str = None,
+        buffer_depth: int = 1, interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Spatially-sharded fused transmission: one launch per local block.
 
@@ -583,7 +772,10 @@ def fused_transmission_halo_pallas(
     *outside* (it is per-pixel, so it rides the halo exchange), everything
     windowed runs masked in-VMEM here. ``frames_per_block`` frames share
     one grid step (no cross-frame state — pure tiling, resolved by the
-    ``fused_halo_2d`` tuning bucket).
+    ``fused_halo_2d`` tuning bucket). ``img`` likewise may arrive in any
+    wire dtype (uint8 ingest upcast in-VMEM); t and the candidate RGB are
+    cast to ``ref.resolve_out_dtype(img.dtype, out_dtype)``.
+    ``buffer_depth >= 2`` selects the manual-DMA double-buffered body.
     """
     b, h_loc, w_loc, c = img.shape
     h_ext, w_ext = pre_ext.shape[1], pre_ext.shape[2]
@@ -595,22 +787,39 @@ def fused_transmission_halo_pallas(
     assert w_ext == w_loc + 2 * halo_w, (w_ext, w_loc)
     assert 1 <= topk <= h_loc * w_loc, (topk, h_loc, w_loc)
     fpb = _resolve_frames_per_block(b, frames_per_block)
+    nblk = b // fpb
+    odt = _resolve_out_dtype(img.dtype, out_dtype)
+    depth = max(1, min(buffer_depth, nblk))
     vmask = valid.astype(jnp.float32).reshape(1, h_ext)
     if valid_w is None:
         valid_w = jnp.ones((w_ext,), jnp.float32)
     wmask = valid_w.astype(jnp.float32).reshape(1, w_ext)
-    kernel = functools.partial(
-        _fused_tmap_halo_kernel, algorithm=algorithm, radius=radius,
-        omega=omega, beta=beta, refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps, halo_h=halo_h, halo_w=halo_w, topk=topk,
-        frames_per_block=fpb)
-    t, cand, idx = pl.pallas_call(
-        kernel,
-        grid=(b // fpb,),
-        in_specs=[
+    kw = dict(algorithm=algorithm, radius=radius, omega=omega, beta=beta,
+              refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
+              halo_h=halo_h, halo_w=halo_w, topk=topk, frames_per_block=fpb)
+    scratch = []
+    if depth >= 2:
+        kernel = functools.partial(_fused_tmap_halo_dbuf_kernel, **kw,
+                                   nblk=nblk, buffer_depth=depth)
+        # The three per-frame planes stay in HBM; the kernel DMAs each
+        # batch-block into its per-plane VMEM ring. The tiny validity
+        # masks keep their automatic copies.
+        plane_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] * 3
+        scratch = [pltpu.VMEM((depth, fpb, h_loc, w_loc, 3), img.dtype),
+                   pltpu.VMEM((depth, fpb, h_ext, w_ext), pre_ext.dtype),
+                   pltpu.VMEM((depth, fpb, h_ext, w_ext), guide_ext.dtype),
+                   pltpu.SemaphoreType.DMA((depth, 3))]
+    else:
+        kernel = functools.partial(_fused_tmap_halo_kernel, **kw)
+        plane_specs = [
             pl.BlockSpec((fpb, h_loc, w_loc, 3), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((fpb, h_ext, w_ext), lambda i: (i, 0, 0)),
             pl.BlockSpec((fpb, h_ext, w_ext), lambda i: (i, 0, 0)),
+        ]
+    t, cand, idx = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=plane_specs + [
             pl.BlockSpec((1, h_ext), lambda i: (0, 0)),
             pl.BlockSpec((1, w_ext), lambda i: (0, 0)),
         ],
@@ -620,10 +829,11 @@ def fused_transmission_halo_pallas(
             pl.BlockSpec((fpb, topk), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, h_loc, w_loc), img.dtype),
+            jax.ShapeDtypeStruct((b, h_loc, w_loc), odt),
             jax.ShapeDtypeStruct((b, topk, 4), jnp.float32),
             jax.ShapeDtypeStruct((b, topk), jnp.int32),
         ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(img, pre_ext, guide_ext, vmask, wmask)
-    return t, cand[:, :, 0], cand[:, :, 1:4].astype(img.dtype), idx
+    return t, cand[:, :, 0], cand[:, :, 1:4].astype(odt), idx

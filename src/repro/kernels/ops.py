@@ -245,7 +245,8 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
                  cap_w: Tuple[float, float, float] = CAP_COEFFS,
                  refine: bool, gf_radius: int, gf_eps: float, t0: float,
                  gamma: float, period: int, lam: float, topk: int = 1,
-                 frames_per_block: int = 0,
+                 frames_per_block: int = 0, out_dtype: str = "auto",
+                 buffer_depth: int = 0,
                  mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
     """Whole DCP/CAP chain in one launch: (..., H, W, 3) -> (J, t, a_seq, A, k).
 
@@ -256,6 +257,16 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
     ``REPRO_TUNE_FUSED_CAP`` > ``results/kernel_tuning.json`` > 1); the
     top-k selection changes the kernel's VMEM/compute profile, so ``topk >
     1`` resolves from its own ``fused_<algorithm>_topk`` bucket.
+
+    ``img`` may be any wire dtype (f32/bf16/uint8 — the canonical
+    ``ref.upcast_frames`` ingest; non-f32 streams resolve dtype-tagged
+    tuning buckets). ``out_dtype`` picks the J/t output dtype ("auto":
+    follow float ingest, f32 for uint8). ``buffer_depth <= 0`` resolves
+    the double-buffered DMA ring depth from the bucket; the interpret
+    substrate falls back to the classic single-buffered body (depth 1)
+    unless an explicit depth is requested — that is the interpret-safe
+    fallback, while tests pass ``buffer_depth >= 2`` to execute the
+    manual-DMA body itself under interpret.
     """
     m = resolve_substrate(mode)
     flat, lead = _batched(img, 3)
@@ -265,18 +276,23 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
             flat, flat_ids, A_saved, last_update, initialized,
             algorithm=algorithm, radius=radius, omega=omega, beta=beta,
             cap_w=cap_w, refine=refine, gf_radius=gf_radius, gf_eps=gf_eps,
-            t0=t0, gamma=gamma, period=period, lam=lam, topk=topk)
+            t0=t0, gamma=gamma, period=period, lam=lam, topk=topk,
+            out_dtype=out_dtype)
     else:
+        op = f"fused_{algorithm}" + ("_topk" if topk > 1 else "")
+        params = tuning.get_params(op, flat.shape[:3], dtype=flat.dtype)
         if frames_per_block <= 0:
-            op = f"fused_{algorithm}" + ("_topk" if topk > 1 else "")
-            frames_per_block = int(tuning.get_params(
-                op, flat.shape[:3]).get("frames_per_block", 1))
+            frames_per_block = int(params.get("frames_per_block", 1))
+        if buffer_depth <= 0:
+            buffer_depth = 1 if m == "interpret" \
+                else int(params.get("buffer_depth", 1))
         j, t, a_seq, a_fin, k_fin = fused_dehaze_pallas(
             flat, flat_ids, A_saved, last_update, initialized,
             algorithm=algorithm, radius=radius, omega=omega, beta=beta,
             cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
             gf_eps=gf_eps, t0=t0, gamma=gamma, period=period, lam=lam,
             topk=topk, frames_per_block=frames_per_block,
+            out_dtype=out_dtype, buffer_depth=buffer_depth,
             interpret=(m == "interpret"))
     return (j.reshape(lead + j.shape[1:]), t.reshape(lead + t.shape[1:]),
             a_seq.reshape(lead + (3,)), a_fin, k_fin)
@@ -290,6 +306,7 @@ def fused_dehaze_lanes(img: jnp.ndarray, frame_ids: jnp.ndarray,
                        refine: bool, gf_radius: int, gf_eps: float, t0: float,
                        gamma: float, period: int, lam: float, topk: int = 1,
                        frames_per_block: int = 0, lane_major=None,
+                       out_dtype: str = "auto", buffer_depth: int = 0,
                        mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
     """Lane-native fused dehaze: L streams, one launch.
 
@@ -304,7 +321,10 @@ def fused_dehaze_lanes(img: jnp.ndarray, frame_ids: jnp.ndarray,
     persisted table > lane-major, 1 frame per block); the bucket's shape
     key includes the lane count, so the lane-major-vs-frame-major grid
     order and the ``frames_per_block`` x L tile sweep are tuned per
-    serving shape.
+    serving shape. ``out_dtype``/``buffer_depth`` follow the
+    :func:`fused_dehaze` dtype/DMA contract (non-f32 wire dtypes resolve
+    dtype-tagged buckets; interpret falls back to depth 1 unless an
+    explicit depth is passed).
     """
     assert img.ndim == 5, img.shape
     n_lanes, b = img.shape[0], img.shape[1]
@@ -316,22 +336,27 @@ def fused_dehaze_lanes(img: jnp.ndarray, frame_ids: jnp.ndarray,
                 im, ids, cf, ci[0], ci[1].astype(bool), algorithm=algorithm,
                 radius=radius, omega=omega, beta=beta, cap_w=cap_w,
                 refine=refine, gf_radius=gf_radius, gf_eps=gf_eps, t0=t0,
-                gamma=gamma, period=period, lam=lam, topk=topk)
+                gamma=gamma, period=period, lam=lam, topk=topk,
+                out_dtype=out_dtype)
             inited = jnp.maximum(ci[1], jnp.any(ids >= 0).astype(ci.dtype))
             return j, t, a_seq, a_fin, jnp.stack([k_fin, inited])
         return jax.vmap(one_lane)(img, frame_ids, carry_f, carry_i)
-    params = tuning.get_params("fused_lanes", img.shape[:4])
+    params = tuning.get_params("fused_lanes", img.shape[:4], dtype=img.dtype)
     if frames_per_block <= 0:
         frames_per_block = int(params.get("frames_per_block", 1))
     if lane_major is None:
         lane_major = str(params.get("grid_order", "lane_major")) \
             != "frame_major"
+    if buffer_depth <= 0:
+        buffer_depth = 1 if m == "interpret" \
+            else int(params.get("buffer_depth", 1))
     return fused_dehaze_lanes_pallas(
         img, frame_ids, carry_f, carry_i, algorithm=algorithm, radius=radius,
         omega=omega, beta=beta, cap_w=tuple(cap_w), refine=refine,
         gf_radius=gf_radius, gf_eps=gf_eps, t0=t0, gamma=gamma, period=period,
         lam=lam, topk=topk, frames_per_block=frames_per_block,
-        lane_major=bool(lane_major), interpret=(m == "interpret"))
+        lane_major=bool(lane_major), out_dtype=out_dtype,
+        buffer_depth=buffer_depth, interpret=(m == "interpret"))
 
 
 def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
@@ -339,25 +364,28 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                        omega: float = 0.95, beta: float = 1.0,
                        cap_w: Tuple[float, float, float] = CAP_COEFFS,
                        refine: bool, gf_radius: int, gf_eps: float,
-                       topk: int = 1,
+                       topk: int = 1, out_dtype: str = "auto",
                        mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
     """Fused t-map + A candidates (the batch-sharded-step stage):
     (..., H, W, 3) -> (t, t_min (...,), cand_rgb (..., 3)). The candidate
     is the argmin-t pixel for ``topk == 1``, the mean of the ``topk``
     smallest-t pixels otherwise (each frame is whole on its shard, so the
-    mean needs no cross-shard merge)."""
+    mean needs no cross-shard merge). ``img`` may be any wire dtype; t and
+    the candidate RGB are cast per ``out_dtype`` (see
+    :func:`fused_dehaze`)."""
     m = resolve_substrate(mode)
     flat, lead = _batched(img, 3)
     if m == "ref":
         t, t_min, cand = _ref.fused_transmission(
             flat, A_saved, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-            gf_eps=gf_eps, topk=topk)
+            gf_eps=gf_eps, topk=topk, out_dtype=out_dtype)
     else:
         t, t_min, cand = fused_transmission_pallas(
             flat, A_saved, algorithm=algorithm, radius=radius, omega=omega,
             beta=beta, cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
-            gf_eps=gf_eps, topk=topk, interpret=(m == "interpret"))
+            gf_eps=gf_eps, topk=topk, out_dtype=out_dtype,
+            interpret=(m == "interpret"))
     return (t.reshape(lead + t.shape[1:]), t_min.reshape(lead),
             cand.reshape(lead + (3,)))
 
@@ -367,7 +395,7 @@ def fused_transmission_lanes(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                              omega: float = 0.95, beta: float = 1.0,
                              cap_w: Tuple[float, float, float] = CAP_COEFFS,
                              refine: bool, gf_radius: int, gf_eps: float,
-                             topk: int = 1,
+                             topk: int = 1, out_dtype: str = "auto",
                              mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
     """Lane-native fused t-map stage: (L, B, H, W, 3) + per-lane saved A
     (L, 3) -> (t (L, B, H, W), t_min (L, B), cand_rgb (L, B, 3)).
@@ -386,12 +414,13 @@ def fused_transmission_lanes(img: jnp.ndarray, A_saved: jnp.ndarray, *,
             return _ref.fused_transmission(
                 im, a, algorithm=algorithm, radius=radius, omega=omega,
                 beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
-                gf_eps=gf_eps, topk=topk)
+                gf_eps=gf_eps, topk=topk, out_dtype=out_dtype)
         return jax.vmap(one_lane)(img, A_saved)
     return fused_transmission_lanes_pallas(
         img, A_saved, algorithm=algorithm, radius=radius, omega=omega,
         beta=beta, cap_w=tuple(cap_w), refine=refine, gf_radius=gf_radius,
-        gf_eps=gf_eps, topk=topk, interpret=(m == "interpret"))
+        gf_eps=gf_eps, topk=topk, out_dtype=out_dtype,
+        interpret=(m == "interpret"))
 
 
 def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
@@ -401,6 +430,7 @@ def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
                             omega: float = 0.95, beta: float = 1.0,
                             refine: bool, gf_radius: int, gf_eps: float,
                             topk: int = 1, frames_per_block: int = 0,
+                            out_dtype: str = "auto", buffer_depth: int = 0,
                             mode: Mode = "auto") -> Tuple[jnp.ndarray, ...]:
     """Halo-aware fused t-map stage for the spatially-sharded pipeline.
 
@@ -412,8 +442,13 @@ def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
     top-k smallest-t candidates ascending in (t, local flat index), ready
     for the cross-shard lexicographic merge in ``core.pipeline``. The
     masked min/box filters run in-VMEM on the Pallas substrates and through
-    ``core.spatial`` on the XLA oracle. ``frames_per_block <= 0`` resolves
-    from the ``fused_halo_2d`` tuning bucket (Pallas substrates only).
+    ``core.spatial`` on the XLA oracle. ``frames_per_block <= 0`` and
+    ``buffer_depth <= 0`` resolve from the ``fused_halo_2d`` tuning bucket
+    (Pallas substrates only; the resolved buffer depth is clamped to 1 on
+    the interpret substrate, where manual DMA brings no overlap — pass an
+    explicit ``buffer_depth >= 2`` to force the double-buffered body).
+    ``img`` may be uint8/bfloat16 wire frames (upcast in-VMEM); t/tk_rgb
+    are cast per ``out_dtype``.
     """
     m = resolve_substrate(mode)
     flat, lead = _batched(img, 3)
@@ -423,16 +458,22 @@ def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
         t, tk_t, tk_rgb, tk_idx = _ref.fused_transmission_halo(
             flat, flat_pre, flat_guide, valid, valid_w, algorithm=algorithm,
             radius=radius, omega=omega, beta=beta, refine=refine,
-            gf_radius=gf_radius, gf_eps=gf_eps, topk=topk)
+            gf_radius=gf_radius, gf_eps=gf_eps, topk=topk,
+            out_dtype=out_dtype)
     else:
+        params = tuning.get_params("fused_halo_2d", flat.shape[:3],
+                                   dtype=flat.dtype)
         if frames_per_block <= 0:
-            frames_per_block = int(tuning.get_params(
-                "fused_halo_2d", flat.shape[:3]).get("frames_per_block", 1))
+            frames_per_block = int(params.get("frames_per_block", 1))
+        if buffer_depth <= 0:
+            buffer_depth = 1 if m == "interpret" \
+                else int(params.get("buffer_depth", 1))
         t, tk_t, tk_rgb, tk_idx = fused_transmission_halo_pallas(
             flat, flat_pre, flat_guide, valid, valid_w, algorithm=algorithm,
             radius=radius, omega=omega, beta=beta, refine=refine,
             gf_radius=gf_radius, gf_eps=gf_eps, topk=topk,
-            frames_per_block=frames_per_block, interpret=(m == "interpret"))
+            frames_per_block=frames_per_block, out_dtype=out_dtype,
+            buffer_depth=buffer_depth, interpret=(m == "interpret"))
     return (t.reshape(lead + t.shape[1:]), tk_t.reshape(lead + (topk,)),
             tk_rgb.reshape(lead + (topk, 3)), tk_idx.reshape(lead + (topk,)))
 
@@ -498,3 +539,29 @@ def pallas_launch_count(fn, *args, **kwargs) -> int:
     ``kernels/fused_lanes_*`` bench rows and the launch-count regression
     test."""
     return _count_pallas(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
+
+
+def _count_prim(jaxpr, name: str) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for sub in _iter_jaxprs(v):
+                n += _count_prim(sub, name)
+    return n
+
+
+def dma_copy_count(fn, *args, **kwargs) -> dict:
+    """Count manual-DMA equations in ``fn``'s traced program, recursing
+    into every nested jaxpr (including pallas_call kernel bodies).
+
+    Returns ``{"starts": n, "waits": m}``. The double-buffered megakernel
+    bodies trace two ``dma_start``s (warm-up + prefetch) and one
+    ``dma_wait`` per input plane; the classic single-buffered bodies trace
+    zero of each. Used by the ``kernels/fused_dbuf`` bench row and the
+    overlap-structure regression test to assert the copy/compute overlap
+    is actually in the lowered program, independent of wall-clock."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs).jaxpr
+    return {"starts": _count_prim(jaxpr, "dma_start"),
+            "waits": _count_prim(jaxpr, "dma_wait")}

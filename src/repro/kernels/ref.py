@@ -16,6 +16,55 @@ from jax import lax
 
 
 # ---------------------------------------------------------------------------
+# Frame I/O dtype contract (README §Dtype contract)
+# ---------------------------------------------------------------------------
+
+U8_SCALE = 255.0
+
+
+def upcast_frames(x: jnp.ndarray) -> jnp.ndarray:
+    """Wire/ingest dtype -> the f32 compute domain.
+
+    THE canonical ingest upcast: the megakernels run it in-VMEM after the
+    HBM copy and the oracles/staged chain run it in XLA, so every path sees
+    bit-identical f32 frames and uint8-ingest parity stays exact. uint8
+    frames are the wire quantization ``round(v * 255)`` of the [0,1] image
+    (so the upcast is ``x / 255``); bf16 -> f32 is an exact widening cast;
+    f32 is the identity.
+    """
+    if x.dtype == jnp.uint8:
+        return x.astype(jnp.float32) * jnp.float32(1.0 / U8_SCALE)
+    return x.astype(jnp.float32)
+
+
+def resolve_out_dtype(in_dtype, out_dtype=None) -> jnp.dtype:
+    """Resolve the J/t output dtype. ``None``/"auto" follows the ingest
+    dtype for float ingest (f32 -> f32, bf16 -> bf16 — the pre-contract
+    behavior) and resolves to float32 for uint8 ingest (dehazed frames are
+    continuous; re-quantizing is the caller's choice, not the kernel's).
+    """
+    if out_dtype is not None and out_dtype != "auto":
+        return jnp.dtype(out_dtype)
+    d = jnp.dtype(in_dtype)
+    return d if jnp.issubdtype(d, jnp.floating) else jnp.dtype(jnp.float32)
+
+
+def quantize_frames(x, io_dtype):
+    """Host-side [0,1] float frames -> the wire dtype (numpy in, numpy out).
+
+    The inverse of :func:`upcast_frames` up to quantization: uint8 is
+    ``round(clip(v, 0, 1) * 255)``, floats are a plain cast. Used by the
+    serve driver and the parity tests to synthesize wire-dtype streams.
+    """
+    import numpy as np
+    dt = jnp.dtype(io_dtype)
+    if dt == jnp.uint8:
+        arr = np.asarray(x, np.float32)
+        return np.clip(np.round(arr * U8_SCALE), 0.0, U8_SCALE).astype(np.uint8)
+    return np.asarray(x).astype(dt)
+
+
+# ---------------------------------------------------------------------------
 # Windowed min filter (dark channel prior, paper Eq. 3)
 # ---------------------------------------------------------------------------
 
@@ -192,17 +241,20 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                        algorithm: str = "dcp", radius: int,
                        omega: float = 0.95, beta: float = 1.0,
                        cap_w=CAP_COEFFS, refine: bool, gf_radius: int,
-                       gf_eps: float, topk: int = 1):
+                       gf_eps: float, topk: int = 1, out_dtype=None):
     """Oracle for ``fused.fused_transmission_pallas``.
 
     (B,H,W,3) -> (t, t_min (B,), cand_rgb (B,3)): Eq. 3 (DCP) / Eq. 4 (CAP)
     transmission, guided-filter refinement, per-frame atmospheric-light
     candidate — the argmin-t pixel (Eq. 6) for ``topk == 1``, the mean of
     the ``topk`` smallest-t pixels (the robust Eq. 5/6 generalization,
-    identical to :func:`atmospheric_light`) otherwise.
+    identical to :func:`atmospheric_light`) otherwise. ``img`` may be any
+    wire dtype (f32/bf16/uint8 — see :func:`upcast_frames`); outputs are
+    cast to :func:`resolve_out_dtype`.
     """
+    odt = resolve_out_dtype(img.dtype, out_dtype)
     b = img.shape[0]
-    x = img.astype(jnp.float32)
+    x = upcast_frames(img)
     a0 = jnp.maximum(A_saved.astype(jnp.float32), 1e-3)
     pre = premap(x, a0, algorithm, cap_w)
     dark = min_filter_2d(pre, radius)
@@ -220,7 +272,7 @@ def fused_transmission(img: jnp.ndarray, A_saved: jnp.ndarray, *,
                      0.0, 1.0)
     else:
         t = t_raw
-    return t.astype(img.dtype), t_min, cand.astype(img.dtype)
+    return t.astype(odt), t_min, cand.astype(odt)
 
 
 def fused_transmission_dcp(img: jnp.ndarray, A_saved: jnp.ndarray, *,
@@ -238,7 +290,7 @@ def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
                             algorithm: str = "dcp", radius: int,
                             omega: float = 0.95, beta: float = 1.0,
                             refine: bool, gf_radius: int, gf_eps: float,
-                            topk: int = 1):
+                            topk: int = 1, out_dtype=None):
     """Oracle for ``fused.fused_transmission_halo_pallas``.
 
     Composes the masked XLA filters from ``core.spatial`` on the
@@ -253,8 +305,11 @@ def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
     top-k smallest-t candidates over the core block, ascending in
     (t, local flat index) — ready for the cross-shard lexicographic merge
     in ``core.pipeline``. ``topk == 1`` is the Eq. 6 argmin candidate.
+    ``img`` may be any wire dtype; ``pre_ext``/``guide_ext`` are the
+    already-upcast halo planes (f32 or bf16 per ``halo_dtype``).
     """
     from repro.core import spatial                 # lazy: spatial imports ref
+    odt = resolve_out_dtype(img.dtype, out_dtype)
     b, h_loc, w_loc = img.shape[0], img.shape[1], img.shape[2]
     halo_h = (pre_ext.shape[1] - h_loc) // 2
     halo_w = (pre_ext.shape[2] - w_loc) // 2
@@ -274,9 +329,9 @@ def fused_transmission_halo(img: jnp.ndarray, pre_ext: jnp.ndarray,
     flat_t = t_raw.reshape(b, -1)
     _, idx = lax.top_k(-flat_t, topk)              # k smallest, ties by idx
     tk_t = jnp.take_along_axis(flat_t, idx, axis=-1)
-    tk_rgb = jnp.take_along_axis(img.astype(jnp.float32).reshape(b, -1, 3),
+    tk_rgb = jnp.take_along_axis(upcast_frames(img).reshape(b, -1, 3),
                                  idx[..., None], axis=1)
-    return (t.astype(img.dtype), tk_t, tk_rgb.astype(img.dtype),
+    return (t.astype(odt), tk_t, tk_rgb.astype(odt),
             idx.astype(jnp.int32))
 
 
@@ -286,14 +341,17 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
                  radius: int, omega: float = 0.95, beta: float = 1.0,
                  cap_w=CAP_COEFFS, refine: bool, gf_radius: int,
                  gf_eps: float, t0: float, gamma: float, period: int,
-                 lam: float, topk: int = 1):
+                 lam: float, topk: int = 1, out_dtype=None):
     """Oracle for ``fused.fused_dehaze_pallas``: (J, t, a_seq, A_fin, k_fin).
 
     Composes the per-stage oracles plus the Eq. 9 EMA recurrence (lax.scan)
     — the sequential scan the megakernel realizes via its grid carry.
-    ``topk > 1`` feeds the EMA the robust mean-of-top-k candidate.
+    ``topk > 1`` feeds the EMA the robust mean-of-top-k candidate. ``img``
+    may be any wire dtype (the canonical :func:`upcast_frames` ingest);
+    J/t are cast to :func:`resolve_out_dtype`, a_seq stays f32.
     """
-    x = img.astype(jnp.float32)
+    odt = resolve_out_dtype(img.dtype, out_dtype)
+    x = upcast_frames(img)
     t, _, cand = fused_transmission(
         x, A_saved, algorithm=algorithm, radius=radius, omega=omega,
         beta=beta, cap_w=cap_w, refine=refine, gf_radius=gf_radius,
@@ -321,7 +379,7 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
     J = jnp.clip((x - A_b) / tt + A_b, 0.0, 1.0)
     if gamma != 1.0:
         J = J ** gamma
-    return (J.astype(img.dtype), t.astype(img.dtype), a_seq,
+    return (J.astype(odt), t.astype(odt), a_seq,
             A_fin, k_fin.astype(jnp.int32))
 
 

@@ -31,22 +31,27 @@ from repro.core import env as _env
 DEFAULTS: Dict[str, Dict[str, Any]] = {
     # Per-algorithm buckets: CAP's pre-map (HSV depth, no divide-by-A) has a
     # different VMEM/FLOP profile, so its sweet spot is tuned separately.
-    "fused_dcp": {"frames_per_block": 1},
-    "fused_cap": {"frames_per_block": 1},
+    # ``buffer_depth`` is the manual-DMA input ring depth of the
+    # double-buffered megakernel body (1 = classic automatic BlockSpec
+    # pipeline; 2 = copy of block n+1 overlaps compute on block n). The
+    # dispatch layer clamps it to 1 on the interpret substrate.
+    "fused_dcp": {"frames_per_block": 1, "buffer_depth": 2},
+    "fused_cap": {"frames_per_block": 1, "buffer_depth": 2},
     # Robust top-k A estimator (k > 1): the in-VMEM k-step running
     # selection adds compute per frame, so its tile is tuned apart from
     # the argmin (k=1) kernels.
-    "fused_dcp_topk": {"frames_per_block": 1},
-    "fused_cap_topk": {"frames_per_block": 1},
+    "fused_dcp_topk": {"frames_per_block": 1, "buffer_depth": 2},
+    "fused_cap_topk": {"frames_per_block": 1, "buffer_depth": 2},
     # Spatially-sharded (H and/or W) halo megakernel: per-shard blocks are
     # smaller than full frames, so more of them fit one grid step.
-    "fused_halo_2d": {"frames_per_block": 1},
+    "fused_halo_2d": {"frames_per_block": 1, "buffer_depth": 2},
     # Lane-native multi-stream megakernel: the (lane, batch-block) grid
     # order trades carry-row locality (lane-major streams one lane's
     # whole batch) against output-tile locality (frame-major interleaves
     # lanes per block); the shape key includes the lane count, so the
     # frames_per_block x L product is swept per serving shape.
-    "fused_lanes": {"frames_per_block": 1, "grid_order": "lane_major"},
+    "fused_lanes": {"frames_per_block": 1, "grid_order": "lane_major",
+                    "buffer_depth": 2},
     "atmolight": {"tile_h": 0},          # 0 = whole frame per grid step
     "atmolight_topk": {"tile_h": 0},     # k-row grid-carry fold tile
 }
@@ -55,8 +60,18 @@ def table_path() -> Path:
     return _env.tuning_table_path()
 
 
-def shape_bucket(shape: Iterable[int]) -> str:
-    return "x".join(str(int(s)) for s in shape)
+# Wire-dtype tags for non-f32 frame streams. The f32 bucket key stays the
+# bare shape (back-compat with every committed/persisted table); uint8 and
+# bf16 streams get their own buckets because the HBM-traffic profile — and
+# therefore the optimal tile/buffer depth — changes with bytes/frame.
+_DTYPE_TAGS = {"uint8": "u8", "bfloat16": "bf16"}
+
+
+def shape_bucket(shape: Iterable[int], dtype=None) -> str:
+    key = "x".join(str(int(s)) for s in shape)
+    tag = _DTYPE_TAGS.get(jax.numpy.dtype(dtype).name) \
+        if dtype is not None else None
+    return f"{key}x{tag}" if tag else key
 
 
 # (path, mtime) -> parsed table. get_params sits on the per-batch dispatch
@@ -95,11 +110,19 @@ def save_table(table: Dict[str, Any], path: Optional[Path] = None) -> Path:
     return p
 
 
-def get_params(op: str, shape: Iterable[int]) -> Dict[str, Any]:
-    """Resolved tile params for ``op`` at ``shape`` (env > table > default)."""
+def get_params(op: str, shape: Iterable[int], dtype=None) -> Dict[str, Any]:
+    """Resolved tile params for ``op`` at ``shape`` (env > table > default).
+
+    ``dtype`` is the frame wire dtype: non-f32 streams resolve their own
+    dtype-tagged bucket (falling back through the untagged f32 bucket for
+    keys the tagged entry doesn't override), so a uint8 toggle can never
+    silently reuse an f32-tuned tile."""
     params = dict(DEFAULTS.get(op, {}))
     table = load_table()
     params.update(table.get(op, {}).get(shape_bucket(shape), {}))
+    tagged = shape_bucket(shape, dtype)
+    if tagged != shape_bucket(shape):
+        params.update(table.get(op, {}).get(tagged, {}))
     params.update(_env.tune_override(op))   # malformed override -> ignored
     return params
 
@@ -116,12 +139,15 @@ def _time_callable(fn: Callable[[], Any], iters: int = 3) -> float:
 def autotune(op: str, shape: Iterable[int],
              candidates: Iterable[Dict[str, Any]],
              build: Callable[[Dict[str, Any]], Callable[[], Any]],
-             iters: int = 3, persist: bool = True) -> Dict[str, Any]:
+             iters: int = 3, persist: bool = True,
+             dtype=None) -> Dict[str, Any]:
     """Sweep ``candidates``, persist and return the fastest param dict.
 
     ``build(params)`` returns a no-arg callable to time; candidates whose
     build or execution raises are skipped (e.g. a tile that does not divide
-    the shape, or VMEM overflow on a real TPU).
+    the shape, or VMEM overflow on a real TPU). ``dtype`` routes the
+    persisted winner into the wire-dtype-tagged bucket (see
+    :func:`shape_bucket`).
     """
     best, best_t = dict(DEFAULTS.get(op, {})), float("inf")
     for params in candidates:
@@ -133,17 +159,20 @@ def autotune(op: str, shape: Iterable[int],
             best, best_t = dict(params), t
     if persist:
         table = load_table()
-        table.setdefault(op, {})[shape_bucket(shape)] = best
+        table.setdefault(op, {})[shape_bucket(shape, dtype)] = best
         save_table(table)
     return best
 
 
 def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
                    candidates=(1, 2, 4), iters: int = 3, persist: bool = True,
-                   algorithms=("dcp", "cap"),
-                   topks=(1, 4)) -> Dict[str, Any]:
-    """Sweep ``frames_per_block`` for the fused megakernels, per algorithm
-    and per A-estimator (argmin vs robust top-k).
+                   algorithms=("dcp", "cap"), topks=(1, 4),
+                   depths=(1, 2, 3), io_dtypes=("float32", "uint8")) -> Dict[str, Any]:
+    """Sweep ``frames_per_block`` x ``buffer_depth`` for the fused
+    megakernels, per algorithm, per A-estimator (argmin vs robust top-k),
+    and per frame wire dtype (f32 vs uint8 ingest — different bytes/frame,
+    different overlap sweet spot; winners persist into dtype-tagged
+    buckets).
 
     Uses the dispatch layer, so it times whatever substrate the current
     backend resolves to (Pallas on TPU, the XLA oracle on CPU). Each
@@ -153,45 +182,50 @@ def autotune_fused(shapes=((4, 48, 64), (2, 120, 160)),
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels import ops
+    from repro.kernels import ops, ref
 
     table: Dict[str, Any] = {}
     for algorithm in algorithms:
         for topk in topks:
             op = f"fused_{algorithm}" + ("_topk" if topk > 1 else "")
             table.setdefault(op, {})
-            for b, h, w in shapes:
-                r = np.random.default_rng(0)
-                img = jnp.asarray(r.random((b, h, w, 3), np.float32))
-                ids = jnp.arange(b, dtype=jnp.int32)
-                A = jnp.ones((3,), jnp.float32)
-                k0 = jnp.asarray(-(2 ** 30), jnp.int32)
-                init = jnp.asarray(False)
+            for io_dtype in io_dtypes:
+                for b, h, w in shapes:
+                    r = np.random.default_rng(0)
+                    frames = r.random((b, h, w, 3), np.float32)
+                    img = jnp.asarray(ref.quantize_frames(frames, io_dtype))
+                    ids = jnp.arange(b, dtype=jnp.int32)
+                    A = jnp.ones((3,), jnp.float32)
+                    k0 = jnp.asarray(-(2 ** 30), jnp.int32)
+                    init = jnp.asarray(False)
 
-                def build(params):
-                    def run():
-                        return ops.fused_dehaze(
-                            img, ids, A, k0, init, algorithm=algorithm,
-                            radius=7, omega=0.95, refine=True, gf_radius=8,
-                            gf_eps=1e-3, t0=0.1, gamma=1.0, period=8,
-                            lam=0.05, topk=topk,
-                            frames_per_block=params["frames_per_block"])
-                    return run
+                    def build(params):
+                        def run():
+                            return ops.fused_dehaze(
+                                img, ids, A, k0, init, algorithm=algorithm,
+                                radius=7, omega=0.95, refine=True,
+                                gf_radius=8, gf_eps=1e-3, t0=0.1, gamma=1.0,
+                                period=8, lam=0.05, topk=topk,
+                                frames_per_block=params["frames_per_block"],
+                                buffer_depth=params["buffer_depth"])
+                        return run
 
-                table[op][shape_bucket((b, h, w))] = autotune(
-                    op, (b, h, w),
-                    [{"frames_per_block": f} for f in candidates],
-                    build, iters=iters, persist=persist)
+                    table[op][shape_bucket((b, h, w), img.dtype)] = autotune(
+                        op, (b, h, w),
+                        [{"frames_per_block": f, "buffer_depth": d}
+                         for f in candidates for d in depths],
+                        build, iters=iters, persist=persist, dtype=img.dtype)
     return table
 
 
 def autotune_fused_lanes(shapes=((4, 4, 48, 64), (16, 2, 48, 64)),
                          fpb_candidates=(1, 2, 4),
                          orders=("lane_major", "frame_major"),
+                         depths=(1, 2, 3),
                          iters: int = 3, persist: bool = True) -> Dict[str, Any]:
     """Sweep the lane-native megakernel's grid: ``frames_per_block`` x
-    grid order (lane-major vs frame-major), per ``(L, B, H, W)`` serving
-    shape, into the ``fused_lanes`` bucket.
+    grid order (lane-major vs frame-major) x DMA ``buffer_depth``, per
+    ``(L, B, H, W)`` serving shape, into the ``fused_lanes`` bucket.
 
     Uses the dispatch layer, so it times whatever substrate the backend
     resolves to — run on the serving pod to bake in real measurements.
@@ -221,22 +255,25 @@ def autotune_fused_lanes(shapes=((4, 4, 48, 64), (16, 2, 48, 64)),
                     omega=0.95, refine=True, gf_radius=8, gf_eps=1e-3,
                     t0=0.1, gamma=1.0, period=8, lam=0.05,
                     frames_per_block=params["frames_per_block"],
-                    lane_major=(params["grid_order"] == "lane_major"))
+                    lane_major=(params["grid_order"] == "lane_major"),
+                    buffer_depth=params["buffer_depth"])
             return run
 
         table["fused_lanes"][shape_bucket((n_lanes, b, h, w))] = autotune(
             "fused_lanes", (n_lanes, b, h, w),
-            [{"frames_per_block": f, "grid_order": o}
-             for f in fpb_candidates for o in orders],
+            [{"frames_per_block": f, "grid_order": o, "buffer_depth": d}
+             for f in fpb_candidates for o in orders for d in depths],
             build, iters=iters, persist=persist)
     return table
 
 
 def autotune_fused_halo(shapes=((4, 24, 64), (2, 60, 160)), halo=23,
-                        candidates=(1, 2, 4), iters: int = 3,
+                        candidates=(1, 2, 4), depths=(1, 2, 3),
+                        iters: int = 3,
                         persist: bool = True) -> Dict[str, Any]:
-    """Sweep ``frames_per_block`` for the spatially-sharded halo megakernel
-    (``fused_halo_2d`` bucket) on representative per-shard block shapes."""
+    """Sweep ``frames_per_block`` x ``buffer_depth`` for the
+    spatially-sharded halo megakernel (``fused_halo_2d`` bucket) on
+    representative per-shard block shapes."""
     import jax.numpy as jnp
     import numpy as np
 
@@ -255,12 +292,14 @@ def autotune_fused_halo(shapes=((4, 24, 64), (2, 60, 160)), halo=23,
                 return ops.fused_transmission_halo(
                     img, pre, guide, valid, algorithm="dcp", radius=7,
                     omega=0.95, refine=True, gf_radius=8, gf_eps=1e-3,
-                    frames_per_block=params["frames_per_block"])
+                    frames_per_block=params["frames_per_block"],
+                    buffer_depth=params["buffer_depth"])
             return run
 
         table["fused_halo_2d"][shape_bucket((b, h_loc, w))] = autotune(
             "fused_halo_2d", (b, h_loc, w),
-            [{"frames_per_block": f} for f in candidates],
+            [{"frames_per_block": f, "buffer_depth": d}
+             for f in candidates for d in depths],
             build, iters=iters, persist=persist)
     return table
 

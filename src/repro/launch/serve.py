@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import DehazeConfig
 from repro.data import HazeVideoSpec, generate_haze_video
+from repro.kernels import ref as kref
 from repro.stream import (ElasticServer, ScalePolicy, StreamRequest,
                           ladder_rungs)
 
@@ -55,16 +56,25 @@ def _make_videos(n: int, h: int, w: int, frames, seed0: int = 100):
     return vids
 
 
+def _wire_hazy(vid, io_dtype: str) -> np.ndarray:
+    """The stream actually put on the wire: the synthetic f32 hazy video
+    quantized/cast to the serving ingest dtype (no-op for float32)."""
+    if io_dtype == "float32":
+        return vid.hazy
+    return kref.quantize_frames(vid.hazy, io_dtype)
+
+
 def _serve_single(args, cfg, h: int, w: int) -> int:
     vid = _make_videos(1, h, w, args.frames)[0]
+    hazy = _wire_hazy(vid, args.io_dtype)
     srv = ElasticServer(cfg, n_workers=args.workers, batch=args.batch,
                         timeout_s=args.timeout_ms / 1e3)
     outs = {}
     t0 = time.perf_counter()
-    rep = srv.serve(iter(vid.hazy), sink=lambda fid, f: outs.setdefault(fid, f))
+    rep = srv.serve(iter(hazy), sink=lambda fid, f: outs.setdefault(fid, f))
     wall = time.perf_counter() - t0
 
-    got = np.stack([outs[k] for k in sorted(outs)])
+    got = np.stack([np.asarray(outs[k], np.float32) for k in sorted(outs)])
     err_hazy = np.abs(vid.hazy[:len(got)] - vid.clear[:len(got)]).mean()
     err_out = np.abs(got - vid.clear[sorted(outs)]).mean()
     print(f"algorithm={args.algorithm} resolution={args.resolution} "
@@ -87,13 +97,17 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
     else:
         lengths = [args.frames] * args.streams
     vids = _make_videos(args.streams, h, w, lengths)
+    wires = [_wire_hazy(v, args.io_dtype) for v in vids]
     lanes = args.lanes if args.lanes > 0 else args.streams
     srv = ElasticServer(cfg, batch=args.batch,
                         timeout_s=args.timeout_ms / 1e3)
     counts: dict = {}
+    cam0_out: dict = {}
 
-    def sink(sid: str, fid: int, _f) -> None:
+    def sink(sid: str, fid: int, f) -> None:
         counts[sid] = counts.get(sid, 0) + 1
+        if sid == "cam0":
+            cam0_out[fid] = np.asarray(f, np.float32)
 
     policy = None
     if args.autoscale:
@@ -107,8 +121,8 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
                            n_lanes=r)
 
     rep = srv.serve_many(
-        [StreamRequest(f"cam{i}", iter(v.hazy))
-         for i, v in enumerate(vids)],
+        [StreamRequest(f"cam{i}", iter(wire))
+         for i, wire in enumerate(wires)],
         n_lanes=lanes, sink=sink, autoscale=args.autoscale, policy=policy,
         n_hosts=args.hosts)
     print(f"algorithm={args.algorithm} resolution={args.resolution} "
@@ -141,6 +155,27 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
         print(f"FAIL: expected >= {args.expect_spillover} spillover "
               f"admission(s), got {rep.spillovers}", file=sys.stderr)
         sys.exit(1)
+    if args.io_dtype != "float32" and cam0_out:
+        # Non-f32 wire dtype: replay cam0 alone through a fresh server
+        # (same config, same quantized stream) and gate on parity — the
+        # multi-tenant lane path must dehaze a uint8/bf16 stream exactly
+        # as the single-stream path does.
+        ref_srv = ElasticServer(cfg, batch=args.batch,
+                                timeout_s=args.timeout_ms / 1e3)
+        ref_out: dict = {}
+        ref_srv.serve(iter(wires[0]), stream_id="cam0",
+                      sink=lambda fid, f: ref_out.setdefault(
+                          fid, np.asarray(f, np.float32)))
+        common = sorted(set(cam0_out) & set(ref_out))
+        drift = max((np.abs(cam0_out[k] - ref_out[k]).max()
+                     for k in common), default=0.0)
+        print(f"io_dtype={args.io_dtype} parity(cam0): "
+              f"frames={len(common)} maxerr={drift:.2e}")
+        if not common or drift > 1e-5:
+            print(f"FAIL: cam0 parity drift {drift:.2e} > 1e-5 between the "
+                  f"lane-batched and single-stream serves at "
+                  f"io_dtype={args.io_dtype}", file=sys.stderr)
+            sys.exit(1)
     return rep.skipped
 
 
@@ -184,6 +219,14 @@ def main() -> None:
     ap.add_argument("--update-period", type=int, default=8)
     ap.add_argument("--lam", type=float, default=0.05)
     ap.add_argument("--kernel-mode", default="auto")
+    ap.add_argument("--io-dtype", default="float32",
+                    choices=["float32", "bfloat16", "uint8"],
+                    help="wire dtype of the frame streams: the synthetic "
+                         "videos are quantized host-side and stay at this "
+                         "dtype through spout/scheduler to the kernels "
+                         "(uint8 = 4x less ingest traffic). With "
+                         "--streams > 1 a non-f32 run also replays cam0 "
+                         "single-stream and fails on parity drift")
     ap.add_argument("--fail-on-skipped", action="store_true",
                     help="exit nonzero if any frame was timeout-skipped "
                          "(CI smoke gating)")
@@ -192,7 +235,8 @@ def main() -> None:
     h, w = RESOLUTIONS[args.resolution]
     cfg = DehazeConfig(algorithm=args.algorithm,
                        update_period=args.update_period, lam=args.lam,
-                       kernel_mode=args.kernel_mode)
+                       kernel_mode=args.kernel_mode,
+                       io_dtype=args.io_dtype)
     if args.streams > 1:
         if args.workers != ap.get_default("workers"):
             print("note: --workers applies to single-stream serving only; "

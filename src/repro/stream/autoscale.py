@@ -139,28 +139,34 @@ class LaneAutoscaler:
 
     # -- warming -----------------------------------------------------------
 
-    def ensure_warming(self, lane_batch_shape: Tuple[int, ...]) -> None:
+    def ensure_warming(self, lane_batch_shape: Tuple[int, ...],
+                       dtype=np.float32) -> None:
         """Start (once) the background thread that warms every other rung.
 
         ``lane_batch_shape`` is the per-lane ``(B, H, W, 3)`` batch shape —
         known at the first serve tick, which is when the scheduler calls
-        this. Warm failures (e.g. a rung whose compile OOMs) are recorded
-        and that rung is simply never offered."""
+        this. ``dtype`` is the wire dtype of the frame stream: jit
+        specializes on it, so warming must use the dtype the serve thread
+        will actually feed (a uint8 stream warmed at f32 would re-trace on
+        the first real batch). Warm failures (e.g. a rung whose compile
+        OOMs) are recorded and that rung is simply never offered."""
         with self._lock:
             if self._warm_thread is not None:
                 return
             todo = [r for r in self.rungs if r not in self._ready]
             self._warm_thread = threading.Thread(
-                target=self._warm, args=(tuple(lane_batch_shape), todo),
+                target=self._warm,
+                args=(tuple(lane_batch_shape), np.dtype(dtype), todo),
                 daemon=True, name="lane-ladder-warm")
         self._warm_thread.start()
 
-    def _warm(self, shape: Tuple[int, ...], todo: Sequence[int]) -> None:
+    def _warm(self, shape: Tuple[int, ...], dtype,
+              todo: Sequence[int]) -> None:
         b, h, w, c = shape
         for rung in todo:
             try:
                 step = self._step_factory(rung)
-                frames = np.zeros((rung, b, h, w, c), np.float32)
+                frames = np.zeros((rung, b, h, w, c), dtype)
                 ids = np.full((rung, b), -1, np.int32)
                 out = step(frames, ids, self._state_factory(rung))
                 jax.block_until_ready(out.state)

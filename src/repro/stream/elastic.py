@@ -232,6 +232,14 @@ class ElasticServer:
         ``(L, B, H, W, 3)`` program per tick instead of N serialized
         streams, which is where the aggregate-fps win comes from.
 
+        Frames travel at their wire dtype end-to-end: a uint8 stream stays
+        uint8 through the spout, the scheduler's lane batches and the
+        ladder warm-ups, and is only upcast in-VMEM by the kernels
+        (``cfg.io_dtype`` declares the contract; ``cfg.out_dtype`` the
+        output side). Both fields are part of the frozen config and hence
+        of every step-cache key — toggling the ingest dtype can never
+        reuse a step compiled for another dtype.
+
         ``n_hosts > 1`` (or a ``placement`` with ``n_hosts > 1``) serves
         the same streams through a :class:`~repro.stream.FleetScheduler`:
         ``n_hosts`` host-level schedulers behind one global-EDF front door,

@@ -36,6 +36,11 @@ id; a callable ``sid -> host`` plugs in anything else.
 ``sink`` runs on the hosts' monitor threads concurrently — a fleet sink
 must be thread-safe across *different* streams (per-stream calls stay
 ordered, as always).
+
+The fleet tier is frame-dtype agnostic: lane batches keep the spout's
+wire dtype (uint8 stays 1 byte/channel from front door to HBM — see
+``DehazeConfig.io_dtype`` and README §Dtype contract), and padding lanes
+are ``zeros_like`` the live batch, so they match by construction.
 """
 from __future__ import annotations
 

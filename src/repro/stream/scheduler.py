@@ -566,7 +566,8 @@ class MultiStreamScheduler:
             if pad_frames is None:
                 pad_frames = np.zeros_like(live[0].frames)
             if self._autoscaler is not None:
-                self._autoscaler.ensure_warming(pad_frames.shape)
+                self._autoscaler.ensure_warming(pad_frames.shape,
+                                                pad_frames.dtype)
             for fb in live:
                 if fb.frames.shape != pad_frames.shape:
                     raise ValueError(

@@ -6,10 +6,21 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+def _wire_frame(f) -> np.ndarray:
+    """Keep native wire dtypes (README §Dtype contract) — uint8 is the
+    round(v*255) quantized [0,1] image (4x less wire + HBM traffic than
+    f32, upcast in-VMEM by the kernels), bfloat16/float32 pass through —
+    and coerce everything else to float32."""
+    arr = np.asarray(f)
+    if arr.dtype == np.uint8 or arr.dtype == np.float32 \
+            or arr.dtype.name == "bfloat16":
+        return arr
+    return arr.astype(np.float32)
+
 
 @dataclasses.dataclass
 class FrameBatch:
-    frames: np.ndarray      # (B, H, W, 3) float32 in [0, 1]
+    frames: np.ndarray      # (B, H, W, 3) wire dtype: uint8 | bf16 | f32
     frame_ids: np.ndarray   # (B,) int32: consecutive ids, then -1 padding
     n_valid: int            # trailing frames may be padding on the last batch
     stream_id: str = "default"
@@ -18,12 +29,16 @@ class FrameBatch:
 class Spout:
     """Wraps an iterator of frames, assigns consecutive ids, emits batches.
 
-    The final partial batch is padded by repeating the last frame so the
-    jitted step always sees a static shape; ``n_valid`` tells the sink how
-    many outputs are real. Padding slots carry ``frame_id = -1`` so the
-    EMA scans mask them out — they must NOT get the future real ids the
-    spout will later assign to real frames (that double-advanced the
-    coherence state on duplicate frames).
+    Frames keep their wire dtype end-to-end: uint8 / bfloat16 / float32
+    pass through untouched (the device kernels upcast in-VMEM — a uint8
+    camera feed stays 1 byte/channel from source to HBM), any other dtype
+    is coerced to float32 here. The final partial batch is padded by
+    repeating the last frame (dtype-matched by construction) so the jitted
+    step always sees a static shape; ``n_valid`` tells the sink how many
+    outputs are real. Padding slots carry ``frame_id = -1`` so the EMA
+    scans mask them out — they must NOT get the future real ids the spout
+    will later assign to real frames (that double-advanced the coherence
+    state on duplicate frames).
     """
 
     def __init__(self, frames: Iterator[np.ndarray], batch: int,
@@ -36,7 +51,7 @@ class Spout:
     def __iter__(self) -> Iterator[FrameBatch]:
         buf = []
         for f in self._it:
-            buf.append(np.asarray(f, np.float32))
+            buf.append(_wire_frame(f))
             if len(buf) == self._batch:
                 yield self._emit(buf)
                 buf = []

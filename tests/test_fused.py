@@ -433,13 +433,13 @@ def test_fused_topk_registry_bucket(monkeypatch, tmp_path):
     """topk > 1 resolves its tile from the ``fused_<alg>_topk`` bucket."""
     monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
     assert tuning.get_params("fused_dcp_topk", (4, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
     monkeypatch.setenv("REPRO_TUNE_FUSED_DCP_TOPK", '{"frames_per_block": 2}')
     assert tuning.get_params("fused_dcp_topk", (4, 16, 16)) == \
-        {"frames_per_block": 2}
+        {"frames_per_block": 2, "buffer_depth": 2}
     # The argmin bucket is unaffected by the topk override.
     assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
     img = _img((4, 16, 16), seed=19)
     kw = dict(FUSED_KW, topk=4)
@@ -472,13 +472,13 @@ def test_sharded_step_selects_fused():
 def test_tuning_defaults_and_env_override(monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
     assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
     monkeypatch.setenv("REPRO_TUNE_FUSED_DCP", '{"frames_per_block": 4}')
     assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
-        {"frames_per_block": 4}
+        {"frames_per_block": 4, "buffer_depth": 2}
     monkeypatch.setenv("REPRO_TUNE_FUSED_DCP", "not json")
     assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
 
 
 def test_tuning_table_roundtrip(monkeypatch, tmp_path):
@@ -488,10 +488,10 @@ def test_tuning_table_roundtrip(monkeypatch, tmp_path):
     assert json.loads(path.read_text())["fused_dcp"]["4x16x16"] == \
         {"frames_per_block": 2}
     assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
-        {"frames_per_block": 2}
+        {"frames_per_block": 2, "buffer_depth": 2}
     # Other shapes fall back to the default.
     assert tuning.get_params("fused_dcp", (1, 8, 8)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
 
 
 def test_autotune_picks_fastest_and_persists(monkeypatch, tmp_path):
@@ -512,7 +512,8 @@ def test_autotune_picks_fastest_and_persists(monkeypatch, tmp_path):
                            [{"frames_per_block": f} for f in (3, 1, 2)],
                            build, iters=1)
     assert best == {"frames_per_block": 1}
-    assert tuning.get_params("fused_dcp", (4, 16, 16)) == best
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        dict(best, buffer_depth=2)
 
 
 def test_fused_dispatch_reads_registry(monkeypatch, tmp_path):
@@ -531,13 +532,13 @@ def test_fused_cap_registry_bucket(monkeypatch, tmp_path):
     """CAP resolves its tile from its own ``fused_cap`` bucket."""
     monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
     assert tuning.get_params("fused_cap", (4, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
     monkeypatch.setenv("REPRO_TUNE_FUSED_CAP", '{"frames_per_block": 2}')
     assert tuning.get_params("fused_cap", (4, 16, 16)) == \
-        {"frames_per_block": 2}
+        {"frames_per_block": 2, "buffer_depth": 2}
     # ...and the dcp bucket is unaffected by the cap override.
     assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")
     img = _img((4, 16, 16), seed=19)
     kw = dict(FUSED_KW, algorithm="cap")
@@ -691,14 +692,14 @@ def test_fused_lanes_registry_bucket(monkeypatch, tmp_path):
     bucket — frames_per_block AND grid order — keyed on the lane count."""
     monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "none.json"))
     assert tuning.get_params("fused_lanes", (4, 8, 16, 16)) == \
-        {"frames_per_block": 1, "grid_order": "lane_major"}
+        {"frames_per_block": 1, "grid_order": "lane_major", "buffer_depth": 2}
     monkeypatch.setenv("REPRO_TUNE_FUSED_LANES",
                        '{"frames_per_block": 2, "grid_order": "frame_major"}')
     assert tuning.get_params("fused_lanes", (4, 8, 16, 16)) == \
-        {"frames_per_block": 2, "grid_order": "frame_major"}
+        {"frames_per_block": 2, "grid_order": "frame_major", "buffer_depth": 2}
     # The single-stream buckets are unaffected by the lanes override.
     assert tuning.get_params("fused_dcp", (8, 16, 16)) == \
-        {"frames_per_block": 1}
+        {"frames_per_block": 1, "buffer_depth": 2}
     # The dispatch layer honors the override end-to-end (kernel runs with
     # frame-major grid + 2-frame blocks and still matches the oracle).
     monkeypatch.setenv("REPRO_KERNEL_MODE", "interpret")

@@ -1,0 +1,368 @@
+"""The frame I/O dtype contract (README §Dtype contract).
+
+Parity matrix {uint8, bfloat16, float32} ingest x {fused, lane_native,
+halo} against the dtype-matched ref oracle, the double-buffered grid's
+bit-parity + traced DMA structure, spout wire-dtype preservation, the
+dtype-tagged tuning buckets, and the step-cache stale-key regression
+(an io/out dtype toggle must never reuse a step compiled for another
+dtype contract).
+
+Tolerances: uint8 ingest uses the identical canonical upcast
+(``kernels.ref.upcast_frames``) on every substrate, so it is bit-exact vs
+the dtype-matched oracle on the ref substrate and float32-round-off-tight
+under interpret. bfloat16 ingest is *bounded, not exact*, against the
+staged chain: the megakernel upcasts to f32 in-VMEM while the staged XLA
+chain computes in bf16, so they agree only to bf16 precision (~1e-2).
+
+No hypothesis dependency on purpose — tier-1 coverage for the quantized
+ingest path (the CI kernel-parity job runs this file under
+``REPRO_KERNEL_MODE=interpret``).
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DehazeConfig, init_atmo_state, make_dehaze_step,
+                        make_multi_stream_step)
+from repro.core.normalize import pack_atmo_states
+from repro.kernels import ops, tuning
+from repro.kernels import ref as kref
+from repro.kernels.ops import resolve_mode
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+IO_DTYPES = ["float32", "bfloat16", "uint8"]
+
+# uint8/f32 ingest: same f32 compute on both paths -> substrate round-off.
+# bf16 ingest: staged chain computes in bf16, the kernels upcast -> bf16
+# precision is the agreement bar.
+TOL = {"float32": 2e-4, "uint8": 2e-4, "bfloat16": 2e-2}
+TOL_A = {"float32": 1e-4, "uint8": 1e-4, "bfloat16": 2e-2}
+
+
+def _frames(seed=17, *lead, h=32, w=32):
+    from conftest import ramp_frames
+    return ramp_frames(seed, *(lead or (4,)), h=h, w=w)
+
+
+def _wire(frames, io_dtype):
+    return jnp.asarray(kref.quantize_frames(np.asarray(frames), io_dtype))
+
+
+def _cfg(kernel_mode, io_dtype="float32", **kw):
+    return DehazeConfig(kernel_mode=kernel_mode, io_dtype=io_dtype,
+                        patch_radius=3, gf_radius=4, update_period=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Ingest parity: fused single-stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("io_dtype", IO_DTYPES)
+def test_fused_ingest_parity(io_dtype):
+    """Fused step on wire-dtype frames vs the dtype-matched staged ref
+    oracle on the SAME wire frames. uint8 on the ref substrate is
+    bit-exact (identical canonical upcast on both paths)."""
+    wire = _wire(_frames(), io_dtype)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    got = make_dehaze_step(_cfg("fused", io_dtype))(
+        wire, ids, init_atmo_state())
+    want = make_dehaze_step(_cfg("ref", io_dtype))(
+        wire, ids, init_atmo_state())
+    exact = io_dtype == "uint8" and resolve_mode("fused") == "ref"
+    if exact:
+        np.testing.assert_array_equal(np.asarray(got.frames),
+                                      np.asarray(want.frames))
+        np.testing.assert_array_equal(np.asarray(got.transmission),
+                                      np.asarray(want.transmission))
+    tol, tol_a = TOL[io_dtype], TOL_A[io_dtype]
+    for field in ("frames", "transmission"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, field), np.float32),
+            np.asarray(getattr(want, field), np.float32), atol=tol,
+            err_msg=f"{field}/{io_dtype}")
+    np.testing.assert_allclose(np.asarray(got.state.A),
+                               np.asarray(want.state.A), atol=tol_a,
+                               err_msg=io_dtype)
+    assert int(got.state.last_update) == int(want.state.last_update)
+
+
+@pytest.mark.parametrize("io_dtype", IO_DTYPES)
+def test_ingest_output_dtype_contract(io_dtype):
+    """out_dtype="auto": float ingest keeps its dtype on J/t, uint8
+    resolves to float32. Both step flavors."""
+    expect = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+              "uint8": jnp.float32}[io_dtype]
+    wire = _wire(_frames(), io_dtype)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    for km in ("fused", "ref"):
+        out = make_dehaze_step(_cfg(km, io_dtype))(
+            wire, ids, init_atmo_state())
+        assert out.frames.dtype == expect, (km, io_dtype)
+        assert out.transmission.dtype == expect, (km, io_dtype)
+
+
+def test_explicit_out_dtype_bfloat16():
+    """out_dtype="bfloat16" halves output HBM traffic for f32 ingest."""
+    frames = _frames()
+    ids = jnp.arange(4, dtype=jnp.int32)
+    for km in ("fused", "ref"):
+        cfg = DehazeConfig(kernel_mode=km, out_dtype="bfloat16",
+                           patch_radius=3, gf_radius=4, update_period=2)
+        out = make_dehaze_step(cfg)(frames, ids, init_atmo_state())
+        assert out.frames.dtype == jnp.bfloat16, km
+        assert out.transmission.dtype == jnp.bfloat16, km
+
+
+# ---------------------------------------------------------------------------
+# Ingest parity: lane-native megakernel (+ the all-padding uint8 lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("io_dtype", IO_DTYPES)
+def test_lane_native_ingest_parity(io_dtype):
+    """Lane-native megakernel on wire-dtype lanes vs the per-lane
+    single-stream oracle, with lane 3 all padding: its state must ride
+    through bit-unchanged at every wire dtype."""
+    n_lanes, b = 4, 4
+    frames = jnp.stack([_frames(20 + lane, b) for lane in range(n_lanes)])
+    wire = _wire(frames, io_dtype)
+    ids = jnp.stack([jnp.arange(lane * 10, lane * 10 + b, dtype=jnp.int32)
+                     for lane in range(n_lanes - 1)]
+                    + [jnp.full((b,), -1, jnp.int32)])
+    states = [init_atmo_state() for _ in range(n_lanes)]
+    packed = pack_atmo_states(states)
+    multi = make_multi_stream_step(_cfg("fused", io_dtype),
+                                   lane_native=True)
+    out = multi(wire, ids, packed)
+    oracle = make_dehaze_step(_cfg("ref", io_dtype))
+    tol, tol_a = TOL[io_dtype], TOL_A[io_dtype]
+    for lane in range(n_lanes - 1):
+        want = oracle(wire[lane], ids[lane], states[lane])
+        tag = f"{io_dtype}/lane{lane}"
+        np.testing.assert_allclose(
+            np.asarray(out.frames[lane], np.float32),
+            np.asarray(want.frames, np.float32), atol=tol, err_msg=tag)
+        np.testing.assert_allclose(np.asarray(out.state.A[lane]),
+                                   np.asarray(want.state.A), atol=tol_a,
+                                   err_msg=tag)
+        assert int(out.state.last_update[lane]) == \
+            int(want.state.last_update), tag
+    pad = n_lanes - 1
+    np.testing.assert_array_equal(np.asarray(out.state.A[pad]),
+                                  np.asarray(packed.A[pad]))
+    assert int(out.state.last_update[pad]) == int(packed.last_update[pad])
+    assert not bool(out.state.initialized[pad])
+
+
+# ---------------------------------------------------------------------------
+# Ingest parity: halo-aware kernel (the n_h = 2 shard workload)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("io_dtype", IO_DTYPES)
+def test_halo_ingest_parity(io_dtype):
+    """The halo megakernel's wire-dtype img input (interpret substrate,
+    i.e. the actual kernel body) vs the dtype-matched XLA oracle, on a
+    shard-0-of-2 workload with an invalid top halo. Both paths share the
+    canonical upcast, so every wire dtype is round-off-tight here."""
+    b, h, w = 2, 24, 16
+    n_h, radius, gf_radius = 2, 2, 3
+    halo = radius + 2 * gf_radius
+    frames = _frames(31, b, h=h, w=w)
+    h_loc = h // n_h
+    img = frames[:, :h_loc]
+    pre = kref.premap(frames, jnp.ones((3,), jnp.float32), "dcp")
+    guide = kref.luminance(frames)
+    n_avail = min(h, h_loc + halo)
+    pad_top = jnp.zeros((b, halo, w), jnp.float32)
+    pad_bot = jnp.zeros((b, h_loc + halo - n_avail, w), jnp.float32)
+    pre_ext = jnp.concatenate([pad_top, pre[:, :n_avail], pad_bot], axis=1)
+    guide_ext = jnp.concatenate([pad_top, guide[:, :n_avail], pad_bot],
+                                axis=1)
+    rows_i = jnp.arange(h_loc + 2 * halo)
+    valid = (rows_i >= halo) & (rows_i < halo + n_avail)
+
+    wire_img = _wire(img, io_dtype)
+    kw = dict(algorithm="dcp", radius=radius, omega=0.95, refine=True,
+              gf_radius=gf_radius, gf_eps=1e-3, topk=2)
+    got = ops.fused_transmission_halo(wire_img, pre_ext, guide_ext, valid,
+                                      mode="interpret", **kw)
+    want = ops.fused_transmission_halo(wire_img, pre_ext, guide_ext, valid,
+                                       mode="ref", **kw)
+    for g, r, name in zip(got[:3], want[:3], ("t", "tk_t", "tk_rgb")):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(r, np.float32), atol=2e-4,
+                                   err_msg=f"{name}/{io_dtype}")
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    # Candidate RGB comes back at the resolved out dtype.
+    expect = jnp.float32 if io_dtype == "uint8" else jnp.dtype(io_dtype)
+    assert got[2].dtype == expect, io_dtype
+
+
+# ---------------------------------------------------------------------------
+# Double buffering: bit-parity through ops + traced DMA structure
+# ---------------------------------------------------------------------------
+
+def _dehaze_args(img):
+    b = img.shape[0]
+    ids = jnp.arange(b, dtype=jnp.int32)
+    s = init_atmo_state()
+    kw = dict(algorithm="dcp", radius=2, omega=0.95, refine=True,
+              gf_radius=3, gf_eps=1e-3, t0=0.1, gamma=1.0, period=2,
+              lam=0.3, frames_per_block=2)
+    return (img, ids, s.A, s.last_update, s.initialized), kw
+
+
+@pytest.mark.parametrize("io_dtype", ["float32", "uint8"])
+def test_dbuf_matches_classic_through_ops(io_dtype):
+    """buffer_depth=2 through the ops dispatch (explicit depth overrides
+    the interpret clamp, so the manual-DMA kernel body actually runs) must
+    be bit-identical to the single-buffered grid — the double buffering
+    changes WHEN bytes move, never what the kernel computes."""
+    img = _wire(_frames(41, 4, h=16, w=16), io_dtype)
+    args, kw = _dehaze_args(img)
+    classic = ops.fused_dehaze(*args, buffer_depth=1, mode="interpret", **kw)
+    dbuf = ops.fused_dehaze(*args, buffer_depth=2, mode="interpret", **kw)
+    for c, d in zip(classic, dbuf):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
+    assert dbuf[0].dtype == jnp.float32 if io_dtype == "uint8" else True
+
+
+def test_dbuf_traced_dma_structure():
+    """The overlap is in the lowered program: the double-buffered body
+    traces a warm-up + a next-block prefetch ``dma_start`` against one
+    ``dma_wait`` per grid step (copy of block n+1 in flight while block n
+    computes); the classic body traces none. The halo kernel moves three
+    input planes per block -> 3x the counts."""
+    img = _frames(43, 4, h=16, w=16)
+    args, kw = _dehaze_args(img)
+
+    def run(depth):
+        return ops.fused_dehaze(*args, buffer_depth=depth,
+                                mode="interpret", **kw)[0]
+
+    assert ops.dma_copy_count(lambda: run(1)) == {"starts": 0, "waits": 0}
+    assert ops.dma_copy_count(lambda: run(2)) == {"starts": 2, "waits": 1}
+
+    b, h, w = 4, 24, 16
+    frames = _frames(47, b, h=h, w=w)
+    pre = kref.premap(frames, jnp.ones((3,), jnp.float32), "dcp")
+    guide = kref.luminance(frames)
+    valid = jnp.ones((h,), bool)
+    hkw = dict(algorithm="dcp", radius=2, omega=0.95, refine=True,
+               gf_radius=3, gf_eps=1e-3, frames_per_block=2)
+
+    def run_halo(depth):
+        return ops.fused_transmission_halo(frames, pre, guide, valid,
+                                           buffer_depth=depth,
+                                           mode="interpret", **hkw)[0]
+
+    assert ops.dma_copy_count(lambda: run_halo(1)) == \
+        {"starts": 0, "waits": 0}
+    assert ops.dma_copy_count(lambda: run_halo(2)) == \
+        {"starts": 6, "waits": 3}
+
+
+def test_interpret_clamps_resolved_buffer_depth():
+    """Substrate-resolved depth (buffer_depth <= 0, the production
+    default) clamps to the single-buffered body under interpret — the
+    manual-DMA ring brings no overlap there. An explicit depth passes
+    through (how the tests above execute the DMA body)."""
+    img = _frames(53, 4, h=16, w=16)
+    args, kw = _dehaze_args(img)
+    resolved = ops.dma_copy_count(
+        lambda: ops.fused_dehaze(*args, mode="interpret", **kw)[0])
+    assert resolved == {"starts": 0, "waits": 0}
+
+
+# ---------------------------------------------------------------------------
+# Spout: wire dtype preserved host-side
+# ---------------------------------------------------------------------------
+
+def test_spout_preserves_wire_dtype():
+    from repro.stream.spout import Spout
+
+    u8 = [np.zeros((4, 4, 3), np.uint8) + i for i in range(3)]
+    batches = list(Spout(iter(u8), batch=2))
+    assert [b.frames.dtype for b in batches] == [np.uint8, np.uint8]
+    # Padding repeats the last frame — dtype-matched by construction.
+    assert batches[1].n_valid == 1
+    np.testing.assert_array_equal(batches[1].frames[1], u8[-1])
+    assert list(batches[1].frame_ids) == [2, -1]
+
+    f32 = [np.zeros((4, 4, 3), np.float32)]
+    assert next(iter(Spout(iter(f32), batch=1))).frames.dtype == np.float32
+    # Unsupported wire dtypes coerce to f32 (the pre-contract behavior).
+    f64 = [np.zeros((4, 4, 3), np.float64)]
+    assert next(iter(Spout(iter(f64), batch=1))).frames.dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# Tuning registry: dtype-tagged buckets
+# ---------------------------------------------------------------------------
+
+def test_tuning_bucket_dtype_tags(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(tmp_path / "t.json"))
+    assert tuning.shape_bucket((4, 16, 16)) == "4x16x16"
+    assert tuning.shape_bucket((4, 16, 16), jnp.float32) == "4x16x16"
+    assert tuning.shape_bucket((4, 16, 16), jnp.uint8) == "4x16x16xu8"
+    assert tuning.shape_bucket((4, 16, 16), jnp.bfloat16) == "4x16x16xbf16"
+    # A persisted uint8 bucket layers over the untagged one for uint8
+    # lookups only; f32 resolution is untouched.
+    tuning.save_table({"fused_dcp": {
+        "4x16x16": {"frames_per_block": 2},
+        "4x16x16xu8": {"frames_per_block": 4, "buffer_depth": 3}}})
+    assert tuning.get_params("fused_dcp", (4, 16, 16)) == \
+        {"frames_per_block": 2, "buffer_depth": 2}
+    assert tuning.get_params("fused_dcp", (4, 16, 16), dtype=jnp.uint8) == \
+        {"frames_per_block": 4, "buffer_depth": 3}
+    assert tuning.get_params("fused_dcp", (4, 16, 16),
+                             dtype=jnp.float32) == \
+        {"frames_per_block": 2, "buffer_depth": 2}
+
+
+# ---------------------------------------------------------------------------
+# Step cache: io/out dtype toggles must never reuse a stale step
+# ---------------------------------------------------------------------------
+
+def test_step_cache_keys_on_io_dtype():
+    from repro.stream.elastic import _STEP_CACHE, _cached_multi_step, \
+        _cached_step
+
+    base = DehazeConfig(patch_radius=3, gf_radius=4)
+    u8 = DehazeConfig(patch_radius=3, gf_radius=4, io_dtype="uint8")
+    out_bf16 = DehazeConfig(patch_radius=3, gf_radius=4,
+                            out_dtype="bfloat16")
+    s_base, s_u8, s_out = (_cached_step(c) for c in (base, u8, out_bf16))
+    assert s_base is not s_u8, "io_dtype toggle reused a cached step"
+    assert s_base is not s_out, "out_dtype toggle reused a cached step"
+    assert _cached_step(base) is s_base          # same cfg still hits
+
+    m_base = _cached_multi_step(base, 2, False)
+    m_u8 = _cached_multi_step(u8, 2, False)
+    assert m_base is not m_u8, "multi-step io_dtype toggle reused a step"
+    assert _cached_multi_step(base, 2, False) is m_base
+    assert _STEP_CACHE.hits >= 2
+
+
+# ---------------------------------------------------------------------------
+# Roofline gate: measured kernel-boundary bytes per ingest dtype
+# ---------------------------------------------------------------------------
+
+def test_roofline_u8_input_bytes_within_target():
+    """The bench-side gate as a test: the traced pallas_call operand bytes
+    for uint8 ingest must be <= 30% of the f32 baseline (no hidden XLA
+    upcast copy in front of the kernel), and the report must flag it ok."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import roofline_report
+    finally:
+        sys.path.remove(ROOT)
+    rows = {name: detail for name, _, detail
+            in roofline_report._fused_io_rows()}
+    u8 = rows["roofline/fused_io/uint8"]
+    assert "ok=yes" in u8, u8
+    ratio = float(u8.split("input_ratio_vs_f32=")[1].split(";")[0])
+    assert ratio <= 0.30, u8
