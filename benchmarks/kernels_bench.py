@@ -81,7 +81,43 @@ def rows() -> List[Tuple[str, float, str]]:
         out.extend(_sharded_halo_w_rows(img, tag))
     for n_lanes in (4, 16):
         out.extend(_multi_lane_rows(n_lanes))
+    out.extend(_tuning_search_cost_rows())
     return out
+
+
+def _tuning_search_cost_rows():
+    """Autotuner cost: successive-halving timed runs vs the exhaustive
+    ``candidates x iters`` product over the same joint space, on a
+    deterministic virtual-clock timer (no kernels execute — this row
+    measures the *search*, and must hold on any hardware)."""
+    from repro.kernels import tuning
+
+    rows = []
+    # The real joint spaces: fused = fpb x depth, lanes = fpb x order x depth.
+    for tag, n in (("fused_9c", 9), ("lanes_18c", 18)):
+        costs = {i: 10.0 + ((i * 7) % n) for i in range(n)}
+        clock = [0.0]
+
+        def build(params, _costs=costs, _clock=clock):
+            def run():
+                _clock[0] += _costs[params["x"]]
+            return run
+
+        stats = tuning.TuneStats()
+        t0 = time.perf_counter()
+        best = tuning.measured_search(
+            "fused_dcp", (2, 8, 8), [{"x": i} for i in range(n)], build,
+            iters=3, persist=False, timer=lambda _c=clock: _c[0],
+            stats=stats)
+        wall = time.perf_counter() - t0
+        assert stats.timed_runs < stats.exhaustive_runs, \
+            (stats.timed_runs, stats.exhaustive_runs)
+        saved = 100.0 * (1 - stats.timed_runs / stats.exhaustive_runs)
+        rows.append((f"kernels/tuning_search_cost/{tag}", wall * 1e6,
+                     f"runs_vs_exhaustive={stats.timed_runs}/"
+                     f"{stats.exhaustive_runs};saved={saved:.0f}%"
+                     f";winner_x={best['x']};rounds={stats.rounds}"))
+    return rows
 
 
 def _staged_vs_fused_rows(img: jnp.ndarray, tag: str):

@@ -17,6 +17,11 @@ Knobs:
   REPRO_STEP_CACHE_SIZE  bounded LRU size of the jitted-step cache
   REPRO_KERNEL_TUNING    path of the persisted kernel-tuning table
   REPRO_TUNE_<OP>        per-op JSON tile-parameter override
+  REPRO_TUNE_DEVICE_KIND override the device-kind key tuned winners
+                         persist/resolve under (CI validates foreign tables)
+  REPRO_TUNE_REQUIRE_TABLE
+                         when truthy, get_params raises if neither a table
+                         entry nor an env override exists (no silent defaults)
   REPRO_BENCH_SMOKE      benchmark drivers use tiny CI shapes when truthy
 
 ``snapshot()`` / ``restore()`` capture and reinstate the full ``REPRO_*``
@@ -100,6 +105,27 @@ def tune_override(op: str) -> Dict[str, Any]:
     return params if isinstance(params, dict) else {}
 
 
+def tune_device_kind() -> str:
+    """``REPRO_TUNE_DEVICE_KIND``: overrides the device-kind key measured
+    tuning winners persist (and resolve) under, ``""`` when unset — the
+    hardware answer ``jax.devices()[0].device_kind`` then applies. Used by
+    CI to validate a table tuned for foreign hardware without owning it."""
+    return os.environ.get("REPRO_TUNE_DEVICE_KIND", "")
+
+
+def tune_require_table() -> bool:
+    """``REPRO_TUNE_REQUIRE_TABLE``: when set, ``tuning.get_params`` raises
+    for lookups that found neither a measured table entry nor an env
+    override — serving fleets opt in to "real measurements only" instead
+    of silently running the built-in defaults. '0'/'1' or unset."""
+    env = os.environ.get("REPRO_TUNE_REQUIRE_TABLE", "")
+    if env not in ("", "0", "1"):
+        raise ValueError(
+            f"REPRO_TUNE_REQUIRE_TABLE={env!r} is not a valid value; "
+            "expected '0', '1' or unset")
+    return env == "1"
+
+
 def bench_smoke() -> bool:
     """``REPRO_BENCH_SMOKE``: benchmark drivers shrink to CI smoke shapes
     when set to anything non-empty."""
@@ -126,4 +152,5 @@ def restore(snap: Dict[str, str]) -> None:
 
 __all__ = ["SUBSTRATES", "KERNEL_MODES", "kernel_mode", "lane_native",
            "step_cache_size", "tuning_table_path", "tune_override",
-           "bench_smoke", "snapshot", "restore"]
+           "tune_device_kind", "tune_require_table", "bench_smoke",
+           "snapshot", "restore"]

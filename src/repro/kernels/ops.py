@@ -254,9 +254,11 @@ def fused_dehaze(img: jnp.ndarray, frame_ids: jnp.ndarray,
     Eq. 6 argmin-t pixel, >1 the robust in-VMEM mean-of-top-k.
     ``frames_per_block <= 0`` resolves the tile from the tuning registry's
     per-algorithm bucket (env ``REPRO_TUNE_FUSED_DCP`` /
-    ``REPRO_TUNE_FUSED_CAP`` > ``results/kernel_tuning.json`` > 1); the
-    top-k selection changes the kernel's VMEM/compute profile, so ``topk >
-    1`` resolves from its own ``fused_<algorithm>_topk`` bucket.
+    ``REPRO_TUNE_FUSED_CAP`` > the *current device kind's* measured entry
+    in ``results/kernel_tuning.json`` > legacy device-untagged entry > 1 —
+    see ``kernels.tuning.get_params``); the top-k selection changes the
+    kernel's VMEM/compute profile, so ``topk > 1`` resolves from its own
+    ``fused_<algorithm>_topk`` bucket.
 
     ``img`` may be any wire dtype (f32/bf16/uint8 — the canonical
     ``ref.upcast_frames`` ingest; non-f32 streams resolve dtype-tagged
@@ -318,7 +320,9 @@ def fused_dehaze_lanes(img: jnp.ndarray, frame_ids: jnp.ndarray,
 
     ``frames_per_block <= 0`` and ``lane_major=None`` resolve from the
     ``fused_lanes`` tuning bucket (env ``REPRO_TUNE_FUSED_LANES`` >
-    persisted table > lane-major, 1 frame per block); the bucket's shape
+    device-kind-keyed measured table > lane-major, 1 frame per block —
+    run ``python -m repro.kernels.tuning --search`` on the serving pod to
+    bake real measurements); the bucket's shape
     key includes the lane count, so the lane-major-vs-frame-major grid
     order and the ``frames_per_block`` x L tile sweep are tuned per
     serving shape. ``out_dtype``/``buffer_depth`` follow the

@@ -139,7 +139,16 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
     if args.autoscale:
         print(f"ladder_switches={rep.ladder_switches} "
               f"switch_wall={rep.switch_wall_s * 1e3:.1f}ms "
-              f"evictions={rep.evictions} final_lanes={rep.n_lanes}")
+              f"evictions={rep.evictions} final_lanes={rep.n_lanes} "
+              f"warm_failures={rep.warm_failures}")
+        if args.expect_switches and rep.warm_failures:
+            # A serve that *expects* ladder switches cannot tolerate part
+            # of the ladder silently failing to warm — that is exactly the
+            # bug class where the fleet never scales and nobody notices.
+            print(f"FAIL: {rep.warm_failures} ladder rung(s) failed to "
+                  f"warm (retried once); the expected switches cannot be "
+                  f"trusted", file=sys.stderr)
+            sys.exit(1)
     for sid in sorted(rep.per_stream):
         if sid.startswith("_warm"):
             continue
@@ -177,6 +186,27 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
                   f"io_dtype={args.io_dtype}", file=sys.stderr)
             sys.exit(1)
     return rep.skipped
+
+
+def _tune_for_serve(args, h: int, w: int) -> None:
+    """--tune: measured-search the tile space for *this serve's* shapes
+    before serving, so the run resolves freshly measured winners for the
+    current device kind instead of defaults (or a stale table)."""
+    from repro.kernels import tuning
+
+    stats = tuning.TuneStats()
+    kw = dict(method="search", persist=True, stats=stats)
+    tuning.autotune_fused(shapes=((args.batch, h, w),),
+                          algorithms=(args.algorithm,), topks=(1,),
+                          io_dtypes=(args.io_dtype,), **kw)
+    if args.streams > 1:
+        lanes = args.lanes if args.lanes > 0 else args.streams
+        tuning.autotune_fused_lanes(
+            shapes=((lanes, args.batch, h, w),), **kw)
+    print(f"tune: device_kind={tuning.device_kind()} "
+          f"table={tuning.table_path()} timed_runs={stats.timed_runs} "
+          f"(exhaustive would be {stats.exhaustive_runs}) "
+          f"skipped={stats.skipped}")
 
 
 def main() -> None:
@@ -227,6 +257,11 @@ def main() -> None:
                          "(uint8 = 4x less ingest traffic). With "
                          "--streams > 1 a non-f32 run also replays cam0 "
                          "single-stream and fails on parity drift")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the successive-halving measured search for "
+                         "this serve's exact shapes/dtype first (winners "
+                         "persist under the current device kind in the "
+                         "tuning table), then serve with them")
     ap.add_argument("--fail-on-skipped", action="store_true",
                     help="exit nonzero if any frame was timeout-skipped "
                          "(CI smoke gating)")
@@ -237,6 +272,8 @@ def main() -> None:
                        update_period=args.update_period, lam=args.lam,
                        kernel_mode=args.kernel_mode,
                        io_dtype=args.io_dtype)
+    if args.tune:
+        _tune_for_serve(args, h, w)
     if args.streams > 1:
         if args.workers != ap.get_default("workers"):
             print("note: --workers applies to single-stream serving only; "

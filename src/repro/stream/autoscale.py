@@ -30,6 +30,7 @@ the rung is ready.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -38,7 +39,14 @@ import numpy as np
 
 from repro.core.normalize import init_atmo_state_lanes
 
+logger = logging.getLogger(__name__)
+
 DEFAULT_RUNGS = (4, 8, 16, 32)
+
+# A rung's warm-up is retried at most once (a transient allocator hiccup
+# deserves a second chance; a rung whose compile genuinely OOMs should
+# stop burning background compile time and be counted as failed).
+WARM_MAX_ATTEMPTS = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +113,9 @@ class LaneAutoscaler:
         self._lock = threading.Lock()
         self._warm_thread: Optional[threading.Thread] = None
         self._warm_errors: Dict[int, Exception] = {}
+        self._warm_attempts: Dict[int, int] = {}
+        self._warm_shape: Optional[Tuple[Tuple[int, ...], Any]] = None
+        self._retry_threads: List[threading.Thread] = []
         self._up = 0
         self._down = 0
         # One record per committed switch: {"from", "to", "wall_s"}.
@@ -148,11 +159,14 @@ class LaneAutoscaler:
         this. ``dtype`` is the wire dtype of the frame stream: jit
         specializes on it, so warming must use the dtype the serve thread
         will actually feed (a uint8 stream warmed at f32 would re-trace on
-        the first real batch). Warm failures (e.g. a rung whose compile
-        OOMs) are recorded and that rung is simply never offered."""
+        the first real batch). A rung whose warm-up raises is logged and
+        retried once (lazily, the first time :meth:`observe` wants it);
+        after :data:`WARM_MAX_ATTEMPTS` failures it is never offered and
+        counts toward :attr:`warm_failures`."""
         with self._lock:
             if self._warm_thread is not None:
                 return
+            self._warm_shape = (tuple(lane_batch_shape), np.dtype(dtype))
             todo = [r for r in self.rungs if r not in self._ready]
             self._warm_thread = threading.Thread(
                 target=self._warm,
@@ -165,6 +179,9 @@ class LaneAutoscaler:
         b, h, w, c = shape
         for rung in todo:
             try:
+                with self._lock:
+                    self._warm_attempts[rung] = \
+                        self._warm_attempts.get(rung, 0) + 1
                 step = self._step_factory(rung)
                 frames = np.zeros((rung, b, h, w, c), dtype)
                 ids = np.full((rung, b), -1, np.int32)
@@ -173,17 +190,75 @@ class LaneAutoscaler:
                 with self._lock:
                     self._steps[rung] = step
                     self._ready.add(rung)
-            except Exception as e:                    # pragma: no cover
+                    self._warm_errors.pop(rung, None)
+            except Exception as e:
                 with self._lock:
                     self._warm_errors[rung] = e
+                    attempt = self._warm_attempts[rung]
+                logger.warning(
+                    "lane-ladder warm-up failed for rung %d (attempt %d/%d):"
+                    " %s: %s", rung, attempt, WARM_MAX_ATTEMPTS,
+                    type(e).__name__, e)
 
-    def wait_warm(self, timeout: Optional[float] = None) -> bool:
-        """Block until the warm thread finishes (tests/benchmarks)."""
+    def _retry_warm(self, rung: int) -> None:
+        """Kick one background re-warm of a failed rung (at most once —
+        see :data:`WARM_MAX_ATTEMPTS`). Called from :meth:`observe` when
+        the ladder wants a rung whose first warm-up raised."""
+        with self._lock:
+            if self._warm_shape is None \
+                    or self._warm_attempts.get(rung, 0) >= WARM_MAX_ATTEMPTS \
+                    or rung in self._ready:
+                return
+            shape, dtype = self._warm_shape
+            th = threading.Thread(target=self._warm,
+                                  args=(shape, dtype, [rung]),
+                                  daemon=True, name=f"lane-warm-retry-{rung}")
+            self._retry_threads.append(th)
+        th.start()
+
+    @property
+    def warm_errors(self) -> Dict[int, Exception]:
+        """Rung -> the exception its most recent warm-up attempt raised
+        (rungs that later warmed successfully are removed)."""
+        with self._lock:
+            return dict(self._warm_errors)
+
+    @property
+    def warm_failures(self) -> int:
+        """Rungs whose latest warm-up attempt failed (and that are hence
+        not offerable) — surfaced on ``ServeReport.warm_failures`` so a
+        serve that *expected* ladder switches can fail loudly instead of
+        silently never scaling. A successful retry clears the rung."""
+        with self._lock:
+            return len(self._warm_errors)
+
+    def wait_warm(self, timeout: Optional[float] = None,
+                  raise_on_error: bool = False) -> bool:
+        """Block until warm/retry threads finish (tests/benchmarks).
+
+        With ``raise_on_error`` the recorded warm errors are re-raised
+        (first one, chained) instead of staying buried on the background
+        thread — the pre-fix behavior was that a rung whose warm-up
+        failed was silently never offered."""
         th = self._warm_thread
+        done = True
         if th is not None:
             th.join(timeout=timeout)
-            return not th.is_alive()
-        return True
+            done = not th.is_alive()
+        with self._lock:
+            retries = list(self._retry_threads)
+        for th in retries:
+            th.join(timeout=timeout)
+            done = done and not th.is_alive()
+        if raise_on_error:
+            errs = self.warm_errors
+            if errs:
+                rung = min(errs)
+                raise RuntimeError(
+                    f"lane-ladder warm-up failed for rung(s) "
+                    f"{sorted(errs)}: {type(errs[rung]).__name__}: "
+                    f"{errs[rung]}") from errs[rung]
+        return done
 
     # -- the ladder walk ---------------------------------------------------
 
@@ -207,10 +282,12 @@ class LaneAutoscaler:
             target = self.rungs[self._idx + 1]
             if self.is_ready(target):
                 return target
+            self._retry_warm(target)         # no-op unless it warm-failed
         if self._down >= p.dwell_down:
             target = self.rungs[self._idx - 1]
             if self.is_ready(target):
                 return target
+            self._retry_warm(target)
         return None
 
     def commit(self, rung: int, wall_s: float = 0.0) -> None:

@@ -36,7 +36,7 @@ from repro.core import env as _env
 from repro.stream.autoscale import LaneAutoscaler, ScalePolicy, ladder_rungs
 from repro.stream.dispatcher import StreamDispatcher
 from repro.stream.fleet import FleetScheduler, PlacementPolicy
-from repro.stream.monitor import Monitor
+from repro.stream.monitor import DEADLINE_CLOCK, Monitor
 from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
                                     ServeReport, StreamEntry, StreamReport,
                                     _coerce_request)
@@ -191,7 +191,7 @@ class ElasticServer:
                    sink: Optional[Callable[[str, int, np.ndarray], None]]
                    = None, autoscale: bool = False,
                    policy: Optional[ScalePolicy] = None,
-                   clock: Callable[[], float] = time.time,
+                   clock: Callable[[], float] = DEADLINE_CLOCK,
                    n_hosts: int = 1,
                    placement: Optional[PlacementSpec] = None,
                    placement_policy: PlacementPolicy = "first-fit",

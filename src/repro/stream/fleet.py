@@ -50,6 +50,7 @@ import time
 import zlib
 from typing import Callable, List, Optional, Sequence, Union
 
+from repro.stream.monitor import DEADLINE_CLOCK
 from repro.stream.scheduler import (MultiSink, MultiStreamScheduler,
                                     ServeReport, StreamEntry, StreamRequest,
                                     _coerce_request, _Resume)
@@ -231,7 +232,7 @@ class FleetScheduler:
                  max_skipped_ids: int = 64,
                  autoscaler_factory: Optional[Callable[[int], object]] = None,
                  evict_tardy_after: Optional[int] = None,
-                 clock: Callable[[], float] = time.time,
+                 clock: Callable[[], float] = DEADLINE_CLOCK,
                  placement_policy: PlacementPolicy = "first-fit",
                  tick_delay_s: float = 0.0):
         if n_hosts < 1:
@@ -311,6 +312,7 @@ class FleetScheduler:
             ladder_switches=sum(r.ladder_switches for r in done),
             switch_wall_s=sum(r.switch_wall_s for r in done),
             evictions=sum(r.evictions for r in done),
+            warm_failures=sum(r.warm_failures for r in done),
             n_hosts=self.n_hosts,
             spillovers=queue.spillovers,
             migrations=queue.migrations)

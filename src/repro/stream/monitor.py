@@ -14,6 +14,17 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
+# The one deadline/timeout timebase shared by every serving component
+# (Monitor reader timeouts, scheduler/fleet EDF ordering and tardy
+# eviction, ``serve_many`` wall clocks). Monotonic by design: deadline
+# comparisons must not misfire when NTP steps the wall clock — the
+# scheduler and the monitor previously defaulted to *different* clocks
+# (``time.time`` vs ``time.monotonic``), so a wall-clock step could evict
+# lanes or reorder EDF admission spuriously. Inject a fake through the
+# ``clock=`` parameters for tests; ``StreamRequest.deadline`` values are
+# compared against this clock, so produce them from it too.
+DEADLINE_CLOCK: Callable[[], float] = time.monotonic
+
 
 @dataclass
 class MonitorStats:
@@ -37,7 +48,7 @@ class Monitor:
 
     def __init__(self, write_fn: Callable[[int, Any], None],
                  timeout_s: float = 0.020, start_frame: int = 0,
-                 clock: Callable[[], float] = time.monotonic,
+                 clock: Callable[[], float] = DEADLINE_CLOCK,
                  max_skipped_ids: int = 64):
         self._write = write_fn
         self._timeout = timeout_s

@@ -77,7 +77,7 @@ import numpy as np
 from repro.core.normalize import (AtmoState, get_lane_state,
                                   init_atmo_state_lanes, set_lane_state,
                                   unpack_atmo_states)
-from repro.stream.monitor import Monitor
+from repro.stream.monitor import DEADLINE_CLOCK, Monitor
 from repro.stream.spout import FrameBatch, Spout
 from repro.stream.state import StreamStateStore
 
@@ -87,8 +87,11 @@ class StreamRequest:
     """One stream to serve.
 
     ``frames`` is an iterable of ``(H, W, 3)`` float frames. ``deadline``
-    (any comparable number — e.g. epoch seconds from the scheduler's
-    ``clock``, default ``time.time``) requests earliest-deadline-first
+    is a value on the scheduler's ``clock`` timebase — by default
+    :data:`repro.stream.monitor.DEADLINE_CLOCK` (``time.monotonic``
+    seconds, NOT epoch seconds: produce deadlines as
+    ``DEADLINE_CLOCK() + budget_s``, and note monotonic values are only
+    comparable within one process). It requests earliest-deadline-first
     lane admission and, when eviction is enabled, marks when the stream
     counts as tardy. ``priority`` (lower = earlier, default 0) orders
     ahead of the deadline: a negative priority admits before the whole
@@ -181,6 +184,11 @@ class ServeReport:
     n_hosts: int = 1
     spillovers: int = 0
     migrations: int = 0
+    # Ladder rungs whose warm-up exhausted its attempts (autoscale serving
+    # only; summed across hosts by the fleet tier). Non-zero means part of
+    # the ladder is unreachable — serving that *expects* switches treats
+    # it as a hard error (see launch/serve.py --expect-switches).
+    warm_failures: int = 0
 
     @property
     def fps(self) -> float:
@@ -249,14 +257,17 @@ class MultiStreamScheduler:
     count elastic: ``n_lanes`` then gives the *starting* rung and the
     scheduler walks the precompiled ladder. ``evict_tardy_after`` enables
     deadline-aware preemption (see the module docstring); ``clock`` is
-    what deadlines are compared against (default ``time.time``).
+    what deadlines are compared against — default
+    :data:`repro.stream.monitor.DEADLINE_CLOCK` (``time.monotonic``), the
+    same timebase the Monitor uses, so EDF ordering and tardy eviction
+    cannot misfire across an NTP wall-clock step.
     """
 
     def __init__(self, step: Callable, store: StreamStateStore,
                  n_lanes: int, batch: int = 8, timeout_s: float = 0.020,
                  max_in_flight: int = 4, max_skipped_ids: int = 64,
                  autoscaler=None, evict_tardy_after: Optional[int] = None,
-                 clock: Callable[[], float] = time.time,
+                 clock: Callable[[], float] = DEADLINE_CLOCK,
                  tick_delay_s: float = 0.0):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
@@ -542,7 +553,9 @@ class MultiStreamScheduler:
             switch_wall_s=sum(s["wall_s"]
                               for s in self._autoscaler.switches)
             if self._autoscaler is not None else 0.0,
-            evictions=self._evictions)
+            evictions=self._evictions,
+            warm_failures=self._autoscaler.warm_failures
+            if self._autoscaler is not None else 0)
 
     def _tick_loop(self, packed: AtmoState, pad_frames: Optional[np.ndarray],
                    pad_ids: np.ndarray, sink: Optional[MultiSink]) -> int:

@@ -4,9 +4,17 @@ Covers: empty-batch EMA state round-trips (spout tail / elastic drain),
 ``resolve_mode`` rejecting unknown ``REPRO_KERNEL_MODE`` values instead of
 silently taking the compiled-Pallas branch, the fused megakernel's
 ``frames_per_block`` degrading to the largest dividing tile instead of 1,
-and spout tail padding being tagged ``frame_id = -1`` and masked out of
+spout tail padding being tagged ``frame_id = -1`` and masked out of
 the EMA recurrence (it used to carry *future real* ids, double-advancing
-the coherence state when the real frames with those ids arrived).
+the coherence state when the real frames with those ids arrived),
+``tuning.autotune`` refusing to persist the built-in DEFAULTS as a
+measured winner when every candidate raises, the serving stack defaulting
+every deadline comparison to one monotonic clock (scheduler/fleet/
+``serve_many`` used wall-clock ``time.time`` while the Monitor used
+``time.monotonic`` — an NTP step could evict lanes or reorder EDF
+admission spuriously), and ``LaneAutoscaler`` warm-up failures being
+surfaced (logged, retried once, reported) instead of silently never
+offering the rung.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -271,3 +279,155 @@ def test_non_divisor_tile_stays_exact():
         np.testing.assert_allclose(np.asarray(g, np.float32),
                                    np.asarray(w, np.float32), atol=1e-5)
     assert int(got[4]) == int(want[4])
+
+
+# --- autotune all-candidates-fail must not persist DEFAULTS ------------------
+
+def test_autotune_all_fail_does_not_persist_defaults(tmp_path, monkeypatch):
+    """Pre-fix, ``autotune`` initialized the winner to ``DEFAULTS[op]`` and
+    silently ``continue``d on every exception — a sweep whose every
+    candidate raised (wrong shapes, VMEM overflow) persisted the built-in
+    defaults into the table with full measured authority."""
+    from repro.kernels import tuning
+
+    table = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(table))
+
+    def build(params):
+        raise RuntimeError("candidate cannot compile")
+
+    stats = tuning.TuneStats()
+    with pytest.raises(tuning.AutotuneError, match="refusing to persist"):
+        tuning.autotune("fused_dcp", (2, 8, 8),
+                        [{"frames_per_block": f} for f in (1, 2, 4)],
+                        build, stats=stats)
+    assert not table.exists()                  # nothing persisted
+    assert stats.skipped == {"RuntimeError": 3}
+    # ...and the search core enforces the same contract.
+    with pytest.raises(tuning.AutotuneError):
+        tuning.measured_search("fused_dcp", (2, 8, 8),
+                               [{"frames_per_block": 1}], build)
+    assert not table.exists()
+
+
+# --- one monotonic deadline clock across the serving stack -------------------
+
+def test_deadline_clock_unified_monotonic(monkeypatch):
+    """``MultiStreamScheduler``/``FleetScheduler``/``serve_many`` defaulted
+    ``clock=time.time`` while the Monitor used ``time.monotonic``: a
+    deadline produced against one timebase was compared against the other,
+    and an NTP wall-clock step could instantly mark every deadlined lane
+    tardy. All defaults must be the one shared monotonic DEADLINE_CLOCK."""
+    import inspect
+    import time
+
+    from repro.stream import elastic, fleet, monitor, scheduler
+    from repro.stream.state import StreamStateStore
+
+    assert monitor.DEADLINE_CLOCK is time.monotonic
+    for fn in (scheduler.MultiStreamScheduler.__init__,
+               fleet.FleetScheduler.__init__,
+               elastic.ElasticServer.serve_many,
+               monitor.Monitor.__init__):
+        default = inspect.signature(fn).parameters["clock"].default
+        assert default is monitor.DEADLINE_CLOCK, fn.__qualname__
+
+    # Behavioral: a deadline an hour out stays an hour out across a
+    # simulated NTP step. With the old wall-clock default, clock() jumps
+    # to epoch scale and the fresh deadline is instantly "past due".
+    deadline = monitor.DEADLINE_CLOCK() + 3600.0
+    monkeypatch.setattr(time, "time", lambda: 4.0e9)   # the NTP step
+    sched = scheduler.MultiStreamScheduler(
+        step=lambda *a: None, store=StreamStateStore(), n_lanes=1)
+    assert sched._clock() < deadline           # not tardy: monotonic clock
+    assert time.time() >= deadline             # the old default would be
+
+
+# --- LaneAutoscaler warm failures surfaced, retried once, reported -----------
+
+class _FlakyRungFactory:
+    """Step factory whose rung-8 build fails ``fail_times`` times before
+    succeeding (or forever, for the permanent-failure case)."""
+
+    def __init__(self, fail_times):
+        self.fail_times = fail_times
+        self.attempts = {}
+
+    def __call__(self, rung):
+        self.attempts[rung] = self.attempts.get(rung, 0) + 1
+        if rung == 8 and self.attempts[rung] <= self.fail_times:
+            raise RuntimeError(f"rung {rung} compile blew VMEM")
+
+        def step(frames, ids, state):
+            import types
+            return types.SimpleNamespace(state=state)
+        return step
+
+
+def _spin_until(cond, timeout=5.0):
+    import time as _t
+    t0 = _t.monotonic()
+    while not cond():
+        if _t.monotonic() - t0 > timeout:
+            raise AssertionError("condition not reached in time")
+        _t.sleep(0.005)
+
+
+def test_warm_failure_surfaced_and_retried_once():
+    """Pre-fix, a rung whose background warm-up raised was recorded in
+    ``_warm_errors`` and then *nothing* referenced that dict: the rung was
+    silently never offered. Now the failure is logged, retried once when
+    the ladder actually wants the rung, and a successful retry makes the
+    rung offerable."""
+    from repro.stream.autoscale import LaneAutoscaler, ScalePolicy
+
+    factory = _FlakyRungFactory(fail_times=1)      # transient: retry wins
+    scaler = LaneAutoscaler(factory, rungs=(4, 8),
+                            policy=ScalePolicy(rungs=(4, 8), dwell_up=2))
+    scaler.acquire_initial()
+    scaler.ensure_warming((1, 8, 8, 3))
+    scaler.wait_warm(timeout=5.0)
+    assert 8 in scaler.warm_errors                 # surfaced, not buried
+    assert scaler.warm_failures == 1
+
+    # Load wants the bigger rung: dwell reached -> the retry is kicked.
+    assert scaler.observe(pending=2, occupied=4) is None
+    assert scaler.observe(pending=2, occupied=4) is None
+    _spin_until(lambda: scaler.is_ready(8))
+    assert scaler.warm_errors == {}                # retry cleared it
+    assert scaler.warm_failures == 0
+    assert scaler.observe(pending=2, occupied=4) == 8
+    assert factory.attempts[8] == 2
+
+
+def test_warm_failure_permanent_raises_on_request():
+    from repro.stream.autoscale import (WARM_MAX_ATTEMPTS, LaneAutoscaler,
+                                        ScalePolicy)
+
+    factory = _FlakyRungFactory(fail_times=10**9)  # permanent
+    scaler = LaneAutoscaler(factory, rungs=(4, 8),
+                            policy=ScalePolicy(rungs=(4, 8), dwell_up=2))
+    scaler.acquire_initial()
+    scaler.ensure_warming((1, 8, 8, 3))
+    scaler.wait_warm(timeout=5.0)
+    for _ in range(4):                             # retry budget exhausts
+        scaler.observe(pending=2, occupied=4)
+        scaler.wait_warm(timeout=5.0)
+    assert factory.attempts[8] == WARM_MAX_ATTEMPTS   # exactly one retry
+    assert scaler.warm_failures == 1
+    with pytest.raises(RuntimeError, match="rung"):
+        scaler.wait_warm(timeout=5.0, raise_on_error=True)
+
+
+def test_warm_failures_ride_the_serve_report():
+    """`ServeReport.warm_failures` carries the count (the
+    --expect-switches serve path exits nonzero on it)."""
+    import dataclasses
+
+    from repro.stream.scheduler import ServeReport
+
+    assert any(f.name == "warm_failures"
+               for f in dataclasses.fields(ServeReport))
+    rep = ServeReport(per_stream={}, frames=0, skipped=0, wall_s=0.0,
+                      n_lanes=4, ticks=0, warm_failures=2)
+    assert rep.warm_failures == 2

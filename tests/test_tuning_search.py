@@ -1,0 +1,334 @@
+"""Measured-search autotuner + device-kind-keyed table tests.
+
+Covers: the successive-halving search (same winner as the exhaustive
+sweep at strictly fewer timed runs, on a deterministic fake timer),
+schema-2 persistence (device-kind keying, provenance, legacy-v1
+migration), the layered ``get_params`` resolution, ``_TABLE_CACHE``
+invalidation (mtime bump, path switch mid-process), the
+``REPRO_TUNE_REQUIRE_TABLE`` knob, and ``validate_table``.
+"""
+import json
+import os
+
+import pytest
+
+from repro.kernels import tuning
+from repro.kernels.tuning import (AutotuneError, TuneStats, autotune,
+                                  measured_search)
+
+
+class FakeBench:
+    """Deterministic virtual-time benchmark: candidate ``x`` costs
+    ``costs[x]`` virtual seconds per run, the timer reads the virtual
+    clock — so ``_time_callable`` measures each candidate's cost exactly,
+    independent of the timing iteration count (fidelity-stable ranking,
+    the regime where the search provably returns the exhaustive winner).
+    """
+
+    def __init__(self, costs, fail=()):
+        self.costs = costs
+        self.fail = set(fail)
+        self.clock = 0.0
+        self.runs = {}
+
+    def timer(self):
+        return self.clock
+
+    def build(self, params):
+        x = params["x"]
+        if x in self.fail:
+            raise ValueError(f"candidate {x} cannot build")
+
+        def run():
+            self.clock += self.costs[x]
+            self.runs[x] = self.runs.get(x, 0) + 1
+            return None
+        return run
+
+
+def _candidates(n):
+    return [{"x": i} for i in range(n)]
+
+
+@pytest.fixture()
+def table_path(tmp_path, monkeypatch):
+    p = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(p))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# The headline claim: same winner, strictly fewer timed runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,iters", [(9, 3), (12, 3), (2, 3), (3, 2),
+                                     (18, 2), (7, 5)])
+def test_search_matches_exhaustive_winner_at_fewer_runs(table_path, n, iters):
+    costs = {i: 10.0 + ((i * 7) % n) for i in range(n)}   # distinct ranks
+    ex = FakeBench(costs)
+    ex_stats = TuneStats()
+    ex_best = autotune("fused_dcp", (2, 8, 8), _candidates(n), ex.build,
+                       iters=iters, persist=False, timer=ex.timer,
+                       stats=ex_stats)
+    se = FakeBench(costs)
+    se_stats = TuneStats()
+    se_best = measured_search("fused_dcp", (2, 8, 8), _candidates(n),
+                              se.build, iters=iters, persist=False,
+                              timer=se.timer, stats=se_stats)
+    assert se_best == ex_best
+    assert ex_stats.timed_runs == n * iters == se_stats.exhaustive_runs
+    assert se_stats.timed_runs < ex_stats.timed_runs
+
+
+def test_search_tie_breaks_toward_earlier_candidate(table_path):
+    costs = {0: 5.0, 1: 1.0, 2: 3.0, 3: 1.0}              # 1 and 3 tie
+    ex, se = FakeBench(costs), FakeBench(costs)
+    ex_best = autotune("fused_dcp", (2, 8, 8), _candidates(4), ex.build,
+                       persist=False, timer=ex.timer)
+    se_best = measured_search("fused_dcp", (2, 8, 8), _candidates(4),
+                              se.build, persist=False, timer=se.timer)
+    assert ex_best == se_best == {"x": 1}
+
+
+def test_search_rejects_bad_fidelity_args(table_path):
+    fb = FakeBench({0: 1.0})
+    with pytest.raises(ValueError):
+        measured_search("fused_dcp", (2, 8, 8), _candidates(1), fb.build,
+                        iters=0, timer=fb.timer)
+    with pytest.raises(ValueError):
+        measured_search("fused_dcp", (2, 8, 8), _candidates(1), fb.build,
+                        eta=1, timer=fb.timer)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: device-kind keying + provenance
+# ---------------------------------------------------------------------------
+
+def test_search_persists_device_kind_and_provenance(table_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_DEVICE_KIND", "TPU v5e")
+    fb = FakeBench({0: 3.0, 1: 1.0, 2: 2.0}, fail=(2,))
+    best = measured_search("fused_dcp", (2, 8, 8), _candidates(3), fb.build,
+                           timer=fb.timer)
+    assert best == {"x": 1}
+    raw = json.loads(table_path.read_text())
+    assert raw["schema"] == tuning.SCHEMA_VERSION
+    entry = raw["device_kinds"]["TPU v5e"]["fused_dcp"]["2x8x8"]
+    assert entry["params"] == {"x": 1}
+    prov = entry["provenance"]
+    assert prov["method"] == "successive_halving"
+    assert prov["device_kind"] == "TPU v5e"
+    assert prov["considered"] == 3
+    assert prov["skipped"] == {"ValueError": 1}
+    assert prov["iters"] >= 1 and prov["time_us"] >= 0
+    # ...and the same process resolves it back (device kind still TPU v5e).
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["x"] == 1
+
+
+def test_persist_keeps_other_device_kinds(table_path, monkeypatch):
+    for kind, costs in [("kindA", {0: 1.0, 1: 2.0}),
+                        ("kindB", {0: 2.0, 1: 1.0})]:
+        monkeypatch.setenv("REPRO_TUNE_DEVICE_KIND", kind)
+        fb = FakeBench(costs)
+        measured_search("fused_dcp", (2, 8, 8), _candidates(2), fb.build,
+                        timer=fb.timer)
+    raw = json.loads(table_path.read_text())
+    assert raw["device_kinds"]["kindA"]["fused_dcp"]["2x8x8"]["params"] \
+        == {"x": 0}
+    assert raw["device_kinds"]["kindB"]["fused_dcp"]["2x8x8"]["params"] \
+        == {"x": 1}
+
+
+def test_all_candidates_fail_raises_and_persists_nothing(table_path):
+    fb = FakeBench({}, fail=(0, 1, 2))
+    stats = TuneStats()
+    with pytest.raises(AutotuneError, match="all 3 candidates"):
+        measured_search("fused_dcp", (2, 8, 8), _candidates(3), fb.build,
+                        timer=fb.timer, stats=stats)
+    assert stats.skipped == {"ValueError": 3}
+    assert not table_path.exists()
+
+
+# ---------------------------------------------------------------------------
+# get_params layering + legacy migration
+# ---------------------------------------------------------------------------
+
+def _write(path, table):
+    path.write_text(json.dumps(table))
+
+
+def test_get_params_layering_device_kind_over_legacy(table_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_DEVICE_KIND", "kindA")
+    _write(table_path, {
+        "schema": 2,
+        "device_kinds": {
+            "kindA": {"fused_dcp": {"2x8x8": {
+                "params": {"frames_per_block": 4}, "provenance": {}}}},
+            "kindB": {"fused_dcp": {"2x8x8": {
+                "params": {"frames_per_block": 9}, "provenance": {}}}}},
+        "legacy": {"fused_dcp": {"2x8x8": {"frames_per_block": 2,
+                                           "buffer_depth": 3}}}})
+    p = tuning.get_params("fused_dcp", (2, 8, 8))
+    assert p["frames_per_block"] == 4          # kindA beats legacy & kindB
+    assert p["buffer_depth"] == 3              # legacy fills unset keys
+    monkeypatch.setenv("REPRO_TUNE_DEVICE_KIND", "kindC")
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 2
+
+
+def test_get_params_dtype_tag_layers_within_kind(table_path, monkeypatch):
+    import jax.numpy as jnp
+    monkeypatch.setenv("REPRO_TUNE_DEVICE_KIND", "kindA")
+    _write(table_path, {
+        "schema": 2,
+        "device_kinds": {"kindA": {"fused_dcp": {
+            "2x8x8": {"params": {"frames_per_block": 2}, "provenance": {}},
+            "2x8x8xu8": {"params": {"frames_per_block": 8},
+                         "provenance": {}}}}},
+        "legacy": {}})
+    assert tuning.get_params("fused_dcp", (2, 8, 8),
+                             dtype=jnp.float32)["frames_per_block"] == 2
+    assert tuning.get_params("fused_dcp", (2, 8, 8),
+                             dtype=jnp.uint8)["frames_per_block"] == 8
+
+
+def test_legacy_v1_table_still_loads(table_path):
+    _write(table_path, {"fused_dcp": {"2x8x8": {"frames_per_block": 7}}})
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 7
+
+
+def test_env_override_beats_every_table_layer(table_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_DEVICE_KIND", "kindA")
+    _write(table_path, {
+        "schema": 2,
+        "device_kinds": {"kindA": {"fused_dcp": {"2x8x8": {
+            "params": {"frames_per_block": 4}, "provenance": {}}}}},
+        "legacy": {}})
+    monkeypatch.setenv("REPRO_TUNE_FUSED_DCP", '{"frames_per_block": 16}')
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 16
+
+
+def test_migrate_table_moves_v1_ops_to_legacy(table_path):
+    v1 = {"fused_dcp": {"2x8x8": {"frames_per_block": 7}}}
+    m = tuning.migrate_table(v1)
+    assert m["schema"] == tuning.SCHEMA_VERSION
+    assert m["legacy"] == v1 and m["device_kinds"] == {}
+    assert tuning.migrate_table(m) is m        # idempotent on schema-2
+    # Persisting a measured winner migrates the on-disk v1 table in place.
+    _write(table_path, v1)
+    fb = FakeBench({0: 1.0})
+    measured_search("fused_cap", (2, 8, 8), _candidates(1), fb.build,
+                    timer=fb.timer)
+    raw = json.loads(table_path.read_text())
+    assert raw["schema"] == tuning.SCHEMA_VERSION
+    assert raw["legacy"]["fused_dcp"]["2x8x8"]["frames_per_block"] == 7
+    # ...and both layers resolve afterwards.
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 7
+    assert tuning.get_params("fused_cap", (2, 8, 8))["x"] == 0
+
+
+# ---------------------------------------------------------------------------
+# _TABLE_CACHE invalidation
+# ---------------------------------------------------------------------------
+
+def test_table_cache_invalidates_on_mtime_bump(table_path):
+    _write(table_path, {"fused_dcp": {"2x8x8": {"frames_per_block": 1}}})
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 1
+    _write(table_path, {"fused_dcp": {"2x8x8": {"frames_per_block": 5}}})
+    st = os.stat(table_path)
+    os.utime(table_path, ns=(st.st_atime_ns, st.st_mtime_ns + 10_000_000))
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 5
+
+
+def test_table_cache_path_switch_mid_process(tmp_path, monkeypatch):
+    p1, p2 = tmp_path / "t1.json", tmp_path / "t2.json"
+    _write(p1, {"fused_dcp": {"2x8x8": {"frames_per_block": 3}}})
+    _write(p2, {"fused_dcp": {"2x8x8": {"frames_per_block": 6}}})
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(p1))
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 3
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(p2))
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 6
+    monkeypatch.setenv("REPRO_KERNEL_TUNING", str(p1))
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 3
+
+
+def test_save_table_refreshes_cache_same_process(table_path):
+    tuning.save_table({"fused_dcp": {"2x8x8": {"frames_per_block": 2}}})
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 2
+    tuning.save_table({"fused_dcp": {"2x8x8": {"frames_per_block": 4}}})
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 4
+
+
+# ---------------------------------------------------------------------------
+# REPRO_TUNE_REQUIRE_TABLE
+# ---------------------------------------------------------------------------
+
+def test_require_table_raises_on_default_resolution(table_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_REQUIRE_TABLE", "1")
+    with pytest.raises(AutotuneError, match="REPRO_TUNE_REQUIRE_TABLE"):
+        tuning.get_params("fused_dcp", (2, 8, 8))
+    # A table entry satisfies it...
+    _write(table_path, {"fused_dcp": {"2x8x8": {"frames_per_block": 2}}})
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] == 2
+    # ...and so does an env override for an uncovered op.
+    monkeypatch.setenv("REPRO_TUNE_FUSED_CAP", '{"frames_per_block": 2}')
+    assert tuning.get_params("fused_cap", (2, 8, 8))["frames_per_block"] == 2
+    with pytest.raises(AutotuneError):
+        tuning.get_params("fused_halo_2d", (2, 8, 8))
+
+
+# ---------------------------------------------------------------------------
+# validate_table
+# ---------------------------------------------------------------------------
+
+def _valid_entry():
+    return {"params": {"frames_per_block": 2},
+            "provenance": {"time_us": 1.0, "iters": 3, "considered": 4,
+                           "skipped": {}, "method": "successive_halving"}}
+
+
+def test_validate_table_accepts_generated_schema(table_path):
+    fb = FakeBench({0: 2.0, 1: 1.0})
+    measured_search("fused_dcp", (2, 8, 8), _candidates(2), fb.build,
+                    timer=fb.timer)
+    assert tuning.validate_table(tuning.load_table()) == []
+
+
+def test_validate_table_flags_defects():
+    assert tuning.validate_table({}) == ["table is empty or unreadable"]
+    errs = tuning.validate_table(
+        {"fused_dcp": {"2x8x8": {"frames_per_block": 1}}})
+    assert any("schema" in e for e in errs)
+    errs = tuning.validate_table({
+        "schema": 2,
+        "device_kinds": {"cpu": {
+            "no_such_op": {"2x8x8": _valid_entry()},
+            "fused_dcp": {"bad bucket!": _valid_entry(),
+                          "2x8x8": {"params": {"frames_per_block": 1},
+                                    "provenance": {"time_us": 1.0}},
+                          "4x8x8": {"frames_per_block": 1}}}},
+        "legacy": {}})
+    joined = "\n".join(errs)
+    assert "unknown op" in joined
+    assert "malformed bucket key" in joined
+    assert "provenance lacks" in joined
+    assert "must wrap a params dict" in joined
+
+
+# ---------------------------------------------------------------------------
+# Driver smoke against real kernels (tiny shapes)
+# ---------------------------------------------------------------------------
+
+def test_driver_smoke_persists_measured_entry(table_path):
+    stats = TuneStats()
+    out = tuning.autotune_fused(shapes=((2, 8, 8),), candidates=(1, 2),
+                                depths=(1,), io_dtypes=("float32",),
+                                algorithms=("dcp",), topks=(1,), iters=2,
+                                method="search", stats=stats)
+    assert out["fused_dcp"]["2x8x8"]["frames_per_block"] in (1, 2)
+    assert stats.timed_runs < stats.exhaustive_runs or \
+        stats.exhaustive_runs <= 2   # single-survivor edge: still cheaper
+    raw = json.loads(table_path.read_text())
+    entry = raw["device_kinds"][tuning.device_kind()]["fused_dcp"]["2x8x8"]
+    assert entry["provenance"]["method"] == "successive_halving"
+    # The dispatch path resolves the measured winner end-to-end.
+    assert tuning.get_params("fused_dcp", (2, 8, 8))["frames_per_block"] \
+        == entry["params"]["frames_per_block"]
