@@ -20,6 +20,9 @@ SUITES = {
     # Fleet subset of table1 (1 vs 2 simulated hosts; asserts the >= 1.8x
     # aggregate-fps scaling bar + zero EMA migrations).
     "fleet": table1_throughput.fleet_rows,
+    # Zero-copy tick I/O subset of table1 (overlapped vs blocking serve at
+    # sparse occupancy; asserts fps(on) >= fps(off) + D2H byte reduction).
+    "overlap": table1_throughput.overlap_rows,
 }
 
 

@@ -14,6 +14,8 @@ Knobs:
 
   REPRO_KERNEL_MODE      execution substrate / pipeline mode override
   REPRO_LANE_NATIVE      force the lane-native megakernel on (1) or off (0)
+  REPRO_TICK_OVERLAP     force the zero-copy overlapped serve tick path on
+                         (1) or off (0; the blocking parity oracle)
   REPRO_STEP_CACHE_SIZE  bounded LRU size of the jitted-step cache
   REPRO_KERNEL_TUNING    path of the persisted kernel-tuning table
   REPRO_TUNE_<OP>        per-op JSON tile-parameter override
@@ -64,6 +66,22 @@ def lane_native() -> Optional[bool]:
         raise ValueError(
             f"REPRO_LANE_NATIVE={env!r} is not a valid override; expected "
             "'0' (force vmap), '1' (force lane-native) or unset")
+    return None if env == "" else env == "1"
+
+
+def tick_overlap() -> Optional[bool]:
+    """``REPRO_TICK_OVERLAP``: ``True`` (force the zero-copy overlapped
+    serve tick path), ``False`` (force the blocking path — the parity
+    oracle) or ``None`` when unset. Unknown values raise. Whether forcing
+    overlap on can actually be honored (device-resident staging needs
+    ``jax.device_put`` + donation on the backend) is decided by
+    ``stream.iobuf.donation_supported``; ``launch/serve.py`` turns a
+    silent fallback into a hard failure under ``--expect-overlap``."""
+    env = os.environ.get("REPRO_TICK_OVERLAP", "")
+    if env not in ("", "0", "1"):
+        raise ValueError(
+            f"REPRO_TICK_OVERLAP={env!r} is not a valid override; expected "
+            "'0' (force blocking), '1' (force overlap) or unset")
     return None if env == "" else env == "1"
 
 
@@ -151,6 +169,7 @@ def restore(snap: Dict[str, str]) -> None:
 
 
 __all__ = ["SUBSTRATES", "KERNEL_MODES", "kernel_mode", "lane_native",
+           "tick_overlap",
            "step_cache_size", "tuning_table_path", "tune_override",
            "tune_device_kind", "tune_require_table", "bench_smoke",
            "snapshot", "restore"]

@@ -67,12 +67,47 @@ def _ingest(frames: jnp.ndarray, cfg: DehazeConfig):
 
 
 # ---------------------------------------------------------------------------
+# Buffer donation contract
+# ---------------------------------------------------------------------------
+
+# Step argument positions (frames, frame_ids, state) — the donation
+# argnums below index into this signature.
+_ARG_FRAMES, _ARG_IDS, _ARG_STATE = 0, 1, 2
+
+
+def donation_spec(cfg: DehazeConfig) -> Tuple[int, ...]:
+    """The step arguments eligible for ``jax.jit`` buffer donation.
+
+    The EMA state (argnum 2) is always donatable: ``out.state`` has the
+    input state's exact shape/dtype, the serve loops thread it
+    sequentially, and nothing else holds the old value once the next tick
+    is dispatched — donating it makes steady-state serving allocate zero
+    new HBM for the state chain.
+
+    The frame batch (argnum 0) is donatable only when the wire dtype
+    equals the resolved output dtype (f32-in/f32-out, bf16-in/bf16-out):
+    XLA then aliases ``out.frames`` onto the input buffer. A uint8 stream
+    can never alias (J is float), and ``out_dtype`` overrides that differ
+    from ``io_dtype`` break the aliasing too — donating a buffer XLA
+    cannot alias is legal but wasteful (the input is freed, a fresh output
+    allocated), so we only offer arguments that actually alias.
+    """
+    cfg = cfg.validate()
+    argnums = [_ARG_STATE]
+    if kref.resolve_out_dtype(jnp.dtype(cfg.io_dtype), cfg.out_dtype) \
+            == jnp.dtype(cfg.io_dtype):
+        argnums.insert(0, _ARG_FRAMES)
+    return tuple(argnums)
+
+
+# ---------------------------------------------------------------------------
 # The placement-driven entry point
 # ---------------------------------------------------------------------------
 
 def make_step(cfg: DehazeConfig, placement: Optional[PlacementSpec] = None,
               mesh: Optional[jax.sharding.Mesh] = None, *,
-              associative: bool = True, lane_native: Optional[bool] = None):
+              associative: bool = True, lane_native: Optional[bool] = None,
+              donate=False):
     """Build the dehaze step a :class:`PlacementSpec` declares.
 
     - no mesh axes, no lanes  -> ``step(frames (B,H,W,3), ids (B,), state)``
@@ -86,13 +121,35 @@ def make_step(cfg: DehazeConfig, placement: Optional[PlacementSpec] = None,
       with H/W halo sharding inside each shard.
 
     ``mesh`` is required iff the placement names mesh axes. ``lane_native``
-    follows :func:`resolve_lane_native` when ``None``. The returned step is
-    un-jitted (callers jit, typically through the serving step cache which
-    keys on ``(cfg, placement)``).
+    follows :func:`resolve_lane_native` when ``None``.
+
+    ``donate`` is the buffer-donation contract (README §Tick I/O &
+    overlap). ``False`` (default) returns the un-jitted step exactly as
+    before (callers jit, typically through the serving step cache which
+    keys on ``(cfg, placement)``). Donation is a property of the *jitted*
+    call, so a non-``False`` value returns ``jax.jit(step,
+    donate_argnums=...)``:
+
+    - ``"state"`` — donate only the EMA state (argnum 2). This is the
+      tick-step contract: the serve loop owns a long-lived device frame
+      buffer that must survive the call, while the state chain is
+      strictly sequential and its input is dead after dispatch.
+    - ``True`` — donate everything :func:`donation_spec` allows (state
+      always, frames when the wire dtype aliases the output dtype). This
+      is the dispatcher contract: each batch's input buffer is
+      single-use, so ``out.frames`` can alias it.
+
+    Donation with a mesh-sharded placement is not offered (the serving
+    tiers drive local lane batches; a sharded step's buffers belong to
+    the launch tooling) and raises.
     """
     placement = (placement if placement is not None
                  else PlacementSpec()).validate()
     cfg = cfg.validate()
+    if donate is not False and placement.sharded:
+        raise ValueError(
+            "donate= is a serving-tier contract for local batches; "
+            f"mesh-sharded placement {placement} manages its own buffers")
     if placement.sharded:
         if mesh is None:
             raise ValueError(
@@ -102,9 +159,20 @@ def make_step(cfg: DehazeConfig, placement: Optional[PlacementSpec] = None,
                                   associative=associative,
                                   lane_native=lane_native)
     if placement.lanes:
-        return _make_lane_step(cfg, associative=associative,
+        step = _make_lane_step(cfg, associative=associative,
                                lane_native=lane_native)
-    return _make_single_step(cfg, associative=associative)
+    else:
+        step = _make_single_step(cfg, associative=associative)
+    if donate is False:
+        return step
+    if donate == "state":
+        argnums: Tuple[int, ...] = (_ARG_STATE,)
+    elif donate is True:
+        argnums = donation_spec(cfg)
+    else:
+        raise ValueError(
+            f"donate must be False, True or 'state', got {donate!r}")
+    return jax.jit(step, donate_argnums=argnums)
 
 
 # ---------------------------------------------------------------------------
@@ -550,7 +618,8 @@ def make_sharded_dehaze_step(cfg: DehazeConfig, mesh: jax.sharding.Mesh,
     return step, placement.frame_spec(), placement.ids_spec()
 
 
-__all__ = ["DehazeOutput", "PlacementSpec", "make_step", "make_dehaze_step",
+__all__ = ["DehazeOutput", "PlacementSpec", "make_step", "donation_spec",
+           "make_dehaze_step",
            "make_multi_stream_step", "make_sharded_dehaze_step",
            "resolve_lane_native", "init_atmo_state", "init_atmo_state_lanes",
            "pack_atmo_states", "unpack_atmo_states", "AtmoState", "ema_scan",

@@ -64,6 +64,29 @@ def _wire_hazy(vid, io_dtype: str) -> np.ndarray:
     return kref.quantize_frames(vid.hazy, io_dtype)
 
 
+def _print_tick_io(rep) -> None:
+    """One line of tick-I/O accounting (README §Tick I/O & overlap):
+    how many ticks took the zero-copy path, the valid-only D2H volume,
+    and where the tick wall went (host staging / device step / deliver)."""
+    ph = rep.phases or {}
+    phase_txt = " ".join(f"{k}={ph[k] * 1e3:.1f}ms" for k in sorted(ph))
+    print(f"tick_io: overlap_ticks={rep.overlap_ticks}/{rep.ticks} "
+          f"d2h_bytes={rep.d2h_bytes} stragglers={rep.stragglers}"
+          + (f" {phase_txt}" if phase_txt else ""))
+
+
+def _gate_overlap(args, rep) -> None:
+    """--expect-overlap: a serve that expects the zero-copy tick path
+    cannot tolerate a silent fallback to the blocking oracle (donation
+    probe failing, env knob ignored) — that is exactly the regression
+    the CI overlap leg exists to catch."""
+    if args.expect_overlap and rep.overlap_ticks < rep.ticks:
+        print(f"FAIL: expected every tick on the overlapped path, got "
+              f"{rep.overlap_ticks}/{rep.ticks} (silent fallback to the "
+              f"blocking path)", file=sys.stderr)
+        sys.exit(1)
+
+
 def _serve_single(args, cfg, h: int, w: int) -> int:
     vid = _make_videos(1, h, w, args.frames)[0]
     hazy = _wire_hazy(vid, args.io_dtype)
@@ -81,9 +104,11 @@ def _serve_single(args, cfg, h: int, w: int) -> int:
           f"workers={rep.n_workers}")
     print(f"frames={rep.frames} skipped={rep.skipped} "
           f"fps={rep.fps:.2f} wall={wall:.2f}s")
+    _print_tick_io(rep)
     print(f"L1 vs ground truth: hazy={err_hazy:.4f} dehazed={err_out:.4f}")
     a = srv.store.get("default").A
     print(f"final shared A = {np.asarray(a)}")
+    _gate_overlap(args, rep)
     return rep.skipped
 
 
@@ -130,6 +155,7 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
           f"hosts={rep.n_hosts}")
     print(f"frames={rep.frames} skipped={rep.skipped} ticks={rep.ticks} "
           f"aggregate_fps={rep.aggregate_fps:.2f} wall={rep.wall_s:.2f}s")
+    _print_tick_io(rep)
     if args.hosts > 1:
         print(f"spillovers={rep.spillovers} migrations={rep.migrations}")
         if rep.migrations != 0:
@@ -164,6 +190,7 @@ def _serve_many(args, cfg, h: int, w: int) -> int:
         print(f"FAIL: expected >= {args.expect_spillover} spillover "
               f"admission(s), got {rep.spillovers}", file=sys.stderr)
         sys.exit(1)
+    _gate_overlap(args, rep)
     if args.io_dtype != "float32" and cam0_out:
         # Non-f32 wire dtype: replay cam0 alone through a fresh server
         # (same config, same quantized stream) and gate on parity — the
@@ -262,6 +289,11 @@ def main() -> None:
                          "this serve's exact shapes/dtype first (winners "
                          "persist under the current device kind in the "
                          "tuning table), then serve with them")
+    ap.add_argument("--expect-overlap", action="store_true",
+                    help="exit nonzero unless every tick took the "
+                         "zero-copy overlapped path (pair with "
+                         "REPRO_TICK_OVERLAP=1; CI gating against a "
+                         "silent fallback to the blocking path)")
     ap.add_argument("--fail-on-skipped", action="store_true",
                     help="exit nonzero if any frame was timeout-skipped "
                          "(CI smoke gating)")

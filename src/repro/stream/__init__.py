@@ -6,6 +6,8 @@ from repro.stream.autoscale import (DEFAULT_RUNGS, LaneAutoscaler,
 from repro.stream.dispatcher import DispatchStats, StreamDispatcher
 from repro.stream.elastic import ElasticServer
 from repro.stream.fleet import FleetScheduler
+from repro.stream.iobuf import (LaneTickStep, TickBufferPool,
+                                donation_supported, fetch_valid)
 from repro.stream.monitor import Monitor, MonitorStats
 from repro.stream.scheduler import (MultiServeReport, MultiStreamScheduler,
                                     ServeReport, StreamReport, StreamRequest)
@@ -17,4 +19,6 @@ __all__ = ["Monitor", "MonitorStats", "Spout", "FrameBatch",
            "ServeReport", "StreamStateStore", "MultiStreamScheduler",
            "MultiServeReport", "StreamReport", "StreamRequest",
            "FleetScheduler",
+           "LaneTickStep", "TickBufferPool", "donation_supported",
+           "fetch_valid",
            "ScalePolicy", "LaneAutoscaler", "ladder_rungs", "DEFAULT_RUNGS"]

@@ -92,7 +92,13 @@ class LaneAutoscaler:
     lane batch (``frame_id = -1`` everywhere, which the masked EMA paths
     treat as identity), on a background thread: that populates the jit
     executable cache for the exact serving avals, so the serve thread's
-    first real call at the new rung is a cache hit, not a trace.
+    first real call at the new rung is a cache hit, not a trace. On the
+    overlapped tick path ``step_factory`` hands out
+    ``stream.iobuf.LaneTickStep`` adapters instead of raw steps; the same
+    warm-up call then also pre-binds the rung's device-resident donated
+    frame buffer and primes the lane-splice executable (the adapter's
+    ``__call__`` is the full-batch compatibility path), with no autoscaler
+    changes — which is why warming stays a plain step call here.
     """
 
     def __init__(self, step_factory: Callable[[int], Callable],
@@ -114,6 +120,12 @@ class LaneAutoscaler:
         self._warm_thread: Optional[threading.Thread] = None
         self._warm_errors: Dict[int, Exception] = {}
         self._warm_attempts: Dict[int, int] = {}
+        # Rungs with a warm-up attempt currently executing. _retry_warm
+        # must never start a second concurrent attempt for a rung: with
+        # stateful tick adapters (stream.iobuf.LaneTickStep) two threads
+        # warming ONE rung share its device buffer and race the donated
+        # splice — one ends up passing an already-donated buffer.
+        self._warming: set = set()
         self._warm_shape: Optional[Tuple[Tuple[int, ...], Any]] = None
         self._retry_threads: List[threading.Thread] = []
         self._up = 0
@@ -178,10 +190,13 @@ class LaneAutoscaler:
               todo: Sequence[int]) -> None:
         b, h, w, c = shape
         for rung in todo:
+            with self._lock:
+                if rung in self._warming or rung in self._ready:
+                    continue        # another thread already owns this rung
+                self._warming.add(rung)
+                self._warm_attempts[rung] = \
+                    self._warm_attempts.get(rung, 0) + 1
             try:
-                with self._lock:
-                    self._warm_attempts[rung] = \
-                        self._warm_attempts.get(rung, 0) + 1
                 step = self._step_factory(rung)
                 frames = np.zeros((rung, b, h, w, c), dtype)
                 ids = np.full((rung, b), -1, np.int32)
@@ -199,6 +214,9 @@ class LaneAutoscaler:
                     "lane-ladder warm-up failed for rung %d (attempt %d/%d):"
                     " %s: %s", rung, attempt, WARM_MAX_ATTEMPTS,
                     type(e).__name__, e)
+            finally:
+                with self._lock:
+                    self._warming.discard(rung)
 
     def _retry_warm(self, rung: int) -> None:
         """Kick one background re-warm of a failed rung (at most once —
@@ -207,7 +225,8 @@ class LaneAutoscaler:
         with self._lock:
             if self._warm_shape is None \
                     or self._warm_attempts.get(rung, 0) >= WARM_MAX_ATTEMPTS \
-                    or rung in self._ready:
+                    or rung in self._ready \
+                    or rung in self._warming:
                 return
             shape, dtype = self._warm_shape
             th = threading.Thread(target=self._warm,

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core import (DehazeConfig, PlacementSpec, make_dehaze_step,
                         make_step, resolve_lane_native)
 from repro.core import env as _env
+from repro.stream import iobuf
 from repro.stream.autoscale import LaneAutoscaler, ScalePolicy, ladder_rungs
 from repro.stream.dispatcher import StreamDispatcher
 from repro.stream.fleet import FleetScheduler, PlacementPolicy
@@ -89,39 +90,67 @@ class _LRUStepCache:
 _STEP_CACHE = _LRUStepCache(maxsize=_env.step_cache_size())
 
 
-def _cached_step(cfg: DehazeConfig):
-    """One jitted executable per config — servers with the same config
-    (e.g. benchmark sweeps over worker counts) share compilations."""
-    return _STEP_CACHE.get(("single", cfg),
-                           lambda: jax.jit(make_dehaze_step(cfg)))
+def _cached_step(cfg: DehazeConfig, donate=False):
+    """One jitted executable per (config, donation contract) — servers
+    with the same config (e.g. benchmark sweeps over worker counts) share
+    compilations. ``donate`` is the ``make_step`` donation contract; a
+    donating executable must never be handed to a caller that reuses its
+    input buffers, hence the key."""
+    def build():
+        if donate is not False:
+            return make_step(cfg, PlacementSpec.single(), donate=donate)
+        return jax.jit(make_dehaze_step(cfg))
+    return _STEP_CACHE.get(("single", cfg, donate), build)
 
 
 def _cached_multi_step(cfg: DehazeConfig, n_lanes: int, lane_native: bool,
-                       placement: Optional[PlacementSpec] = None):
+                       placement: Optional[PlacementSpec] = None,
+                       donate=False):
     """Multi-stream step (lane-native megakernel or lane-vmapped chain),
     same bounded cache.
 
-    The key is ``(cfg, n_lanes, lane_native, placement)``: a ``serve_many``
-    resize, a ``REPRO_LANE_NATIVE`` toggle, or a different axis placement
-    between calls must never reuse a stale compiled step — the old
-    ``("multi", cfg)`` key did exactly that, handing a 4-lane fleet the
-    executable (and, for lane-native, the grid/tuning resolution) built
-    for a different lane count or the other dispatch path. ``jax.jit``
-    still specializes per input shape underneath; changing the lane count
-    mid-fleet costs a recompile (see the ROADMAP lane-autoscaling
-    follow-on).
+    The key is ``(cfg, n_lanes, lane_native, placement, donate)``: a
+    ``serve_many`` resize, a ``REPRO_LANE_NATIVE`` toggle, a different
+    axis placement, or a different donation contract between calls must
+    never reuse a stale compiled step — the old ``("multi", cfg)`` key
+    did exactly that, handing a 4-lane fleet the executable (and, for
+    lane-native, the grid/tuning resolution) built for a different lane
+    count or the other dispatch path. ``jax.jit`` still specializes per
+    input shape underneath; changing the lane count mid-fleet costs a
+    recompile (see the ROADMAP lane-autoscaling follow-on).
 
     ``n_hosts`` is normalized out of the key: the device step is
     host-count agnostic (the fleet tier schedules hosts above it), so a
-    2-host fleet reuses the executable its 1-host twin compiled."""
+    2-host fleet reuses the executable its 1-host twin compiled.
+    ``donate`` is NOT normalized out: ``"state"`` builds the tick-step
+    contract the overlapped serve path donates its EMA chain through
+    (``make_step`` docs)."""
     if placement is None:
         placement = PlacementSpec.lane_batched()
     if placement.n_hosts != 1:
         placement = dataclasses.replace(placement, n_hosts=1)
+
+    def build():
+        if donate is not False:
+            return make_step(cfg, placement, lane_native=lane_native,
+                             donate=donate)
+        return jax.jit(make_step(cfg, placement, lane_native=lane_native))
     return _STEP_CACHE.get(
-        ("multi", cfg, n_lanes, lane_native, placement),
-        lambda: jax.jit(make_step(cfg, placement,
-                                  lane_native=lane_native)))
+        ("multi", cfg, n_lanes, lane_native, placement, donate), build)
+
+
+def _resolve_overlap(tick_overlap: Optional[bool]) -> bool:
+    """Should this serve call take the zero-copy overlapped tick path?
+
+    Explicit argument wins; ``None`` defers to ``REPRO_TICK_OVERLAP``
+    (off when unset — the blocking path is the long-standing default and
+    the parity oracle). Either way the request is honored only when the
+    backend supports buffer donation; a forced-but-unsupported overlap
+    falls back to blocking, which ``ServeReport.overlap_ticks`` exposes
+    and ``launch/serve.py --expect-overlap`` turns into a hard failure.
+    """
+    req = tick_overlap if tick_overlap is not None else _env.tick_overlap()
+    return bool(req) and iobuf.donation_supported()
 
 
 class ElasticServer:
@@ -149,8 +178,17 @@ class ElasticServer:
         self.n_workers = max(1, n_workers)
 
     def serve(self, frames: Iterable[np.ndarray], stream_id: str = "default",
-              sink: Optional[Callable[[int, np.ndarray], None]] = None
-              ) -> ServeReport:
+              sink: Optional[Callable[[int, np.ndarray], None]] = None,
+              tick_overlap: Optional[bool] = None) -> ServeReport:
+        """Serve one stream through the dispatcher.
+
+        ``tick_overlap`` opts this call into the zero-copy path: explicit
+        async H2D per batch plus a fully donated step (state always;
+        frames too when ``cfg.io_dtype`` aliases the resolved output
+        dtype), with valid-only D2H on completion. ``None`` defers to
+        ``REPRO_TICK_OVERLAP`` (default off). Outputs are bit-identical
+        either way — donation changes buffer reuse, not values.
+        """
         out_frames: List[int] = []
 
         def write(fid: int, payload: np.ndarray) -> None:
@@ -158,13 +196,16 @@ class ElasticServer:
             if sink is not None:
                 sink(fid, payload)
 
+        overlap = _resolve_overlap(tick_overlap)
+        step = _cached_step(self.cfg, donate=True) if overlap else self._step
         start = self.store.cursor(stream_id)
         monitor = Monitor(write, timeout_s=self.timeout_s, start_frame=start)
         spout = Spout(frames, batch=self.batch, start_frame=start,
                       stream_id=stream_id)
         dispatcher = StreamDispatcher(
-            self._step, monitor, max_in_flight=self.max_in_flight,
-            n_workers=self.n_workers, worker_delay_s=self._worker_delay)
+            step, monitor, max_in_flight=self.max_in_flight,
+            n_workers=self.n_workers, worker_delay_s=self._worker_delay,
+            overlap=overlap)
 
         import threading
         mon_thread = threading.Thread(target=monitor.run, daemon=True)
@@ -184,7 +225,10 @@ class ElasticServer:
         return ServeReport(
             per_stream={stream_id: rep},
             frames=rep.frames, skipped=rep.skipped, wall_s=wall,
-            n_lanes=self.n_workers, ticks=dispatcher.stats.batches)
+            n_lanes=self.n_workers, ticks=dispatcher.stats.batches,
+            overlap_ticks=dispatcher.stats.overlap_batches,
+            d2h_bytes=dispatcher.stats.d2h_bytes,
+            phases=dict(dispatcher.stats.phases))
 
     def serve_many(self, streams: Sequence[StreamEntry],
                    n_lanes: Optional[int] = None,
@@ -195,7 +239,8 @@ class ElasticServer:
                    n_hosts: int = 1,
                    placement: Optional[PlacementSpec] = None,
                    placement_policy: PlacementPolicy = "first-fit",
-                   host_delay_s: float = 0.0) -> MultiServeReport:
+                   host_delay_s: float = 0.0,
+                   tick_overlap: Optional[bool] = None) -> MultiServeReport:
         """Serve N videos concurrently via lane-batched continuous batching.
 
         ``streams`` is a sequence of :class:`~repro.stream.StreamRequest`
@@ -250,6 +295,16 @@ class ElasticServer:
         service time on each host (fleet benchmarks). Per-stream outputs,
         EMA trajectories and cursors stay bit-identical to the single-host
         serve — only which host runs a stream changes.
+
+        ``tick_overlap`` opts into the zero-copy overlapped tick path
+        (README §Tick I/O & overlap): the lane batch lives on device in a
+        per-serve (per-host, for fleets) buffer, live lanes are staged by
+        async per-lane ``device_put`` + a donated splice, the EMA state
+        chain is donated tick-to-tick, and completions fetch valid frames
+        only. ``None`` defers to ``REPRO_TICK_OVERLAP`` (default off —
+        the blocking path stays the parity oracle). Per-stream outputs
+        are bit-identical on both paths; ``ServeReport.overlap_ticks``
+        records which one actually ran.
         """
         # Coerce HERE (not in the scheduler) and with a plain loop (not a
         # comprehension, which owns its own frame on CPython < 3.12): the
@@ -282,12 +337,24 @@ class ElasticServer:
         scaler = None
         evict_after = policy.evict_tardy_after if policy is not None else None
         pol = policy if policy is not None else ScalePolicy()
+        overlap = _resolve_overlap(tick_overlap)
 
-        def step_for(n: int):
-            return _cached_multi_step(self.cfg, n, lane_native, placement)
+        def base_step_for(n: int):
+            return _cached_multi_step(self.cfg, n, lane_native, placement,
+                                      donate="state" if overlap else False)
 
-        def mk_scaler(_host: int = 0) -> LaneAutoscaler:
-            return LaneAutoscaler(step_for, ladder_rungs(pol.rungs, lanes),
+        def mk_step_for(_host: int = 0):
+            """Per-host step factory. On the overlapped path each host
+            gets its OWN TickBufferPool — the device frame buffer belongs
+            to one serve loop — while the donated jitted steps underneath
+            still share the bounded cache fleet-wide."""
+            if not overlap:
+                return base_step_for
+            return iobuf.TickBufferPool(base_step_for).adapter
+
+        def mk_scaler(host: int = 0) -> LaneAutoscaler:
+            return LaneAutoscaler(mk_step_for(host),
+                                  ladder_rungs(pol.rungs, lanes),
                                   policy=pol)
 
         if autoscale:
@@ -296,12 +363,15 @@ class ElasticServer:
         if n_hosts > 1:
             factory = mk_scaler if autoscale else None
             fleet = FleetScheduler(
-                step_for(lanes), self.store, n_hosts=n_hosts, n_lanes=lanes,
+                base_step_for(lanes), self.store, n_hosts=n_hosts,
+                n_lanes=lanes,
                 batch=self.batch, timeout_s=self.timeout_s,
                 max_in_flight=self.max_in_flight,
                 autoscaler_factory=factory, evict_tardy_after=evict_after,
                 clock=clock, placement_policy=placement_policy,
-                tick_delay_s=host_delay_s)
+                tick_delay_s=host_delay_s,
+                step_factory=((lambda h: mk_step_for(h)(lanes))
+                              if overlap else None))
             self.last_fleet = fleet          # placements/log for callers
             return fleet.run(streams, sink=sink)
 
@@ -310,7 +380,7 @@ class ElasticServer:
             step = scaler.acquire_initial()
             lanes = scaler.rung
         else:
-            step = step_for(lanes)
+            step = mk_step_for()(lanes)
         scheduler = MultiStreamScheduler(
             step, self.store, n_lanes=lanes,
             batch=self.batch, timeout_s=self.timeout_s,

@@ -221,6 +221,10 @@ class FleetScheduler:
     batches have identical shapes); ``autoscaler_factory(host_id)``
     optionally gives each host its own ``LaneAutoscaler`` ladder (they
     share the bounded step cache, so rungs compile once fleet-wide).
+    ``step_factory(host_id)`` instead gives each host its OWN step — the
+    overlapped tick path uses this, because a ``LaneTickStep``'s
+    device-resident frame buffer must belong to exactly one host's serve
+    loop (the jitted steps underneath still dedupe via the step cache).
     ``n_lanes`` is the per-host lane count — the fleet serves up to
     ``n_hosts × n_lanes`` streams concurrently. ``tick_delay_s`` simulates
     per-tick device service time (see ``MultiStreamScheduler``).
@@ -234,13 +238,15 @@ class FleetScheduler:
                  evict_tardy_after: Optional[int] = None,
                  clock: Callable[[], float] = DEADLINE_CLOCK,
                  placement_policy: PlacementPolicy = "first-fit",
-                 tick_delay_s: float = 0.0):
+                 tick_delay_s: float = 0.0,
+                 step_factory: Optional[Callable[[int], Callable]] = None):
         if n_hosts < 1:
             raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
         self.n_hosts = n_hosts
         self.n_lanes = n_lanes
         self._prefer = _resolve_policy(placement_policy, n_hosts)
         self._autoscaler_factory = autoscaler_factory
+        self._step_factory = step_factory
         self._kw = dict(step=step, store=store, batch=batch,
                         timeout_s=timeout_s, max_in_flight=max_in_flight,
                         max_skipped_ids=max_skipped_ids,
@@ -255,7 +261,12 @@ class FleetScheduler:
                       if self._autoscaler_factory is not None else None)
             kw = dict(self._kw)
             if scaler is not None:
+                # The autoscaler's step_factory is already per-host (see
+                # ElasticServer.serve_many.mk_scaler), so its initial
+                # rung supersedes both the shared step and step_factory.
                 kw["step"] = scaler.acquire_initial()
+            elif self._step_factory is not None:
+                kw["step"] = self._step_factory(h)
             hosts.append(_HostScheduler(queue, h, n_lanes=self.n_lanes,
                                         autoscaler=scaler, **kw))
         return hosts
@@ -301,6 +312,10 @@ class FleetScheduler:
         per_stream = {}
         for r in done:
             per_stream.update(r.per_stream)
+        phases: dict = {}
+        for r in done:
+            for k, v in r.phases.items():
+                phases[k] = phases.get(k, 0.0) + v
         return ServeReport(
             per_stream=per_stream,
             frames=sum(r.frames for r in done),
@@ -313,6 +328,10 @@ class FleetScheduler:
             switch_wall_s=sum(r.switch_wall_s for r in done),
             evictions=sum(r.evictions for r in done),
             warm_failures=sum(r.warm_failures for r in done),
+            overlap_ticks=sum(r.overlap_ticks for r in done),
+            stragglers=sum(r.stragglers for r in done),
+            d2h_bytes=sum(r.d2h_bytes for r in done),
+            phases=phases,
             n_hosts=self.n_hosts,
             spillovers=queue.spillovers,
             migrations=queue.migrations)

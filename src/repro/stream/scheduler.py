@@ -77,6 +77,7 @@ import numpy as np
 from repro.core.normalize import (AtmoState, get_lane_state,
                                   init_atmo_state_lanes, set_lane_state,
                                   unpack_atmo_states)
+from repro.stream.iobuf import fetch_valid, is_overlap_step
 from repro.stream.monitor import DEADLINE_CLOCK, Monitor
 from repro.stream.spout import FrameBatch, Spout
 from repro.stream.state import StreamStateStore
@@ -189,6 +190,25 @@ class ServeReport:
     # the ladder is unreachable — serving that *expects* switches treats
     # it as a hard error (see launch/serve.py --expect-switches).
     warm_failures: int = 0
+    # Ticks that took the zero-copy overlapped path (device-resident lane
+    # buffer + donated state, README §Tick I/O & overlap). 0 on the
+    # blocking path; a serve that *expected* overlap treats
+    # overlap_ticks < ticks as a hard error (launch/serve.py
+    # --expect-overlap — the silent-fallback gate).
+    overlap_ticks: int = 0
+    # Completion/finalizer threads still alive when the shutdown join
+    # timed out. Always 0 in a healthy serve; non-zero means a monitor or
+    # device fetch wedged and the report was returned without it.
+    stragglers: int = 0
+    # Bytes actually fetched device->host by completions (valid-only
+    # slices on the overlapped path; whole batches, padding included, on
+    # the blocking path — the bench rows report the ratio).
+    d2h_bytes: int = 0
+    # Per-phase serve-loop seconds on the scheduler's injectable clock:
+    # "host_stage_s" (lane H2D staging / batch assembly), "device_step_s"
+    # (step dispatch + simulated device time), "deliver_s" (completion
+    # threads' D2H + monitor delivery, summed across threads).
+    phases: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def fps(self) -> float:
@@ -268,7 +288,8 @@ class MultiStreamScheduler:
                  max_in_flight: int = 4, max_skipped_ids: int = 64,
                  autoscaler=None, evict_tardy_after: Optional[int] = None,
                  clock: Callable[[], float] = DEADLINE_CLOCK,
-                 tick_delay_s: float = 0.0):
+                 tick_delay_s: float = 0.0,
+                 shutdown_timeout_s: float = 30.0):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         self._step = step
@@ -281,6 +302,10 @@ class MultiStreamScheduler:
         self._autoscaler = autoscaler
         self._evict_tardy_after = evict_tardy_after
         self._clock = clock
+        # Bound on the shutdown join over completion/finalizer threads: a
+        # wedged monitor or device fetch must not hang run() forever — the
+        # report returns with the straggler counted instead.
+        self._shutdown_timeout_s = shutdown_timeout_s
         # Simulated per-tick device service time (seconds) on the serve
         # thread. 0 disables. The fleet benchmarks use this to model
         # device-bound hosts on the CPU container: with a fixed per-tick
@@ -519,6 +544,11 @@ class MultiStreamScheduler:
         self._report_lock = threading.Lock()
         self._admissions = 0
         self._evictions = 0
+        self._overlap_ticks = 0
+        self._stragglers = 0
+        self._d2h_bytes = 0
+        self._phases: Dict[str, float] = {
+            "host_stage_s": 0.0, "device_step_s": 0.0, "deliver_s": 0.0}
 
         packed = init_atmo_state_lanes(self.n_lanes)
         pad_frames: Optional[np.ndarray] = None       # (B, H, W, 3) zeros
@@ -536,10 +566,15 @@ class MultiStreamScheduler:
             for i in range(len(self._lanes)):
                 if self._lanes[i] is not None:
                     self._evict(i, self._packed)
-            for th in self._inflight:
-                th.join()
-            for th in self._finalizers:
-                th.join()
+            # Bounded join: the old code joined without a timeout, so a
+            # wedged completion/finalizer daemon hung run() forever (and a
+            # fast exit silently leaked them). One deadline covers the
+            # whole set; survivors are counted, not waited out.
+            deadline = time.perf_counter() + self._shutdown_timeout_s
+            for th in self._inflight + self._finalizers:
+                th.join(timeout=max(0.0, deadline - time.perf_counter()))
+                if th.is_alive():
+                    self._stragglers += 1
         wall = time.perf_counter() - t0
         reports = self._reports
         return ServeReport(
@@ -555,7 +590,11 @@ class MultiStreamScheduler:
             if self._autoscaler is not None else 0.0,
             evictions=self._evictions,
             warm_failures=self._autoscaler.warm_failures
-            if self._autoscaler is not None else 0)
+            if self._autoscaler is not None else 0,
+            overlap_ticks=self._overlap_ticks,
+            stragglers=self._stragglers,
+            d2h_bytes=self._d2h_bytes,
+            phases=dict(self._phases))
 
     def _tick_loop(self, packed: AtmoState, pad_frames: Optional[np.ndarray],
                    pad_ids: np.ndarray, sink: Optional[MultiSink]) -> int:
@@ -589,10 +628,25 @@ class MultiStreamScheduler:
                         " all multiplexed streams must share (H, W) and the"
                         " scheduler's frame batch")
 
-            frames = np.stack([fb.frames if fb is not None else pad_frames
-                               for fb in fbs])
+            overlap = is_overlap_step(self._step)
+            t_stage = self._clock()
+            if overlap:
+                # Zero-copy path: upload only the live lanes into the
+                # persistent device buffer (padding lanes keep stale rows
+                # — id-masked from the EMA, never fetched). device_put +
+                # the donated splice dispatch asynchronously, so this H2D
+                # overlaps the in-flight tick's compute — which is why it
+                # runs BEFORE the in-flight window acquire below.
+                for i, fb in enumerate(fbs):
+                    if fb is not None:
+                        self._step.stage(i, fb.frames)
+                frames = None
+            else:
+                frames = np.stack([fb.frames if fb is not None else
+                                   pad_frames for fb in fbs])
             ids = np.stack([fb.frame_ids if fb is not None else pad_ids
                             for fb in fbs])
+            self._phases["host_stage_s"] += self._clock() - t_stage
             metas = [(i, self._lanes[i].monitor, fb.frame_ids, fb.n_valid)
                      for i, fb in enumerate(fbs) if fb is not None]
             for i, fb in enumerate(fbs):
@@ -601,13 +655,22 @@ class MultiStreamScheduler:
                     self._lanes[i].ticks += 1
 
             self._sem.acquire()
-            out = self._step(frames, ids, packed)
+            t_step = self._clock()
+            if overlap:
+                # The state input is donated into this call: every read
+                # of `packed` (eviction snapshots, rung repacks) was
+                # dispatched before it, and nothing touches it after.
+                out = self._step.tick(ids, packed)
+                self._overlap_ticks += 1
+            else:
+                out = self._step(frames, ids, packed)
             packed = out.state          # device-resident, possibly in flight
             self._packed = packed
             if self._tick_delay_s > 0.0:
                 time.sleep(self._tick_delay_s)
+            self._phases["device_step_s"] += self._clock() - t_step
             th = threading.Thread(target=self._complete,
-                                  args=(metas, out), daemon=True)
+                                  args=(metas, out, overlap), daemon=True)
             th.start()
             self._inflight.append(th)
             self._inflight = [t for t in self._inflight if t.is_alive()]
@@ -619,11 +682,29 @@ class MultiStreamScheduler:
 
         return ticks
 
-    def _complete(self, metas, out) -> None:
+    def _complete(self, metas, out, overlap: bool = False) -> None:
         try:
-            frames = np.asarray(out.frames)    # blocks until device done
-            for lane_idx, monitor, frame_ids, n_valid in metas:
-                for b in range(n_valid):
-                    monitor.put(int(frame_ids[b]), frames[lane_idx, b])
+            t0 = self._clock()
+            d2h = 0
+            if overlap:
+                # Valid-only D2H: per live lane, slice on device and fetch
+                # just its real frames — padding lanes (and the padded
+                # tail of live ones) never cross the wire.
+                for lane_idx, monitor, frame_ids, n_valid in metas:
+                    lane_frames = fetch_valid(out.frames, n_valid,
+                                              lane=lane_idx)
+                    d2h += lane_frames.nbytes
+                    for b in range(n_valid):
+                        monitor.put(int(frame_ids[b]), lane_frames[b])
+            else:
+                frames = np.asarray(out.frames)  # blocks until device done
+                d2h += frames.nbytes
+                for lane_idx, monitor, frame_ids, n_valid in metas:
+                    for b in range(n_valid):
+                        monitor.put(int(frame_ids[b]), frames[lane_idx, b])
+            dt = self._clock() - t0
+            with self._report_lock:
+                self._d2h_bytes += d2h
+                self._phases["deliver_s"] += dt
         finally:
             self._sem.release()

@@ -144,9 +144,10 @@ def test_ladder_warms_off_the_serve_thread():
     assert not sc._warm_errors
     main = threading.get_ident()
     place = PlacementSpec.lane_batched()
-    assert _STEP_CACHE.built_by[("multi", cfg, rungs[0], False, place)] == main
+    assert _STEP_CACHE.built_by[
+        ("multi", cfg, rungs[0], False, place, False)] == main
     for rung in rungs[1:]:
-        key = ("multi", cfg, rung, False, place)
+        key = ("multi", cfg, rung, False, place, False)
         assert _STEP_CACHE.built_by[key] != main
         assert sc.is_ready(rung)
     # The warm pass actually built (missed) the non-initial rungs.

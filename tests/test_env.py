@@ -38,6 +38,18 @@ def test_lane_native(monkeypatch):
         env.lane_native()
 
 
+def test_tick_overlap(monkeypatch):
+    monkeypatch.delenv("REPRO_TICK_OVERLAP", raising=False)
+    assert env.tick_overlap() is None
+    monkeypatch.setenv("REPRO_TICK_OVERLAP", "1")
+    assert env.tick_overlap() is True
+    monkeypatch.setenv("REPRO_TICK_OVERLAP", "0")
+    assert env.tick_overlap() is False
+    monkeypatch.setenv("REPRO_TICK_OVERLAP", "on")
+    with pytest.raises(ValueError, match="REPRO_TICK_OVERLAP"):
+        env.tick_overlap()
+
+
 def test_step_cache_size(monkeypatch):
     monkeypatch.delenv("REPRO_STEP_CACHE_SIZE", raising=False)
     assert env.step_cache_size() == 8

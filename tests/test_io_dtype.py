@@ -346,6 +346,13 @@ def test_step_cache_keys_on_io_dtype():
     assert _cached_multi_step(base, 2, False) is m_base
     assert _STEP_CACHE.hits >= 2
 
+    # The donation contract is part of the key: a donating tick step must
+    # never be handed to a caller that reuses its input buffers.
+    assert _cached_step(base, donate=True) is not s_base
+    m_don = _cached_multi_step(base, 2, False, donate="state")
+    assert m_don is not m_base, "donation contract toggle reused a step"
+    assert _cached_multi_step(base, 2, False, donate="state") is m_don
+
 
 # ---------------------------------------------------------------------------
 # Roofline gate: measured kernel-boundary bytes per ingest dtype
